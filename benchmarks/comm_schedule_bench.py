@@ -1,0 +1,46 @@
+"""Survey §3.3.3(3): communication scheduling (TicTac) + bucketing —
+projected iteration time for a command-r-scale backward pass under
+no-overlap / random order / TicTac order, and the bucket-size sweep."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.comm_scheduler import (LayerCost, LinkModel, bucketize,
+                                       random_order, schedule_no_overlap,
+                                       schedule_overlap, tictac_order)
+from repro.launch.mesh import ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+from benchmarks.common import emit
+
+
+def _layers_for(arch="command-r-35b", chips=256):
+    cfg = get_config(arch)
+    per_layer = cfg.param_count() / cfg.num_layers
+    grad_bytes = per_layer * 4 / chips          # fp32 grads, sharded
+    back_s = 4 * per_layer * 4096 / chips / PEAK_FLOPS_BF16
+    return [LayerCost(f"L{i}", back_s, grad_bytes)
+            for i in range(cfg.num_layers)]
+
+
+def main():
+    link = LinkModel(alpha_s=5e-6, beta_Bps=ICI_BW_PER_LINK)
+    ls = _layers_for()
+    rows = [("comm_schedule.variant", "iter_ms", "speedup_vs_no_overlap")]
+    t_no = schedule_no_overlap(ls, link)
+    t_rand = schedule_overlap(ls, link, random_order(ls, 0))
+    t_tictac = schedule_overlap(ls, link, tictac_order(ls))
+    for name, t in [("no_overlap", t_no), ("random_order", t_rand),
+                    ("tictac_order", t_tictac)]:
+        rows.append((f"comm_schedule.{name}", round(t * 1e3, 3),
+                     round(t_no / t, 2)))
+    # bucket sweep in the latency-bound regime
+    slow = LinkModel(alpha_s=5e-4, beta_Bps=ICI_BW_PER_LINK)
+    for mb in (1, 8, 64):
+        bs = bucketize(ls, mb * 1e6)
+        t = schedule_overlap(bs, slow, tictac_order(bs))
+        rows.append((f"comm_schedule.bucket_{mb}MB", round(t * 1e3, 3),
+                     f"n_buckets={len(bs)}"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

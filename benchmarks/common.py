@@ -1,0 +1,46 @@
+"""Shared benchmark helpers: a small real transformer + timing utils."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import LMDataConfig, make_lm_batches
+from repro.models import build_model
+
+
+def small_lm(arch: str = "tinyllama-1.1b", seq_len: int = 32,
+             batch_size: int = 8):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                        batch_size=batch_size)
+    batches = make_lm_batches(data)
+
+    def grad_fn(p, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: model.loss_fn(pp, batch, compute_dtype=jnp.float32),
+            has_aux=True)(p)
+        return loss, g
+
+    return cfg, model, params, batches, grad_fn
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows: List[Tuple]):
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)

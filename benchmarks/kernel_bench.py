@@ -1,0 +1,58 @@
+"""Kernel microbench: interpret-mode wall time (CPU correctness vehicle) +
+the derived TPU-roofline time per call (bytes / HBM bw — these kernels are
+bandwidth-bound by construction)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as FA
+from repro.kernels import onebit, qsgd, terngrad, topk
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+from benchmarks.common import emit, time_us
+
+R, C = 512, 512      # a 1 MB gradient tile
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    g = jax.random.normal(ks[0], (R, C))
+    e = jnp.zeros((R, C))
+    u = jax.random.uniform(ks[1], (R, C))
+    nbytes = R * C * 4
+    rows = [("kernel.name", "us_per_call_interp", "tpu_roofline_us")]
+
+    def roof(read_write_bytes, flops=0.0):
+        return round(max(read_write_bytes / HBM_BW,
+                         flops / PEAK_FLOPS_BF16) * 1e6, 3)
+
+    rows.append(("kernel.onebit",
+                 round(time_us(lambda: onebit.compress(g, e)), 0),
+                 roof(3 * nbytes)))
+    rows.append(("kernel.terngrad",
+                 round(time_us(lambda: terngrad.compress(g, u)), 0),
+                 roof(2 * nbytes + R * C)))
+    rows.append(("kernel.qsgd",
+                 round(time_us(lambda: qsgd.compress(g, u)), 0),
+                 roof(2 * nbytes + R * C)))
+    th = topk.threshold_for_density(g, e, 0.01)
+    rows.append(("kernel.topk",
+                 round(time_us(lambda: topk.compress(g, e, th)), 0),
+                 roof(4 * nbytes)))
+
+    B, S, H, KV, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    fl = 4.0 * B * H * S * S * hd
+    rows.append(("kernel.flash_attention",
+                 round(time_us(lambda: FA.attention(
+                     q, k, v, block_q=128, block_k=128), iters=2), 0),
+                 roof(2 * (q.size + 2 * k.size) * 4, fl)))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per survey table/figure.
+
+Prints ``name,value,derived`` CSV rows per benchmark.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table1     # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("table1_sync", "benchmarks.table1_sync"),          # survey Table 1
+    ("table2_compression", "benchmarks.table2_compression"),  # Table 2
+    ("feature_matrix", "benchmarks.feature_matrix"),    # Table 3
+    ("topology", "benchmarks.topology_bench"),          # §3.3.1(2)
+    ("architecture", "benchmarks.architecture_bench"),  # §3.3.1(1) vs (2)
+    ("federated", "benchmarks.federated_bench"),        # §3.3.1(3)
+    ("comm_schedule", "benchmarks.comm_schedule_bench"),  # §3.3.3(3)
+    ("scheduler", "benchmarks.scheduler_bench"),        # §3.4.2
+    ("kernel", "benchmarks.kernel_bench"),              # §3.3.3 hot spots
+]
+
+
+def main() -> None:
+    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = []
+    for name, module in BENCHES:
+        if flt and flt not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILED: {failures}")
+        raise SystemExit(1)
+    print("# all benchmarks ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Survey §3.4.2: multi-tenant scheduling policies on a loaded cluster
+trace — avg JCT / makespan / time-to-90%-quality per policy (the metrics
+Optimus, Gandiva, and SLAQ optimize)."""
+from __future__ import annotations
+
+from repro.sched import Cluster, make_trace, simulate
+
+from benchmarks.common import emit
+
+
+def main():
+    jobs = make_trace(80, 16, seed=7, mean_interarrival=8.0)
+    rows = [("scheduler.policy", "avg_jct_s", "makespan_s,t90_s")]
+    for policy in ("fifo", "srtf", "optimus", "slaq"):
+        r = simulate(jobs, Cluster(n_nodes=2, gpus_per_node=8),
+                     policy=policy)
+        rows.append((f"scheduler.{policy}", round(r.avg_jct, 0),
+                     f"{round(r.makespan, 0)},{round(r.mean_t90, 0)}"))
+    r = simulate(jobs, Cluster(n_nodes=2, gpus_per_node=8), policy="fifo",
+                 gandiva=True)
+    rows.append(("scheduler.fifo+gandiva", round(r.avg_jct, 0),
+                 f"{round(r.makespan, 0)},{round(r.mean_t90, 0)}"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

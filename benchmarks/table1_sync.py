@@ -1,0 +1,35 @@
+"""Survey Table 1: parameter-synchronization models.
+
+Trains the same reduced transformer under BSP / SSP(s) / ASP / SMA with
+deterministic heterogeneous workers and reports final loss, observed max
+staleness, and events — the convergence-vs-staleness trade-off the table
+categorizes.
+"""
+from __future__ import annotations
+
+from repro.core import SyncConfig, SyncEngine
+
+from benchmarks.common import emit, small_lm
+
+STEPS = 12
+WORKERS = 4
+PERIODS = (1, 2, 3, 5)     # heterogeneous speeds -> stragglers exist
+
+
+def main(steps: int = STEPS):
+    _, _, params, batches, grad_fn = small_lm()
+    rows = [("table1_sync.mode", "final_loss", "max_staleness,events")]
+    for mode, kw in [("bsp", {}), ("ssp", dict(staleness=1)),
+                     ("ssp", dict(staleness=4)), ("asp", {}), ("sma", {})]:
+        eng = SyncEngine(SyncConfig(mode=mode, num_workers=WORKERS, lr=0.02,
+                                    periods=PERIODS, **kw), grad_fn)
+        _, hist, _ = eng.run(params, batches, steps)
+        label = mode if mode != "ssp" else f"ssp(s={kw['staleness']})"
+        stale = max(h["max_staleness"] for h in hist)
+        rows.append((f"table1_sync.{label}", round(hist[-1]["loss"], 4),
+                     f"{stale},{len(hist)}"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

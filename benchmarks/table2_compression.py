@@ -1,0 +1,36 @@
+"""Survey Table 2: communication-efficiency methods.
+
+For each compression method: bytes on the wire per step (the method's
+point), compression ratio vs fp32, and final loss after the same number of
+BSP steps (the accuracy cost) on the same reduced transformer.
+"""
+from __future__ import annotations
+
+from repro.core import Compressor, SyncConfig, SyncEngine
+
+from benchmarks.common import emit, small_lm
+
+STEPS = 12
+
+
+def main(steps: int = STEPS):
+    _, _, params, batches, grad_fn = small_lm()
+    rows = [("table2_compression.method", "wire_MB_per_step",
+             "ratio_vs_fp32,final_loss")]
+    base_wire = None
+    for method in ("none", "onebit", "terngrad", "qsgd", "dgc"):
+        comp = Compressor(method, density=0.01)
+        eng = SyncEngine(SyncConfig(mode="bsp", num_workers=2, lr=0.02,
+                                    compressor=comp), grad_fn)
+        _, hist, wire = eng.run(params, batches, steps)
+        per_step = wire / steps / 2 / 1e6     # per worker per step
+        if method == "none":
+            base_wire = per_step
+        rows.append((f"table2_compression.{method}", round(per_step, 4),
+                     f"{round(base_wire / per_step, 1)}x,"
+                     f"{round(hist[-1]['loss'], 4)}"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Batched serving with sub-quadratic long-context decode: compares a
+dense arch with a sliding-window cache against the constant-state SSM
+(the long_500k configuration at CPU scale).
+
+  PYTHONPATH=src python examples/serve_longcontext.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import generate
+
+
+def run(arch: str, window: int = 0, prompt_len: int = 24, max_new: int = 24):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, prompt_len), 0,
+                                cfg.vocab_size)
+    t0 = time.time()
+    out = generate(model, params, prompt, max_new, window_override=window)
+    dt = time.time() - t0
+    # cache footprint per token of context
+    caches = model.init_cache(2, prompt_len + max_new, dtype=jnp.bfloat16,
+                              window_override=window)
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(caches))
+    label = f"{arch}" + (f" (window={window})" if window else "")
+    print(f"{label:42s} {dt:5.1f}s  cache={cache_bytes / 1e6:7.2f} MB  "
+          f"sample={out[0, prompt_len:prompt_len + 8].tolist()}")
+    return cache_bytes
+
+
+def main():
+    print("arch (decode mode)                          time   cache")
+    full = run("tinyllama-1.1b")                  # full KV cache
+    swa = run("tinyllama-1.1b", window=8)         # sliding window
+    ssm = run("rwkv6-7b")                         # constant state
+    hyb = run("recurrentgemma-9b")                # RG-LRU + local window
+    assert swa <= full and ssm < full
+    print("\nsliding-window and SSM caches are context-length-independent —"
+          "\nthe property that makes long_500k decode feasible (DESIGN.md §3).")
+
+
+if __name__ == "__main__":
+    main()

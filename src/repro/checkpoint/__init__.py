@@ -1,0 +1,6 @@
+"""Model-data management (survey §3.5.2): sharded checkpoints + a
+ModelDB-style registry."""
+from repro.checkpoint.store import save_checkpoint, load_checkpoint
+from repro.checkpoint.registry import ModelRegistry
+
+__all__ = ["save_checkpoint", "load_checkpoint", "ModelRegistry"]

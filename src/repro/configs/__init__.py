@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolves through here."""
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
+
+from repro.configs.tinyllama_1_1b import CONFIG as _tinyllama
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _deepseek
+from repro.configs.qwen2_vl_7b import CONFIG as _qwen2vl
+from repro.configs.stablelm_1_6b import CONFIG as _stablelm
+from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma
+from repro.configs.rwkv6_7b import CONFIG as _rwkv6
+from repro.configs.command_r_35b import CONFIG as _commandr
+from repro.configs.llama3_2_3b import CONFIG as _llama32
+
+ARCHS = {c.name: c for c in [
+    _tinyllama, _kimi, _whisper, _deepseek, _qwen2vl,
+    _stablelm, _recurrentgemma, _rwkv6, _commandr, _llama32,
+]}
+
+# (arch, shape) pairs that are architecturally meaningless — see DESIGN.md §3.
+SKIPS = {
+    ("whisper-large-v3", "long_500k"):
+        "encoder-decoder ASR with 30s/448-token context; 500k decode is N/A",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]
+
+
+def all_pairs(include_skips: bool = False):
+    for a in ARCHS:
+        for s in INPUT_SHAPES:
+            if not include_skips and (a, s) in SKIPS:
+                continue
+            yield a, s

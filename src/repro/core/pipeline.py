@@ -1,0 +1,68 @@
+"""Pipeline parallelism (survey §3.2.3): GPipe-style micro-batch pipeline
+[Huang et al., 70] over a dedicated 'stage' mesh axis.
+
+Each device along the stage axis holds one stage's parameters; activations
+flow stage-to-stage with ``jax.lax.ppermute`` while micro-batches stream
+through — at tick t, stage s processes micro-batch (t - s).  The schedule
+runs inside ``lax.scan`` so it is differentiable (ppermute has a transpose
+rule), giving real pipelined training, and the bubble fraction
+(S-1)/(M+S-1) is observable in the tick count.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
+    """Run inside shard_map over ``axis_name``.
+
+    stage_fn(params, x) -> y with x/y of identical shape [mb, ...].
+    stage_params: this device's stage parameters (already sharded).
+    x_micro [n_micro, mb, ...]: full micro-batched input (replicated; only
+    stage 0 reads it).
+    Returns [n_micro, mb, ...]: outputs (nonzero only on the last stage —
+    psum over the axis to broadcast if needed).
+    """
+    n = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    n_micro = x_micro.shape[0]
+    mb_shape = x_micro.shape[1:]
+    fwd = [(i, i + 1) for i in range(n - 1)]
+
+    def tick(carry, t):
+        inbox, outputs = carry
+        mb_idx = t - me
+        active = (mb_idx >= 0) & (mb_idx < n_micro)
+        src = lax.dynamic_index_in_dim(
+            x_micro, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+        x_in = jnp.where(me == 0, src, inbox)
+        y = stage_fn(stage_params, x_in)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        inbox_next = lax.ppermute(y, axis_name, fwd)
+        is_last = me == n - 1
+        idx = jnp.clip(mb_idx, 0, n_micro - 1)
+        upd = lax.dynamic_update_index_in_dim(outputs, y, idx, 0)
+        outputs = jnp.where(active & is_last, upd, outputs)
+        return (inbox_next, outputs), None
+
+    inbox0 = jnp.zeros(mb_shape, dtype=x_micro.dtype)
+    outputs0 = jnp.zeros_like(x_micro)
+    # mark the carries as device-varying along the stage axis (scan-vma rule)
+    try:
+        inbox0 = lax.pcast(inbox0, (axis_name,), to="varying")
+        outputs0 = lax.pcast(outputs0, (axis_name,), to="varying")
+    except (AttributeError, TypeError):
+        pass  # older jax: carries infer vma automatically
+    (_, outputs), _ = lax.scan(tick, (inbox0, outputs0),
+                               jnp.arange(n_micro + n - 1))
+    return outputs
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """GPipe pipeline bubble: idle fraction of the schedule."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,66 @@
+"""Mixed-precision policy (survey §3.3.3(1), Gupta et al. [55]).
+
+params_dtype: storage; compute_dtype: matmul/activations; reduce_dtype:
+gradients on the wire (the precision-reduction knob the survey discusses
+for communication).  Stochastic rounding (Gupta et al.'s key finding) is
+provided for low-precision parameter updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    params_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    reduce_dtype: str = "float32"
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.params_dtype)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def rdt(self):
+        return jnp.dtype(self.reduce_dtype)
+
+    def cast_for_compute(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.cdt)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def cast_for_reduce(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.rdt)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def stochastic_round(x, target_dtype, key):
+    """Unbiased rounding to a lower-precision float (Gupta et al. [55]).
+
+    Nudges the nearest-rounded value one target-dtype ulp toward x with
+    probability |x - round(x)| / ulp, so E[out] == x."""
+    x = x.astype(jnp.float32)
+    lo32 = x.astype(target_dtype).astype(jnp.float32)
+    f = jnp.finfo(target_dtype)
+    # ulp of the target dtype at lo32's binade
+    step = (2.0 ** jnp.floor(jnp.log2(jnp.maximum(jnp.abs(lo32),
+                                                  float(f.tiny))))
+            * float(f.eps))
+    delta = x - lo32
+    frac = jnp.clip(jnp.abs(delta) / step, 0.0, 1.0)
+    u = jax.random.uniform(key, x.shape)
+    out = jnp.where(u < frac, lo32 + jnp.sign(delta) * step, lo32)
+    return out.astype(target_dtype)
+
+
+DEFAULT = PrecisionPolicy()
+BF16_COMPUTE = PrecisionPolicy("float32", "bfloat16", "float32")
+BF16_EVERYTHING = PrecisionPolicy("bfloat16", "bfloat16", "bfloat16")

@@ -1,0 +1,175 @@
+"""Parameter-synchronization models from survey §3.3.2 / Table 1.
+
+BSP (synchronous), SSP (bounded-asynchronous, Cipar et al. [28]),
+ASP (asynchronous, Hogwild/Downpour [149, 38]) and SMA (CROSSBOW's
+synchronous model averaging [89]).
+
+TPU adaptation (DESIGN.md §2.3): SPMD programs are bulk-synchronous by
+construction — there is no shared memory for lock-free updates.  Asynchrony
+is therefore a *deterministic discrete-event simulation*: K logical workers
+with heterogeneous speeds push gradients computed against the parameter
+version they last pulled; the trainer replays the resulting staleness
+schedule exactly.  This reproduces the survey's convergence semantics
+(what staleness does to the loss curve, the straggler problem, the SSP
+bound) with bit-reproducible results.  Compute per event is a jitted step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Compressor
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    mode: str = "bsp"            # bsp | ssp | asp | sma
+    num_workers: int = 4
+    staleness: int = 3           # SSP bound s
+    lr: float = 0.1
+    sma_mu: float = 0.1          # SMA correction strength
+    # deterministic worker speeds: worker i finishes every periods[i] ticks
+    periods: Optional[Tuple[int, ...]] = None
+    compressor: Compressor = Compressor("none")
+    seed: int = 0
+
+
+class SyncEngine:
+    """Drives ``grad_fn(params, batch) -> (loss, grads)`` under a
+    synchronization model over a stream of per-worker batches."""
+
+    def __init__(self, cfg: SyncConfig, grad_fn: Callable):
+        self.cfg = cfg
+        self.grad_fn = jax.jit(grad_fn)
+        periods = cfg.periods or tuple(
+            1 + i for i in range(cfg.num_workers))  # heterogeneous by default
+        assert len(periods) == cfg.num_workers
+        self.periods = periods
+        self._apply = jax.jit(
+            lambda p, g, lr: jax.tree.map(lambda a, b: a - lr * b, p, g))
+        self._avg = jax.jit(
+            lambda gs: jax.tree.map(lambda *x: sum(x) / len(x), *gs))
+
+    # ------------------------------------------------------------------ BSP
+    def _run_bsp(self, params, batches, steps):
+        K = self.cfg.num_workers
+        hist = []
+        comp_states = [self.cfg.compressor.init_state(params)] * K
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        wire_total = 0
+        for t in range(steps):
+            losses, grads = [], []
+            for w in range(K):
+                loss, g = self.grad_fn(params, batches(t, w))
+                if self.cfg.compressor.method != "none":
+                    rng, sub = jax.random.split(rng)
+                    g, comp_states[w], wb = self.cfg.compressor.roundtrip(
+                        g, comp_states[w], sub)
+                    wire_total += wb
+                else:
+                    wire_total += sum(int(x.size) * 4
+                                      for x in jax.tree.leaves(g))
+                losses.append(float(loss))
+                grads.append(g)
+            params = self._apply(params, self._avg(grads), self.cfg.lr)
+            hist.append(dict(step=t, loss=float(np.mean(losses)),
+                             max_staleness=0))
+        return params, hist, wire_total
+
+    # ------------------------------------------------------- SSP / ASP core
+    def _run_async(self, params, batches, steps, bound: Optional[int]):
+        """Event simulation: server clock = #updates applied.  Worker w
+        recomputes every periods[w] ticks against its pulled version;
+        SSP blocks a worker whose pulled version lags > bound behind the
+        slowest worker's version (the SSP condition of [28])."""
+        K = self.cfg.num_workers
+        pulled = [jax.tree.map(lambda x: x, params) for _ in range(K)]
+        pulled_ver = [0] * K
+        server_ver = 0
+        hist = []
+        comp_states = [self.cfg.compressor.init_state(params)] * K
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        wire_total = 0
+        tick = 0
+        updates = 0
+        batch_idx = [0] * K
+        while updates < steps * K:
+            tick += 1
+            for w in range(K):
+                if tick % self.periods[w]:
+                    continue
+                if bound is not None:
+                    slowest = min(batch_idx)
+                    if batch_idx[w] - slowest > bound:
+                        continue  # SSP: fast worker blocks on clock bound
+
+                loss, g = self.grad_fn(pulled[w], batches(batch_idx[w], w))
+                batch_idx[w] += 1
+                if self.cfg.compressor.method != "none":
+                    rng, sub = jax.random.split(rng)
+                    g, comp_states[w], wb = self.cfg.compressor.roundtrip(
+                        g, comp_states[w], sub)
+                    wire_total += wb
+                else:
+                    wire_total += sum(int(x.size) * 4
+                                      for x in jax.tree.leaves(g))
+                staleness = server_ver - pulled_ver[w]
+                params = self._apply(params, g, self.cfg.lr)
+                server_ver += 1
+                updates += 1
+                pulled[w] = params           # pull fresh copy after push
+                pulled_ver[w] = server_ver
+                hist.append(dict(step=updates, loss=float(loss),
+                                 max_staleness=staleness, worker=w))
+        return params, hist, wire_total
+
+    # ------------------------------------------------------------------ SMA
+    def _run_sma(self, params, batches, steps):
+        """CROSSBOW synchronous model averaging: independent replicas pulled
+        toward the central average each step."""
+        K = self.cfg.num_workers
+        replicas = [jax.tree.map(lambda x: x, params) for _ in range(K)]
+        mu = self.cfg.sma_mu
+        hist = []
+        wire_total = 0
+
+        @jax.jit
+        def avg_of(reps):
+            return jax.tree.map(lambda *x: sum(x) / len(x), *reps)
+
+        @jax.jit
+        def correct(rep, center, g, lr):
+            return jax.tree.map(
+                lambda r, z, gg: r - lr * gg - mu * (r - z), rep, center, g)
+
+        for t in range(steps):
+            center = avg_of(replicas)
+            losses = []
+            for w in range(K):
+                loss, g = self.grad_fn(replicas[w], batches(t, w))
+                replicas[w] = correct(replicas[w], center, g, self.cfg.lr)
+                losses.append(float(loss))
+                wire_total += sum(int(x.size) * 4 for x in jax.tree.leaves(g))
+            hist.append(dict(step=t, loss=float(np.mean(losses)),
+                             max_staleness=0))
+        return avg_of(replicas), hist, wire_total
+
+    # ------------------------------------------------------------------ run
+    def run(self, params, batches: Callable[[int, int], Any], steps: int):
+        """batches(t, worker) -> batch pytree.  Returns (params, history,
+        wire_bytes)."""
+        mode = self.cfg.mode
+        if mode == "bsp":
+            return self._run_bsp(params, batches, steps)
+        if mode == "ssp":
+            return self._run_async(params, batches, steps,
+                                   self.cfg.staleness)
+        if mode == "asp":
+            return self._run_async(params, batches, steps, None)
+        if mode == "sma":
+            return self._run_sma(params, batches, steps)
+        raise ValueError(mode)

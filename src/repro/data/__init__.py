@@ -1,0 +1,9 @@
+"""Training-data management (survey §3.5.1): deterministic synthetic
+sources, sharded loading, prefetch, epoch caching, and federated
+partitioning."""
+from repro.data.pipeline import (LMDataConfig, make_lm_batches,
+                                 ShardedLoader, synthetic_lm_batch)
+from repro.data.partition import dirichlet_partition, iid_partition
+
+__all__ = ["LMDataConfig", "make_lm_batches", "ShardedLoader",
+           "synthetic_lm_batch", "dirichlet_partition", "iid_partition"]

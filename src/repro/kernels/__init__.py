@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the survey's perf-critical hot spots:
+
+- flash_attention: fused block attention (the models substrate's compute)
+- onebit / terngrad / qsgd / topk: the §3.3.3 gradient-compression family
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), and ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

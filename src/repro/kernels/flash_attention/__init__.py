@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import (attention, attention_ref,
+                                               flash_attention)
+
+__all__ = ["attention", "attention_ref", "flash_attention"]

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+__all__ = ["attention", "attention_ref", "flash_attention"]

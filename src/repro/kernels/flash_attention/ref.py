@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B, S, H, hd]; k, v [B, S, KV, hd] (KV divides H).  fp32 math."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    if causal:
+        mask = kj <= qi
+        if window:
+            mask &= kj > qi - window
+    else:
+        mask = jnp.ones((S, S), dtype=bool)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.onebit.ops import (compress, decompress, onebit_ref,
+                                      pack_bits, unpack_bits, wire_bytes)
+
+__all__ = ["compress", "decompress", "onebit_ref", "pack_bits",
+           "unpack_bits", "wire_bytes"]

@@ -1,0 +1,50 @@
+"""Jit'd wrappers + wire-format bit packing for the 1-bit kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.onebit.onebit import onebit_compress
+from repro.kernels.onebit.ref import onebit_decompress_ref, onebit_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def compress(g, e, *, block_r: int = 256, interpret: bool = True):
+    return onebit_compress(g, e, block_r=block_r, interpret=interpret)
+
+
+@jax.jit
+def decompress(signs, scale):
+    return onebit_decompress_ref(signs, scale)
+
+
+@jax.jit
+def pack_bits(signs):
+    """int8 signs {-1,+1} [R, C] (C % 32 == 0) -> int32 words [R, C//32].
+
+    This is the on-the-wire format: 1 bit per gradient element."""
+    R, C = signs.shape
+    bits = (signs > 0).astype(jnp.uint32).reshape(R, C // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("C",))
+def unpack_bits(words, C: int | None = None):
+    R, W = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    signs = jnp.where(bits == 1, jnp.int8(1), jnp.int8(-1)).reshape(R, W * 32)
+    return signs if C is None else signs[:, :C]
+
+
+def wire_bytes(numel: int) -> int:
+    """Bytes on the wire per tensor: 1 bit per element + 4B scale per row
+    (accounted at 256-wide rows)."""
+    return numel // 8 + 4 * max(1, numel // 256)
+
+
+__all__ = ["compress", "decompress", "pack_bits", "unpack_bits", "onebit_ref",
+           "wire_bytes"]

@@ -1,0 +1,22 @@
+"""Oracle for 1-bit SGD quantization with error feedback (Seide et al. [159]).
+
+compensated c = g + e;  transmit sign(c) with a per-row |c| mean as scale;
+residual e' = c - decompressed keeps the full information (error feedback).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def onebit_ref(g, e):
+    """g, e [R, C] float -> (signs int8 in {-1,+1}, scale [R,1] f32, e')."""
+    c = g.astype(jnp.float32) + e.astype(jnp.float32)
+    signs = jnp.where(c >= 0, jnp.int8(1), jnp.int8(-1))
+    scale = jnp.mean(jnp.abs(c), axis=-1, keepdims=True)
+    decompressed = signs.astype(jnp.float32) * scale
+    new_e = c - decompressed
+    return signs, scale, new_e
+
+
+def onebit_decompress_ref(signs, scale):
+    return signs.astype(jnp.float32) * scale

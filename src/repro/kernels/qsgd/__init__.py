@@ -1,0 +1,3 @@
+from repro.kernels.qsgd.ops import compress, decompress, qsgd_ref, wire_bytes
+
+__all__ = ["compress", "decompress", "qsgd_ref", "wire_bytes"]

@@ -1,0 +1,30 @@
+"""Jit'd wrappers for QSGD."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.qsgd.qsgd import qsgd_compress
+from repro.kernels.qsgd.ref import qsgd_decompress_ref, qsgd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("s_levels", "block_r",
+                                             "interpret"))
+def compress(g, u, *, s_levels: int = 127, block_r: int = 256,
+             interpret: bool = True):
+    return qsgd_compress(g, u, s_levels=s_levels, block_r=block_r,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("s_levels",))
+def decompress(q, norm, *, s_levels: int = 127):
+    return qsgd_decompress_ref(q, norm, s_levels)
+
+
+def wire_bytes(numel: int, s_levels: int = 127) -> int:
+    """8-bit levels (s=127) + 4B norm; Elias coding would shrink further."""
+    return numel + 4
+
+
+__all__ = ["compress", "decompress", "qsgd_ref", "wire_bytes"]

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: QSGD s-level stochastic quantization (Alistarh [8])."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, u_ref, norm_ref, q_ref, *, s_levels: int):
+    g = g_ref[...].astype(jnp.float32)
+    norm = norm_ref[0, 0]
+    p = jnp.abs(g) / jnp.maximum(norm, 1e-30) * s_levels
+    lo = jnp.floor(p)
+    lvl = lo + (u_ref[...] < (p - lo)).astype(jnp.float32)
+    lvl = jnp.clip(lvl, 0, s_levels)
+    q_ref[...] = (jnp.sign(g) * lvl).astype(jnp.int8)
+
+
+def qsgd_compress(g, u, *, s_levels: int = 127, block_r: int = 256,
+                  interpret: bool = True):
+    """g, u [R, C] -> (levels int8 [R, C], norm scalar f32)."""
+    g32 = g.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(jnp.square(g32)))
+    R, C = g.shape
+    br = min(block_r, R)
+    r_pad = (R + br - 1) // br * br
+    gp = jnp.pad(g32, ((0, r_pad - R), (0, 0)))
+    up = jnp.pad(u, ((0, r_pad - R), (0, 0)), constant_values=1.0)
+    q = pl.pallas_call(
+        functools.partial(_kernel, s_levels=s_levels),
+        grid=(r_pad // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, C), jnp.int8),
+        interpret=interpret,
+    )(gp, up, norm.reshape(1, 1))
+    return q[:R], norm

@@ -1,0 +1,25 @@
+"""Oracle for QSGD (Alistarh et al. [8]): s-level stochastic quantization.
+
+Q(g_i) = ||g||_2 * sign(g_i) * xi_i,  xi_i in {0, 1/s, ..., s/s} with
+stochastic rounding:  let p = |g_i| / ||g||_2 * s;  xi = (floor(p) +
+Bernoulli(frac(p))) / s.  The uniform draw is an explicit input.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qsgd_ref(g, u, s_levels: int = 127):
+    """g, u [R, C] -> (levels int8 signed, norm scalar f32)."""
+    g32 = g.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(jnp.square(g32)))
+    p = jnp.abs(g32) / jnp.maximum(norm, 1e-30) * s_levels
+    lo = jnp.floor(p)
+    lvl = lo + (u < (p - lo)).astype(jnp.float32)
+    lvl = jnp.clip(lvl, 0, s_levels)
+    q = (jnp.sign(g32) * lvl).astype(jnp.int8)
+    return q, norm
+
+
+def qsgd_decompress_ref(q, norm, s_levels: int = 127):
+    return q.astype(jnp.float32) * (norm / s_levels)

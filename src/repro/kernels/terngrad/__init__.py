@@ -1,0 +1,4 @@
+from repro.kernels.terngrad.ops import (compress, decompress, terngrad_ref,
+                                        wire_bytes)
+
+__all__ = ["compress", "decompress", "terngrad_ref", "wire_bytes"]

@@ -1,0 +1,31 @@
+"""Jit'd wrappers for TernGrad."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.terngrad.ref import terngrad_decompress_ref, terngrad_ref
+from repro.kernels.terngrad.terngrad import terngrad_compress
+
+
+@functools.partial(jax.jit, static_argnames=("clip_sigma", "interpret",
+                                             "block_r"))
+def compress(g, u, *, clip_sigma: float = 2.5, block_r: int = 256,
+             interpret: bool = True):
+    return terngrad_compress(g, u, clip_sigma=clip_sigma, block_r=block_r,
+                             interpret=interpret)
+
+
+@jax.jit
+def decompress(tern, s):
+    return terngrad_decompress_ref(tern, s)
+
+
+def wire_bytes(numel: int) -> int:
+    """2 bits per element (ternary packs 16/int32 word) + 4B scale."""
+    return numel // 4 + 4
+
+
+__all__ = ["compress", "decompress", "terngrad_ref", "wire_bytes"]

@@ -1,0 +1,26 @@
+"""Oracle for TernGrad (Wen et al. [190]): stochastic ternary gradients.
+
+g -> s * sign(g) * b,  b ~ Bernoulli(|g| / s),  s = max|g| (per tensor,
+after optional clipping).  The random draw is an input so kernel and oracle
+share it exactly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def terngrad_ref(g, u, clip_sigma: float = 2.5):
+    """g [R, C]; u [R, C] uniform(0,1) -> (tern int8 {-1,0,1}, scale scalar)."""
+    g32 = g.astype(jnp.float32)
+    if clip_sigma:
+        sigma = jnp.std(g32)
+        g32 = jnp.clip(g32, -clip_sigma * sigma, clip_sigma * sigma)
+    s = jnp.max(jnp.abs(g32))
+    p = jnp.abs(g32) / jnp.maximum(s, 1e-30)
+    b = (u < p).astype(jnp.int8)
+    tern = jnp.sign(g32).astype(jnp.int8) * b
+    return tern, s
+
+
+def terngrad_decompress_ref(tern, s):
+    return tern.astype(jnp.float32) * s

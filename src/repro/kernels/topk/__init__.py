@@ -1,0 +1,4 @@
+from repro.kernels.topk.ops import (compress, threshold_for_density, topk_ref,
+                                    wire_bytes)
+
+__all__ = ["compress", "threshold_for_density", "topk_ref", "wire_bytes"]

@@ -1,0 +1,24 @@
+"""Jit'd wrappers for DGC sparsification."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.ref import threshold_for_density, topk_ref
+from repro.kernels.topk.topk import topk_compress
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def compress(g, e, threshold, *, block_r: int = 256, interpret: bool = True):
+    return topk_compress(g, e, threshold, block_r=block_r,
+                         interpret=interpret)
+
+
+def wire_bytes(numel: int, density: float) -> int:
+    """(4B index + 4B value) per surviving element."""
+    return int(numel * density) * 8
+
+
+__all__ = ["compress", "topk_ref", "threshold_for_density", "wire_bytes"]

@@ -1,0 +1,24 @@
+"""Oracle for Deep Gradient Compression-style sparsification (Lin et al.
+[106]): threshold sparsify + error accumulation of the untransmitted rest."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def topk_ref(g, e, threshold):
+    """g, e [R, C]; threshold scalar.
+
+    Returns (sparse values f32 [R, C] with zeros below threshold, new error).
+    Wire format = (indices, values) of nonzeros; density measured separately.
+    """
+    c = g.astype(jnp.float32) + e.astype(jnp.float32)
+    mask = jnp.abs(c) >= threshold
+    out = jnp.where(mask, c, 0.0)
+    new_e = c - out
+    return out, new_e
+
+
+def threshold_for_density(g, e, density: float):
+    """Quantile threshold that keeps ~density of the compensated gradient."""
+    c = jnp.abs(g.astype(jnp.float32) + e.astype(jnp.float32)).reshape(-1)
+    return jnp.quantile(c, 1.0 - density)

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: DGC threshold-sparsification with error accumulation.
+
+Top-k selection does not vectorize on the VPU; like DGC's GPU kernel we use
+a threshold (from a cheap quantile estimate done once outside) and a fused
+elementwise pass that emits the surviving values and banks the rest into
+the error-feedback residual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, e_ref, t_ref, o_ref, ne_ref):
+    c = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    t = t_ref[0, 0]
+    mask = jnp.abs(c) >= t
+    out = jnp.where(mask, c, 0.0)
+    o_ref[...] = out
+    ne_ref[...] = c - out
+
+
+def topk_compress(g, e, threshold, *, block_r: int = 256,
+                  interpret: bool = True):
+    """g, e [R, C]; threshold scalar -> (sparse f32 [R, C], new_e f32)."""
+    R, C = g.shape
+    br = min(block_r, R)
+    r_pad = (R + br - 1) // br * br
+    gp = jnp.pad(g.astype(jnp.float32), ((0, r_pad - R), (0, 0)))
+    ep = jnp.pad(e.astype(jnp.float32), ((0, r_pad - R), (0, 0)))
+    t = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    out, new_e = pl.pallas_call(
+        _kernel,
+        grid=(r_pad // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                   pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r_pad, C), jnp.float32),
+                   jax.ShapeDtypeStruct((r_pad, C), jnp.float32)],
+        interpret=interpret,
+    )(gp, ep, t)
+    return out[:R], new_e[:R]

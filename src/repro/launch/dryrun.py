@@ -1,0 +1,383 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers AND compiles on the production meshes, and extract the
+roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Writes JSON records to results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SKIPS, get_config, get_shape
+from repro.core.parallelism import param_specs, data_axes
+from repro.launch.hlo_analysis import (collective_bytes, summarize_cost,
+                                       summarize_memory)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (batch_shardable, batch_specs_tree,
+                                cache_specs, decode_window, mesh_axis_sizes,
+                                train_input_specs, VOCAB_PAD)
+from repro.launch.steps import (choose_optimizer, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import build_model
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _sharded(mesh, shapes, specs):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def _out_shardings(mesh, specs):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sharded_param_bytes(shapes, specs, mesh) -> float:
+    sizes = mesh_axis_sizes(mesh)
+
+    def one(s, sp):
+        denom = 1
+        for ax in sp:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= sizes.get(a, 1)
+        return s.size * s.dtype.itemsize / denom
+
+    return sum(jax.tree.leaves(jax.tree.map(one, shapes, specs)))
+
+
+def build_dryrun(arch: str, shape_name: str, multi_pod: bool,
+                 unroll: bool = False, policy: str = "fsdp",
+                 moe_hints: bool = False, cfg=None,
+                 cache_policy: str = "auto"):
+    """Returns (jitted_fn, example_args) ready to lower."""
+    from repro.core.parallelism import (set_attn_decode_hints,
+                                        set_moe_sharding_hints)
+    set_moe_sharding_hints(bool(moe_hints), multi_pod=multi_pod,
+                           mode=moe_hints if isinstance(moe_hints, str)
+                           and moe_hints != "full" else "full")
+    set_attn_decode_hints(cache_policy in ("attn_hints", "attn_hints_seq"),
+                          multi_pod=multi_pod,
+                          mode="seq" if cache_policy == "attn_hints_seq"
+                          else "hd")
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+
+    p_shapes = jax.eval_shape(
+        lambda k: model.init(k, dtype=jnp.bfloat16,
+                             vocab_pad_multiple=VOCAB_PAD), key)
+    pspecs = param_specs(p_shapes, multi_pod=multi_pod, policy=policy)
+    p_in = _sharded(mesh, p_shapes, pspecs)
+    shard_b = batch_shardable(shape, mesh)
+    info: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params_analytic": cfg.param_count(),
+        "active_params_analytic": cfg.active_param_count(),
+        "param_bytes_per_device": _sharded_param_bytes(p_shapes, pspecs, mesh),
+        "batch_sharded": shard_b,
+        "policy": policy,
+        "moe_hints": moe_hints,
+    }
+
+    if shape.kind == "train":
+        opt = choose_optimizer(cfg)
+        info["optimizer"] = type(opt).__name__
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        from repro.launch.specs import opt_state_specs
+        ospecs = opt_state_specs(o_shapes, pspecs)
+        o_in = _sharded(mesh, o_shapes, ospecs)
+        b_shapes = train_input_specs(cfg, shape)
+        bspecs = batch_specs_tree(cfg, shape, mesh, multi_pod)
+        b_in = _sharded(mesh, b_shapes, bspecs)
+        step = make_train_step(model, opt, remat=True, unroll=unroll)
+        out_sh = (_out_shardings(mesh, pspecs), _out_shardings(mesh, ospecs),
+                  NamedSharding(mesh, P()))
+        fn = jax.jit(step, out_shardings=out_sh)
+        args = (p_in, o_in, b_in)
+        return mesh, fn, args, info
+
+    dp = data_axes(multi_pod)
+    logits_spec = P(dp if shard_b else None, None, "model")
+
+    if shape.kind == "prefill":
+        b_shapes = train_input_specs(cfg, shape)
+        b_shapes.pop("labels", None)
+        bspecs = batch_specs_tree(cfg, shape, mesh, multi_pod)
+        bspecs.pop("labels", None)
+        b_in = _sharded(mesh, b_shapes, bspecs)
+        step = make_prefill_step(model, unroll=unroll)
+        out_shapes = jax.eval_shape(step, p_shapes, b_shapes)
+        cspecs = cache_specs(out_shapes[1], mesh, multi_pod, shard_b)
+        out_sh = (NamedSharding(mesh, logits_spec),
+                  _out_shardings(mesh, cspecs))
+        fn = jax.jit(step, out_shardings=out_sh)
+        return mesh, fn, (p_in, b_in), info
+
+    # ---- decode
+    window = decode_window(cfg, shape)
+    info["window_override"] = window
+    B = shape.global_batch
+    if cfg.is_encoder_decoder:
+        c_shapes = jax.eval_shape(
+            lambda: model.init_cache(B, shape.seq_len, dtype=jnp.bfloat16))
+    else:
+        c_shapes = jax.eval_shape(
+            lambda: model.init_cache(B, shape.seq_len, dtype=jnp.bfloat16,
+                                     window_override=window))
+    cspecs = cache_specs(c_shapes, mesh, multi_pod, shard_b,
+                         policy=cache_policy)
+    c_in = _sharded(mesh, c_shapes, cspecs)
+    tok = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=NamedSharding(mesh, P(dp if shard_b else None, None)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    step = make_serve_step(model, window_override=window, unroll=unroll)
+    out_sh = (NamedSharding(mesh, logits_spec), _out_shardings(mesh, cspecs))
+    fn = jax.jit(step, out_shardings=out_sh)
+    info["cache_bytes_per_device"] = _sharded_param_bytes(
+        c_shapes, cspecs, mesh)
+    return mesh, fn, (p_in, c_in, tok, pos), info
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force: bool = False,
+             unroll: bool = False, policy: str = "fsdp",
+             moe_hints: bool = False,
+             cache_policy: str = "attn_hints_seq") -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    suffix = "__unrolled" if unroll else ""
+    if policy != "fsdp":
+        suffix += f"__{policy}"
+    if moe_hints:
+        suffix += f"__moehints_{moe_hints}" if isinstance(moe_hints, str) \
+            else "__moehints"
+    if cache_policy == "auto":
+        suffix += "__legacycache"
+    elif cache_policy != "attn_hints_seq":
+        suffix += f"__{cache_policy}"
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    if (arch, shape_name) in SKIPS:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh, fn, args, info = build_dryrun(arch, shape_name, multi_pod,
+                                            unroll=unroll, policy=policy,
+                                            moe_hints=moe_hints,
+                                            cache_policy=cache_policy)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            cost = summarize_cost(compiled.cost_analysis())
+            mem = summarize_memory(compiled.memory_analysis())
+            coll = collective_bytes(compiled.as_text())
+        rec = dict(info)
+        rec.update(status="ok", unrolled=unroll, lower_s=round(t_lower, 2),
+                   compile_s=round(t_compile, 2), cost=cost, memory=mem,
+                   collectives=coll)
+    except Exception as e:  # noqa: BLE001 — record failures, they are bugs
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _compile_stats(arch, shape_name, multi_pod, policy, moe_hints, cfg,
+                   cache_policy="auto"):
+    mesh, fn, args, _ = build_dryrun(arch, shape_name, multi_pod,
+                                     unroll=True, policy=policy,
+                                     moe_hints=moe_hints, cfg=cfg,
+                                     cache_policy=cache_policy)
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        cost = summarize_cost(compiled.cost_analysis())
+        coll = collective_bytes(compiled.as_text())
+    return cost, coll
+
+
+def _depth_variant(cfg, n_groups: int):
+    """Full-width config with first_k_dense + n_groups*pattern layers."""
+    import dataclasses
+    pat = len(cfg.block_pattern)
+    layers = (cfg.first_k_dense if cfg.moe else 0) + n_groups * pat
+    kw = dict(num_layers=layers)
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = n_groups
+    return dataclasses.replace(cfg, **kw)
+
+
+def probe_pair(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+               force: bool = False, policy: str = "fsdp",
+               moe_hints: bool = False,
+               cache_policy: str = "auto") -> Dict[str, Any]:
+    """Layer-probe roofline measurement: XLA cost analysis counts scanned
+    layer stacks once, so we compile FULL-WIDTH unrolled variants with 1
+    and 2 layer-groups; the difference is the exact per-group cost, which
+    extrapolates to the full depth:  total = base + n_groups * body.
+    Validated against true fully-unrolled compiles (see EXPERIMENTS.md)."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    suffix = "__probe"
+    if policy != "fsdp":
+        suffix += f"__{policy}"
+    if moe_hints:
+        suffix += f"__moehints_{moe_hints}" if isinstance(moe_hints, str) \
+            else "__moehints"
+    if cache_policy not in ("auto", "attn_hints_seq"):
+        suffix += f"__{cache_policy}"
+    elif cache_policy == "auto":
+        suffix += "__legacycache"
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    if (arch, shape_name) in SKIPS:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+    else:
+        t0 = time.time()
+        try:
+            cfg = get_config(arch)
+            pat = len(cfg.block_pattern)
+            prefix = cfg.first_k_dense if cfg.moe else 0
+            full_groups = (cfg.num_layers - prefix) // pat
+            tail = (cfg.num_layers - prefix) - full_groups * pat
+            c1, l1 = _compile_stats(arch, shape_name, multi_pod, policy,
+                                    moe_hints, _depth_variant(cfg, 1),
+                                    cache_policy)
+            c2, l2 = _compile_stats(arch, shape_name, multi_pod, policy,
+                                    moe_hints, _depth_variant(cfg, 2),
+                                    cache_policy)
+            mult = full_groups + tail / pat
+
+            def extrap(d1, d2):
+                out = {}
+                for k in d2:
+                    body = d2[k] - d1.get(k, 0.0)
+                    base = d1.get(k, 0.0) - body
+                    out[k] = max(base + mult * body, 0.0)
+                return out
+
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "status": "ok", "probe": True, "policy": policy,
+                   "moe_hints": moe_hints,
+                   "params_analytic": cfg.param_count(),
+                   "active_params_analytic": cfg.active_param_count(),
+                   "probe_groups": [1, 2], "extrap_mult": mult,
+                   "cost": extrap(c1, c2), "collectives": extrap(l1, l2),
+                   "cost_n1": c1, "cost_n2": c2,
+                   "collectives_n1": l1, "collectives_n2": l2,
+                   "wall_s": round(time.time() - t0, 1)}
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unrolled", action="store_true",
+                    help="analysis pass: unroll layer stacks so HLO cost "
+                         "analysis counts every layer (scan bodies are "
+                         "counted once by XLA)")
+    ap.add_argument("--policy", default="fsdp", choices=["fsdp", "tp_only"],
+                    help="parameter sharding policy (hillclimb lever)")
+    ap.add_argument("--moe-hints", default="", 
+                    choices=["", "full", "expert_only"],
+                    help="explicit MoE dispatch sharding constraints")
+    ap.add_argument("--cache-policy", default="attn_hints_seq",
+                    choices=["auto", "seq_data", "attn_hints",
+                             "attn_hints_seq"],
+                    help="decode cache sharding layout (hillclimb lever)")
+    ap.add_argument("--probe", action="store_true",
+                    help="layer-probe roofline measurement (1- and 2-group "
+                         "full-width unrolled compiles, extrapolated)")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ARCHS:
+            for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        pairs.append((args.arch, args.shape))
+
+    for a, s in pairs:
+        if args.probe:
+            rec = probe_pair(a, s, args.multi_pod, args.out,
+                             force=args.force, policy=args.policy,
+                             moe_hints=args.moe_hints,
+                             cache_policy=args.cache_policy)
+        else:
+            rec = run_pair(a, s, args.multi_pod, args.out, force=args.force,
+                           unroll=args.unrolled, policy=args.policy,
+                           moe_hints=args.moe_hints,
+                           cache_policy=args.cache_policy)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok":
+            if rec.get("probe"):
+                extra = (f"wall={rec['wall_s']}s "
+                         f"flops~={rec['cost'].get('flops', 0):.3g}")
+            else:
+                extra = (f"lower={rec['lower_s']}s "
+                         f"compile={rec['compile_s']}s "
+                         f"flops={rec['cost'].get('flops', 0):.3g}")
+        elif status == "error":
+            extra = rec["error"]
+        print(f"[{status:7s}] {a} x {s} x {rec.get('mesh')}  {extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Sharded train / prefill / serve step builders used by the dry-run and
+the launchers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import Model, build_model
+from repro.optim import Adafactor, Adam
+
+ADAFACTOR_THRESHOLD = 20e9     # params above this use factored moments
+
+
+def choose_optimizer(cfg: ModelConfig):
+    if cfg.param_count() > ADAFACTOR_THRESHOLD:
+        return Adafactor()
+    return Adam()
+
+
+def make_train_step(model: Model, opt, lr: float = 1e-3,
+                    remat: bool = True, unroll: bool = False):
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return model.loss_fn(p, batch, compute_dtype=jnp.bfloat16,
+                                 remat=remat, unroll=unroll)
+        (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_p, new_o = opt.step(params, grads, opt_state, lr)
+        return new_p, new_o, loss
+    return train_step
+
+
+def make_prefill_step(model: Model, unroll: bool = False):
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.is_encoder_decoder:
+            from repro.models import whisper as W
+            enc = W.encode(params, cfg, batch["frames"], unroll=unroll)
+            logits = W.decode_train(params, cfg, batch["tokens"], enc,
+                                    unroll=unroll)
+            cross = W.build_cross_cache(params, cfg, enc)
+            return logits[:, -1:], cross
+        return model.prefill(params, batch["tokens"],
+                             positions=batch.get("positions"),
+                             vision_embeds=batch.get("vision_embeds"),
+                             unroll=unroll)
+    return prefill_step
+
+
+def make_serve_step(model: Model, window_override: int = 0,
+                    unroll: bool = False):
+    cfg = model.cfg
+
+    def serve_step(params, caches, token, pos):
+        if cfg.is_encoder_decoder:
+            return model.decode_step(params, caches, token, pos,
+                                     unroll=unroll)
+        return model.decode_step(params, caches, token, pos,
+                                 window_override=window_override,
+                                 unroll=unroll)
+    return serve_step

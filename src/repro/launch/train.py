@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Small-scale real run (this host):
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 20
+lowers + executes a reduced config on the host devices; the production
+mesh path is exercised via `repro.launch.dryrun` (no TPU in this
+container).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.compression import Compressor
+from repro.core.precision import PrecisionPolicy
+from repro.data import LMDataConfig, make_lm_batches
+from repro.models import build_model
+from repro.optim import OPTIMIZERS
+from repro.optim.schedule import cosine_warmup
+from repro.train import TrainState, make_train_step, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on host devices")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adam", choices=list(OPTIMIZERS))
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "onebit", "terngrad", "qsgd", "dgc"])
+    ap.add_argument("--compute-dtype", default="float32")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+
+    data_cfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                            batch_size=args.batch_size)
+    batches = make_lm_batches(data_cfg)
+
+    if cfg.is_encoder_decoder:
+        F = cfg.max_source_positions
+        fkey = jax.random.PRNGKey(7)
+
+        def batch_fn(t):
+            b = batches(t)
+            return {"frames": jax.random.normal(
+                        jax.random.fold_in(fkey, t),
+                        (args.batch_size, F, cfg.d_model)),
+                    "tokens": b["tokens"], "labels": b["labels"]}
+    else:
+        def batch_fn(t):
+            return batches(t)
+
+    opt = OPTIMIZERS[args.optimizer]()
+    comp = Compressor(args.compress)
+    precision = PrecisionPolicy(compute_dtype=args.compute_dtype)
+    step = make_train_step(model.loss_fn, opt,
+                           cosine_warmup(args.lr, 5, args.steps),
+                           precision=precision, compressor=comp)
+    state = TrainState.create(params, opt, comp)
+    t0 = time.time()
+    state, hist = train_loop(step, state, batch_fn, args.steps,
+                             log_every=max(1, args.steps // 10))
+    for rec in hist:
+        print(json.dumps({k: round(v, 5) for k, v in rec.items()}))
+    print(f"done in {time.time() - t0:.1f}s; "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

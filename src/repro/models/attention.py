@@ -1,0 +1,191 @@
+"""GQA / MQA / MHA attention with full, sliding-window, and cross variants.
+
+Pure-jnp reference math (the dry-run path); the Pallas flash-attention kernel
+in ``repro.kernels.flash_attention`` is an optional drop-in for the training
+forward (validated against this math in interpret mode).
+
+Cache layouts
+-------------
+full   : {"k": [B, Smax, KV, hd], "v": [B, Smax, KV, hd]}  write at position t
+window : {"k": [B, W,    KV, hd], "v": ...}                ring buffer, write at t % W
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init, apply_rope, apply_mrope
+
+NEG_INF = -1e9
+
+
+def attn_init(key, cfg, dtype=jnp.float32, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, cfg.use_bias, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, cfg.use_bias, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, cfg.use_bias, dtype),
+        "wo": dense_init(ks[3], H * hd, d, cfg.use_bias, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _sdpa(q, k, v, mask, decode_hints: bool = False):
+    """q [B,Sq,H,hd] k/v [B,Sk,H,hd] mask [B,1,Sq,Sk] or broadcastable."""
+    from repro.core.parallelism import attn_decode_constraint
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    if decode_hints:
+        scores = attn_decode_constraint(scores, "scores")
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    if decode_hints:
+        out = attn_decode_constraint(out, "out")
+    return out
+
+
+def _causal_mask(sq, sk, offset=0):
+    """query i (global pos offset+i) may see key j<=offset+i."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    return (kj <= qi)[None, None]
+
+
+def _window_mask(sq, sk, window, offset=0):
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    return ((kj <= qi) & (kj > qi - window))[None, None]
+
+
+def attention_forward(p, x, positions, cfg, *, causal=True, window=0,
+                      kv_x=None, use_rope=True):
+    """Training / prefill / encoder forward.
+
+    kv_x: if given, cross-attention keys/values come from kv_x (no rope).
+    Returns (out, cache) where cache has the full k/v (for prefill reuse).
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k = _split_heads(dense(p["wk"], src), KV, hd)
+    v = _split_heads(dense(p["wv"], src), KV, hd)
+    if use_rope and kv_x is None:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    kr = _repeat_kv(k, H // KV)
+    vr = _repeat_kv(v, H // KV)
+    sq, sk = q.shape[1], kr.shape[1]
+    if kv_x is not None:
+        mask = jnp.ones((1, 1, sq, sk), dtype=bool)
+    elif not causal:
+        mask = jnp.ones((1, 1, sq, sk), dtype=bool)
+    elif window:
+        mask = _window_mask(sq, sk, window)
+    else:
+        mask = _causal_mask(sq, sk)
+    out = _sdpa(q, kr, vr, mask)
+    out = dense(p["wo"], out.reshape(out.shape[:2] + (H * hd,)))
+    return out, {"k": k, "v": v}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype, window: int = 0):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    L = window if window else max_len
+    return {"k": jnp.zeros((batch, L, KV, hd), dtype=dtype),
+            "v": jnp.zeros((batch, L, KV, hd), dtype=dtype)}
+
+
+def attention_decode(p, x, pos, cache, cfg, *, window=0, cross_kv=None,
+                     use_rope=True):
+    """One-token decode step.  x [B,1,d]; pos scalar int32 (same for batch).
+
+    window > 0 -> ring-buffer cache of that length (sub-quadratic decode).
+    cross_kv -> (k, v) precomputed encoder keys/values; cache unused.
+    Returns (out [B,1,d], new_cache).
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    B = x.shape[0]
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    if cross_kv is not None:
+        kr = _repeat_kv(cross_kv["k"], H // KV)
+        vr = _repeat_kv(cross_kv["v"], H // KV)
+        mask = jnp.ones((1, 1, 1, kr.shape[1]), dtype=bool)
+        out = _sdpa(q, kr, vr, mask, decode_hints=True)
+        out = dense(p["wo"], out.reshape(B, 1, H * hd))
+        return out, cache
+
+    k = _split_heads(dense(p["wk"], x), KV, hd)
+    v = _split_heads(dense(p["wv"], x), KV, hd)
+    posb = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1))
+    if use_rope:
+        if cfg.mrope_sections:
+            pos3 = jnp.broadcast_to(jnp.asarray(pos)[None, None, None],
+                                    (B, 3, 1))
+            q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k = apply_rope(k, posb, cfg.rope_theta)
+
+    from repro.core.parallelism import attn_decode_constraint
+    L = cache["k"].shape[1]
+    slot = (pos % window) if window else pos
+    k = attn_decode_constraint(k, "cache4d")
+    v = attn_decode_constraint(v, "cache4d")
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    ck = attn_decode_constraint(ck, "cache4d")
+    cv = attn_decode_constraint(cv, "cache4d")
+    idx = jnp.arange(L)
+    if window:
+        # slot j holds global position p_j with p_j % W == j and p_j <= pos;
+        # valid iff pos - p_j < W  <=>  p_j > pos - W, and p_j >= 0.
+        age = (pos - idx) % window            # steps since slot was written
+        mask1d = (pos - age) >= 0
+    else:
+        mask1d = idx <= pos
+    out = _gqa_decode_sdpa(q, ck, cv, mask1d)
+    out = dense(p["wo"], out.reshape(B, 1, H * hd))
+    return out, {"k": ck, "v": cv}
+
+
+def _gqa_decode_sdpa(q, ck, cv, mask1d):
+    """Grouped-query decode attention WITHOUT materializing repeated K/V.
+
+    q [B,1,H,hd]; ck/cv [B,L,KV,hd]; mask1d [L].  The repeat-free grouped
+    einsum keeps the cache in its stored layout — on TPU this avoids an
+    H/KV-fold HBM blow-up, and under GSPMD it stops the partitioner from
+    replicating the repeated cache (EXPERIMENTS.md §Perf iter 4)."""
+    from repro.core.parallelism import attn_decode_constraint
+    B, _, H, hd = q.shape
+    KV = ck.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    qg = attn_decode_constraint(qg, "q5d")
+    scores = jnp.einsum("bqkgd,blkd->bkgql", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32))       # [B,KV,G,1,L]
+    scores = attn_decode_constraint(scores, "scores5d")
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask1d[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgql,blkd->bqkgd", probs.astype(cv.dtype), cv)
+    out = attn_decode_constraint(out, "out5d")
+    return out.reshape(B, 1, H, hd)

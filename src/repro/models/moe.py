@@ -1,0 +1,106 @@
+"""Token-choice top-k MoE with sort-based capacity dispatch (TPU-friendly).
+
+The survey's hybrid-parallelism discussion (§3.2.4) maps MoE onto the
+"parameter dimension": experts are sharded over the `model` mesh axis and
+token dispatch becomes the all-to-all the survey flags as the communication
+bottleneck for parameter-heavy layers.
+
+Dispatch is sort-based (MaxText-style, no [T, E, C] one-hot):
+  assignments -> stable sort by expert id -> per-expert positions via
+  cumulative counts -> scatter into an [E, C, d] buffer -> batched expert
+  einsum -> gather back + weighted combine.  All shapes are static.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, E, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 2 + cfg.num_shared_experts)
+    import numpy as np
+    p = {
+        "router": dense_init(ks[0], d, E, False, jnp.float32),  # router in fp32
+        # stacked expert weights [E, d, ff] / [E, ff, d]
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff)) / np.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(jax.random.fold_in(ks[1], 1), (E, d, ff))
+                 / np.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(jax.random.fold_in(ks[1], 2), (E, ff, d))
+                   / np.sqrt(ff)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[2], d, ff * cfg.num_shared_experts,
+                               "swiglu", cfg.use_bias, dtype)
+    return p
+
+
+def _capacity(T: int, K: int, E: int, factor: float) -> int:
+    c = int((T * K * factor + E - 1) // E)
+    return max(c, 1)
+
+
+def moe_apply(p, x, cfg):
+    """x [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(T, K, E, cfg.capacity_factor)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, K)                    # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)                                       # [E]
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch (gather formulation)
+    # A scatter into the expert-sharded [E*C, d] buffer makes GSPMD
+    # replicate + all-reduce the full buffer (measured: ~E*C*d bytes of
+    # all-reduce per layer).  Instead index slot -> source token and GATHER:
+    # slot (e, c) is filled by the c-th token routed to expert e.
+    flat_e = expert_ids.reshape(-1)                               # [T*K]
+    sort_idx = jnp.argsort(flat_e, stable=True)                   # [T*K]
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=E)                       # [E]
+    starts = jnp.cumsum(counts) - counts                          # [E]
+    from repro.core.parallelism import moe_constraint
+    xt = moe_constraint(xt, "tokens")
+
+    slot_c = jnp.arange(E * C) % C                                # [E*C]
+    slot_e = jnp.arange(E * C) // C
+    slot_valid = slot_c < counts[slot_e]
+    slot_sorted_idx = jnp.minimum(starts[slot_e] + slot_c, T * K - 1)
+    slot_token = sort_idx[slot_sorted_idx] // K                   # source token
+    buf = jnp.where(slot_valid[:, None],
+                    xt[slot_token], jnp.zeros((), dtype=x.dtype))
+    buf = moe_constraint(buf.reshape(E, C, d), "experts")
+
+    # ---- batched expert FFN (swiglu)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out_buf = out_buf.reshape(E * C, d)
+
+    # ---- combine: slot of the i-th sorted assignment (gather, no scatter)
+    pos_in_e = jnp.arange(T * K) - starts[sorted_e]               # [T*K]
+    valid = pos_in_e < C
+    dest = jnp.minimum(sorted_e * C + jnp.minimum(pos_in_e, C - 1),
+                       E * C - 1)
+    out_sorted = out_buf[dest] * valid[:, None].astype(x.dtype)
+    inv = jnp.argsort(sort_idx)                                   # unsort perm
+    out_flat = out_sorted[inv]                                    # [T*K, d]
+    out = (out_flat.reshape(T, K, d)
+           * gate.astype(x.dtype)[..., None]).sum(axis=1)         # [T, d]
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], xt, "swiglu")
+    return out.reshape(B, S, d), aux

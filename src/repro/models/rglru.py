@@ -1,0 +1,100 @@
+"""Griffin recurrent block: temporal conv + RG-LRU (arXiv:2402.19427).
+
+The RG-LRU recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is a
+linear first-order recurrence, so training uses ``jax.lax.associative_scan``
+(TPU-native log-depth scan; the GPU paper's custom recurrence kernel adapts to
+an associative scan here — DESIGN.md §2).  Decode carries (h, conv buffer),
+constant in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense, dense_init
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d, w, cw = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda parametrized so a = exp(-C * softplus(lam) * sigmoid(rg)) starts
+    # near the Griffin init (a^C in [0.9, 0.999]).
+    lam0 = np.log(np.expm1(-np.log(np.random.RandomState(0).uniform(
+        0.9, 0.999, size=(w,)) ** (1.0 / _C))))
+    return {
+        "w_x": dense_init(ks[0], d, w, False, dtype),       # conv branch in-proj
+        "w_gate_branch": dense_init(ks[1], d, w, False, dtype),  # gelu branch
+        "w_out": dense_init(ks[2], w, d, False, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cw, w)) / np.sqrt(cw)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype=dtype),
+        "w_rg": dense_init(ks[4], w, w, False, dtype),      # recurrence gate
+        "w_ig": dense_init(ks[5], w, w, False, dtype),      # input gate
+        "lam": jnp.asarray(lam0, dtype=jnp.float32),
+    }
+
+
+def _causal_conv(p, u, buf=None):
+    """u [B, S, w]; width-cw causal conv.  buf [B, cw-1, w] is the decode
+    context (last cw-1 inputs); returns (y, new_buf)."""
+    cw = p["conv_w"].shape[0]
+    if buf is None:
+        buf = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), dtype=u.dtype)
+    ext = jnp.concatenate([buf, u], axis=1)                 # [B, cw-1+S, w]
+    y = sum(ext[:, i:i + u.shape[1], :] * p["conv_w"][i].astype(u.dtype)
+            for i in range(cw))
+    y = y + p["conv_b"].astype(u.dtype)
+    new_buf = ext[:, -(cw - 1):, :]
+    return y, new_buf
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(dense(p["w_rg"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_ig"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r             # [B, S, w]
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (
+        i * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_forward(p, x, h0=None, conv_buf=None):
+    """Full-sequence forward.  x [B, S, d] -> (out, (h_last, conv_buf))."""
+    gelu_branch = jax.nn.gelu(dense(p["w_gate_branch"], x))
+    u = dense(p["w_x"], x)
+    u, new_buf = _causal_conv(p, u, conv_buf)
+    a, b = _gates(p, u)
+    if h0 is not None:
+        # fold initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None].astype(jnp.float32), b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    out = dense(p["w_out"], (h.astype(x.dtype) * gelu_branch))
+    return out, (h[:, -1].astype(x.dtype), new_buf)
+
+
+def rglru_init_state(cfg, batch: int, dtype):
+    w, cw = cfg.lru_width or cfg.d_model, cfg.conv_width
+    return {"h": jnp.zeros((batch, w), dtype=dtype),
+            "conv": jnp.zeros((batch, cw - 1, w), dtype=dtype)}
+
+
+def rglru_decode(p, x, state):
+    """One-token step.  x [B, 1, d]."""
+    gelu_branch = jax.nn.gelu(dense(p["w_gate_branch"], x))
+    u = dense(p["w_x"], x)
+    u, new_conv = _causal_conv(p, u, state["conv"])
+    a, b = _gates(p, u)                                     # [B, 1, w]
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    out = dense(p["w_out"], (h[:, None].astype(x.dtype) * gelu_branch))
+    return out, {"h": h.astype(state["h"].dtype), "conv": new_conv}

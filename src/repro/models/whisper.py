@@ -1,0 +1,206 @@
+"""Whisper large-v3 backbone: transformer encoder-decoder (arXiv:2212.04356).
+
+The mel-spectrogram + conv1d feature extractor is a STUB per the brief:
+callers provide precomputed frame embeddings [B, n_frames, d_model] (the
+output of the conv frontend) directly.  Everything downstream — sinusoidal
+encoder positions, learned decoder positions, self/cross attention, decode
+KV caches — is implemented.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (cross_entropy, dense, mlp_apply, mlp_init,
+                                 norm_apply, norm_init)
+
+
+def _sinusoids(length: int, channels: int):
+    log_timescale = np.log(10_000.0) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    scaled = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(np.concatenate([np.sin(scaled), np.cos(scaled)], 1),
+                       dtype=jnp.float32)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model),
+            "attn": attn.attn_init(ks[0], cfg, dtype),
+            "ln2": norm_init(cfg.norm, cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.use_bias, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model),
+            "self_attn": attn.attn_init(ks[0], cfg, dtype),
+            "ln_x": norm_init(cfg.norm, cfg.d_model),
+            "cross_attn": attn.attn_init(ks[1], cfg, dtype),
+            "ln2": norm_init(cfg.norm, cfg.d_model),
+            "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.use_bias, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32,
+                vocab_pad_multiple: int = 1):
+    vpad = cfg.padded_vocab(vocab_pad_multiple)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": (jax.random.normal(ks[0], (vpad, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "dec_pos": (jax.random.normal(ks[1], (448, cfg.d_model))
+                    * 0.01).astype(dtype),   # learned decoder positions
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(
+            jax.random.split(ks[2], cfg.encoder_layers)),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(
+            jax.random.split(ks[3], cfg.num_layers)),
+        "enc_ln_post": norm_init(cfg.norm, cfg.d_model),
+        "dec_ln_post": norm_init(cfg.norm, cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, compute_dtype=jnp.bfloat16,
+           remat: bool = False, unroll: bool = False):
+    """frames [B, n_frames, d_model] (conv-frontend stub output)."""
+    B, F, _ = frames.shape
+    x = frames.astype(compute_dtype) + _sinusoids(
+        F, cfg.d_model)[None].astype(compute_dtype)
+    pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(xc, p):
+        h = norm_apply(cfg.norm, p["ln1"], xc, cfg.norm_eps)
+        out, _ = attn.attention_forward(p["attn"], h, pos, cfg, causal=False,
+                                        use_rope=False)
+        xc = xc + out
+        h = norm_apply(cfg.norm, p["ln2"], xc, cfg.norm_eps)
+        return xc + mlp_apply(p["mlp"], h, cfg.act), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if unroll:
+        for li in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a, _l=li: a[_l],
+                                        params["enc_layers"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return norm_apply(cfg.norm, params["enc_ln_post"], x, cfg.norm_eps)
+
+
+def _dec_positions(params, start, length, batch, compute_dtype):
+    idx = jnp.clip(start + jnp.arange(length), 0, params["dec_pos"].shape[0] - 1)
+    return params["dec_pos"].astype(compute_dtype)[idx][None]
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out,
+                 compute_dtype=jnp.bfloat16, remat: bool = False,
+                 unroll: bool = False):
+    """Teacher-forced decoder forward.  tokens [B, S]."""
+    B, S = tokens.shape
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = x + _dec_positions(params, 0, S, B, compute_dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(xc, p):
+        h = norm_apply(cfg.norm, p["ln1"], xc, cfg.norm_eps)
+        out, _ = attn.attention_forward(p["self_attn"], h, pos, cfg,
+                                        causal=True, use_rope=False)
+        xc = xc + out
+        h = norm_apply(cfg.norm, p["ln_x"], xc, cfg.norm_eps)
+        out, _ = attn.attention_forward(p["cross_attn"], h, pos, cfg,
+                                        kv_x=enc_out)
+        xc = xc + out
+        h = norm_apply(cfg.norm, p["ln2"], xc, cfg.norm_eps)
+        return xc + mlp_apply(p["mlp"], h, cfg.act), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if unroll:
+        for li in range(cfg.num_layers):
+            x, _ = body(x, jax.tree.map(lambda a, _l=li: a[_l],
+                                        params["dec_layers"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = norm_apply(cfg.norm, params["dec_ln_post"], x, cfg.norm_eps)
+    return x @ params["embed"].astype(compute_dtype).T
+
+
+def loss_fn(params, cfg: ModelConfig, batch, compute_dtype=jnp.bfloat16,
+            remat: bool = False, unroll: bool = False):
+    """batch: {frames [B,F,d], tokens [B,S], labels [B,S][, mask]}."""
+    enc_out = encode(params, cfg, batch["frames"], compute_dtype, remat,
+                     unroll)
+    logits = decode_train(params, cfg, batch["tokens"], enc_out,
+                          compute_dtype, remat, unroll)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"),
+                       vocab_size=cfg.vocab_size)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_frames: int = 1500):
+    """Per decoder layer: self-attn KV cache + precomputed cross KV."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    L = cfg.num_layers
+    return {
+        "self": {"k": jnp.zeros((L, batch, max_len, KV, hd), dtype=dtype),
+                 "v": jnp.zeros((L, batch, max_len, KV, hd), dtype=dtype)},
+        "cross": {"k": jnp.zeros((L, batch, enc_frames, KV, hd), dtype=dtype),
+                  "v": jnp.zeros((L, batch, enc_frames, KV, hd), dtype=dtype)},
+    }
+
+
+def build_cross_cache(params, cfg: ModelConfig, enc_out, dtype=jnp.bfloat16):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    def per_layer(p):
+        k = dense(p["cross_attn"]["wk"], enc_out)
+        v = dense(p["cross_attn"]["wv"], enc_out)
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        shp = enc_out.shape[:2] + (KV, hd)
+        return k.reshape(shp).astype(dtype), v.reshape(shp).astype(dtype)
+
+    ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+    return {"k": ks, "v": vs}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos,
+                compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """One decoder token.  token [B,1]; cache from init_cache (cross filled)."""
+    B = token.shape[0]
+    x = params["embed"].astype(compute_dtype)[token]
+    x = x + _dec_positions(params, pos, 1, B, compute_dtype)
+
+    def body(xc, inp):
+        p, self_c, cross_c = inp
+        h = norm_apply(cfg.norm, p["ln1"], xc, cfg.norm_eps)
+        out, new_self = attn.attention_decode(
+            p["self_attn"], h, pos, self_c, cfg, use_rope=False)
+        xc = xc + out
+        h = norm_apply(cfg.norm, p["ln_x"], xc, cfg.norm_eps)
+        out, _ = attn.attention_decode(p["cross_attn"], h, pos, None, cfg,
+                                       cross_kv=cross_c)
+        xc = xc + out
+        h = norm_apply(cfg.norm, p["ln2"], xc, cfg.norm_eps)
+        return xc + mlp_apply(p["mlp"], h, cfg.act), new_self
+
+    if unroll:
+        selves = []
+        for li in range(cfg.num_layers):
+            inp = jax.tree.map(lambda a, _l=li: a[_l],
+                               (params["dec_layers"], cache["self"],
+                                cache["cross"]))
+            x, ns = body(x, inp)
+            selves.append(ns)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *selves)
+    else:
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    x = norm_apply(cfg.norm, params["dec_ln_post"], x, cfg.norm_eps)
+    logits = x @ params["embed"].astype(compute_dtype).T
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,40 @@
+"""SGD with (Nesterov) momentum."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    momentum: float = 0.9
+    nesterov: bool = False
+
+    def init(self, params):
+        if self.momentum == 0:
+            return {}
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def step(self, params, grads, state, lr):
+        if self.momentum == 0:
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, state
+        m = jax.tree.map(
+            lambda mm, g: self.momentum * mm + g.astype(jnp.float32),
+            state["m"], grads)
+        if self.nesterov:
+            upd = jax.tree.map(
+                lambda mm, g: self.momentum * mm + g.astype(jnp.float32),
+                m, grads)
+        else:
+            upd = m
+        new_p = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+            params, upd)
+        return new_p, {"m": m}

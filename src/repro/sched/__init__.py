@@ -1,0 +1,8 @@
+"""Resource scheduling & elasticity (survey §3.4): a discrete-event
+multi-tenant GPU-cluster simulator with pluggable policies."""
+from repro.sched.jobs import Job, make_trace
+from repro.sched.cluster import Cluster
+from repro.sched.policies import POLICIES
+from repro.sched.simulator import simulate
+
+__all__ = ["Job", "make_trace", "Cluster", "POLICIES", "simulate"]

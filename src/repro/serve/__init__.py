@@ -1,0 +1,3 @@
+from repro.serve.serve_loop import generate, greedy_sample
+
+__all__ = ["generate", "greedy_sample"]

@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+host's single device; multi-device tests spawn subprocesses with their own
+flags (see helpers.run_multidevice)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidevice(script: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N virtual host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\nSTDOUT:\n{res.stdout}\n"
+            f"STDERR:\n{res.stderr[-3000:]}")
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    return run_multidevice

@@ -1,0 +1,60 @@
+"""Model-data management tests (survey §3.5.2)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ModelRegistry, load_checkpoint, save_checkpoint
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {"embed": jax.random.normal(ks[0], (64, 16)),
+            "layers": [{"w": jax.random.normal(ks[1], (16, 16)),
+                        "b": jnp.zeros((16,))},
+                       {"w": jax.random.normal(ks[2], (16, 16)),
+                        "b": jnp.ones((16,))}],
+            "step_scale": jnp.float32(0.5)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    manifest = save_checkpoint(str(tmp_path / "ckpt"), tree, step=42)
+    assert manifest["shards"] >= 1
+    restored, step = load_checkpoint(str(tmp_path / "ckpt"), tree)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharding_by_size(tmp_path):
+    tree = {"big": jnp.ones((1000, 100)), "small": jnp.ones((10,))}
+    manifest = save_checkpoint(str(tmp_path / "c"), tree, shard_bytes=100_000)
+    assert manifest["shards"] >= 2       # 400KB leaf forces multiple shards
+    restored, _ = load_checkpoint(str(tmp_path / "c"), tree)
+    assert float(restored["big"].sum()) == 100_000
+
+
+def test_registry_query_and_lineage(tmp_path):
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    a = reg.register("lm", "/ck/a", arch="tinyllama-1.1b",
+                     metrics={"loss": 3.2}, hyperparams={"lr": 1e-3})
+    b = reg.register("lm", "/ck/b", arch="tinyllama-1.1b",
+                     metrics={"loss": 2.8}, parent=a)
+    c = reg.register("other", "/ck/c", arch="rwkv6-7b",
+                     metrics={"loss": 9.0})
+    assert reg.get(b)["version"] == 1
+    assert len(reg.query(name="lm")) == 2
+    assert reg.query(arch="rwkv6-7b")[0]["id"] == c
+    assert reg.lineage(b) == [b, a]
+    assert reg.best("lm", "loss", maximize=False)["id"] == b
+
+
+def test_registry_persistence(tmp_path):
+    root = str(tmp_path / "reg2")
+    reg = ModelRegistry(root)
+    reg.register("m", "/x", metrics={"acc": 0.9})
+    reg2 = ModelRegistry(root)       # reload from disk
+    assert len(reg2.query(name="m")) == 1

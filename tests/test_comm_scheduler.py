@@ -1,0 +1,49 @@
+"""Communication-scheduling model tests (TicTac/Bösen, survey §3.3.3(3))."""
+import pytest
+
+from repro.core.comm_scheduler import (LayerCost, LinkModel, bucketize,
+                                       random_order, schedule_no_overlap,
+                                       schedule_overlap, tictac_order)
+
+LINK = LinkModel(alpha_s=1e-5, beta_Bps=50e9)
+
+
+def _layers(n=24):
+    # transformer-ish: equal compute, equal grads
+    return [LayerCost(f"l{i}", back_compute_s=2e-3, grad_bytes=50e6)
+            for i in range(n)]
+
+
+def test_overlap_beats_no_overlap():
+    ls = _layers()
+    t_no = schedule_no_overlap(ls, LINK)
+    t_tictac = schedule_overlap(ls, LINK, tictac_order(ls))
+    assert t_tictac < t_no
+
+
+def test_tictac_no_worse_than_random():
+    ls = _layers()
+    t_tictac = schedule_overlap(ls, LINK, tictac_order(ls))
+    t_rand = min(schedule_overlap(ls, LINK, random_order(ls, s))
+                 for s in range(5))
+    assert t_tictac <= t_rand + 1e-12
+
+
+def test_bucketing_amortizes_latency():
+    # latency-dominated regime: many tiny gradients
+    ls = [LayerCost(f"l{i}", 1e-4, 1e4) for i in range(200)]
+    slow_link = LinkModel(alpha_s=1e-3, beta_Bps=50e9)
+    t_unbucketed = schedule_overlap(ls, slow_link, tictac_order(ls))
+    bs = bucketize(ls, bucket_bytes=5e5)
+    t_bucketed = schedule_overlap(bs, slow_link, tictac_order(bs))
+    assert t_bucketed < t_unbucketed
+    assert len(bs) < len(ls)
+
+
+def test_bucketize_preserves_totals():
+    ls = _layers(10)
+    bs = bucketize(ls, bucket_bytes=120e6)
+    assert abs(sum(b.grad_bytes for b in bs)
+               - sum(l.grad_bytes for l in ls)) < 1
+    assert abs(sum(b.back_compute_s for b in bs)
+               - sum(l.back_compute_s for l in ls)) < 1e-9

@@ -1,0 +1,90 @@
+"""Compressor pytree-level properties (survey Table 2 methods)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import Compressor, METHODS
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _grads():
+    ks = jax.random.split(KEY, 3)
+    return {"a": jax.random.normal(ks[0], (33, 7)),
+            "b": {"w": jax.random.normal(ks[1], (128,)),
+                  "v": jax.random.normal(ks[2], (5, 9, 4))}}
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_roundtrip_shapes_and_bytes(method):
+    g = _grads()
+    comp = Compressor(method)
+    st = comp.init_state(g)
+    out, st2, wire = comp.roundtrip(g, st, jax.random.PRNGKey(1))
+    assert jax.tree.structure(out) == jax.tree.structure(g)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(g)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    total = sum(x.size for x in jax.tree.leaves(g)) * 4
+    if method == "none":
+        assert wire == total
+    else:
+        assert 0 < wire < total, (method, wire, total)
+
+
+def test_wire_bytes_ordering():
+    """1-bit < ternary < qsgd(8b) < fp32; dgc(1%) smallest-ish."""
+    g = _grads()
+    wires = {}
+    for m in METHODS:
+        comp = Compressor(m)
+        _, _, wires[m] = comp.roundtrip(g, comp.init_state(g),
+                                        jax.random.PRNGKey(1))
+    assert wires["onebit"] < wires["terngrad"] < wires["qsgd"] < wires["none"]
+    assert wires["dgc"] < wires["qsgd"]
+
+
+@pytest.mark.parametrize("method", ["onebit", "dgc"])
+def test_error_feedback_telescopes_across_steps(method):
+    """sum_t decompressed_t + residual_T == sum_t g_t (EF keeps everything)."""
+    comp = Compressor(method, density=0.05)
+    g0 = _grads()
+    st = comp.init_state(g0)
+    acc_sent = jax.tree.map(jnp.zeros_like, g0)
+    acc_raw = jax.tree.map(jnp.zeros_like, g0)
+    for t in range(5):
+        g = jax.tree.map(
+            lambda x: x * (t + 1) * 0.3, g0)
+        out, st, _ = comp.roundtrip(g, st, jax.random.PRNGKey(t))
+        acc_sent = jax.tree.map(jnp.add, acc_sent, out)
+        acc_raw = jax.tree.map(jnp.add, acc_raw, g)
+    total = jax.tree.map(lambda s, e: s + e, acc_sent, st)
+    for a, b in zip(jax.tree.leaves(total), jax.tree.leaves(acc_raw)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["onebit", "terngrad", "qsgd", "dgc"])
+def test_kernel_path_matches_ref_path(method):
+    g = _grads()
+    rng = jax.random.PRNGKey(3)
+    c_ref = Compressor(method, use_kernel=False)
+    c_ker = Compressor(method, use_kernel=True)
+    o1, s1, w1 = c_ref.roundtrip(g, c_ref.init_state(g), rng)
+    o2, s2, w2 = c_ker.roundtrip(g, c_ker.init_state(g), rng)
+    assert w1 == w2
+    for a, b in zip(jax.tree.leaves(o1), jax.tree.leaves(o2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_direction_preserved():
+    """All compressors keep a positive cosine with the raw gradient."""
+    g = _grads()
+    flat = lambda t: jnp.concatenate([x.reshape(-1)
+                                      for x in jax.tree.leaves(t)])
+    for m in ("onebit", "terngrad", "qsgd", "dgc"):
+        comp = Compressor(m, density=0.1)
+        out, _, _ = comp.roundtrip(g, comp.init_state(g),
+                                   jax.random.PRNGKey(4))
+        a, b = flat(out), flat(g)
+        cos = float(a @ b / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-9))
+        assert cos > 0.2, (m, cos)

@@ -1,0 +1,67 @@
+"""Config registry: all 10 assigned architectures with sane param counts."""
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, SKIPS, all_pairs, get_config
+
+EXPECTED_PARAMS_B = {
+    "tinyllama-1.1b": (0.9, 1.3),
+    "kimi-k2-1t-a32b": (900, 1150),
+    "whisper-large-v3": (1.2, 1.9),
+    "deepseek-v2-lite-16b": (14, 18),
+    "qwen2-vl-7b": (6.5, 9),
+    "stablelm-1.6b": (1.4, 1.9),
+    "recurrentgemma-9b": (7.5, 10.5),
+    "rwkv6-7b": (6.5, 8.5),
+    "command-r-35b": (28, 38),
+    "llama3.2-3b": (2.8, 3.8),
+}
+
+
+def test_ten_archs_registered():
+    assert len(ARCHS) == 10
+    families = {c.family for c in ARCHS.values()}
+    assert families == {"dense", "moe", "audio", "vlm", "hybrid", "ssm"}
+
+
+def test_four_shapes():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_counts(arch):
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+def test_active_params_kimi():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = cfg.active_param_count() / 1e9
+    assert 25 <= active <= 60      # "a32b" ~= 32B activated
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_configs_small(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 2 and r.d_model <= 512
+    if r.moe:
+        assert r.num_experts <= 4
+
+
+def test_pairs_and_skips():
+    pairs = list(all_pairs())
+    assert len(pairs) == 39           # 40 minus whisper x long_500k
+    assert ("whisper-large-v3", "long_500k") in SKIPS
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_model_dims_divisible_by_mesh(arch):
+    """Every sharded trailing dim must divide the 16-way model axis."""
+    cfg = get_config(arch)
+    assert cfg.d_model % 16 == 0
+    assert cfg.padded_vocab(16) % 16 == 0
+    if cfg.num_heads:
+        assert (cfg.num_heads * cfg.head_dim) % 16 == 0
+    assert cfg.d_ff % 16 == 0

@@ -1,0 +1,82 @@
+"""Property: token-by-token decode through the cache reproduces the full
+teacher-forced forward (the KV-cache/state invariant), for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+B, S = 2, 12
+
+CASES = ["tinyllama-1.1b", "stablelm-1.6b", "command-r-35b", "llama3.2-3b",
+         "qwen2-vl-7b", "recurrentgemma-9b", "rwkv6-7b",
+         "deepseek-v2-lite-16b", "kimi-k2-1t-a32b"]
+
+
+@pytest.mark.parametrize("arch", CASES)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe:
+        # no-drop capacity so dispatch is identical between modes
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None],
+                                           (B, 3, S))
+    full, _, _ = model.forward(params, toks, compute_dtype=jnp.float32, **kw)
+    caches = model.init_cache(B, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, caches = model.decode_step(params, caches, toks[:, t:t + 1], t,
+                                       compute_dtype=jnp.float32)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert float(jnp.max(jnp.abs(full - dec))) < 2e-4, arch
+
+
+def test_whisper_decode_matches_teacher_forcing():
+    cfg = get_config("whisper-large-v3").reduced()
+    from repro.models import whisper as W
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    frames = jax.random.normal(key, (B, cfg.max_source_positions, cfg.d_model))
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    enc = W.encode(params, cfg, frames, compute_dtype=jnp.float32)
+    full = W.decode_train(params, cfg, toks, enc, compute_dtype=jnp.float32)
+    caches = model.init_cache(B, S, dtype=jnp.float32)
+    caches["cross"] = W.build_cross_cache(params, cfg, enc, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, caches = model.decode_step(params, caches, toks[:, t:t + 1], t,
+                                       compute_dtype=jnp.float32)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    assert float(jnp.max(jnp.abs(full - dec))) < 2e-4
+
+
+def test_sliding_window_decode_matches_within_window():
+    """With a window override, decode logits match full-cache decode while
+    the context still fits the window (sub-quadratic serving invariant)."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    W_ = 8
+    toks = jax.random.randint(key, (B, W_), 0, cfg.vocab_size)
+    c_full = model.init_cache(B, W_, dtype=jnp.float32)
+    c_win = model.init_cache(B, W_, dtype=jnp.float32, window_override=W_)
+    for t in range(W_):
+        lf, c_full = model.decode_step(params, c_full, toks[:, t:t + 1], t,
+                                       compute_dtype=jnp.float32)
+        lw, c_win = model.decode_step(params, c_win, toks[:, t:t + 1], t,
+                                      compute_dtype=jnp.float32,
+                                      window_override=W_)
+        assert float(jnp.max(jnp.abs(lf - lw))) < 2e-4, t

@@ -1,0 +1,79 @@
+"""HLO collective parser + roofline unit tests (deliverables e/g glue)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (_group_size, _traffic,
+                                       collective_bytes, summarize_cost)
+from repro.launch.roofline import analyze_record, model_flops
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %ar = bf16[1024,512]{1,0} all-reduce(%p0), replica_groups=[16,16]<=[256]
+  %ag = f32[64,64]{1,0} all-gather(%p1), replica_groups=[64,4]<=[256]
+  %aa = bf16[32]{0} all-to-all(%p2), replica_groups={{0,1,2,3}}
+  %cp = f32[16,16]{1,0} collective-permute(%p3)
+  %rs = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) reduce-scatter(%p4, %p5), replica_groups=[32,8]<=[256]
+  %ars = bf16[100]{0} all-reduce-start(%p6), replica_groups=[1,256]<=[256]
+  %ard = bf16[100]{0} all-reduce-done(%ars)
+  %not = f32[999,999] dot(%a, %b)
+}
+"""
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[16,16]<=[256]") == 16
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("no groups here") == 2
+
+
+def test_traffic_model():
+    assert _traffic("all-reduce", 100, 16) == pytest.approx(2 * 15 / 16 * 100)
+    assert _traffic("all-gather", 100, 4) == pytest.approx(0.75 * 100)
+    assert _traffic("reduce-scatter", 100, 8) == 700.0
+    assert _traffic("collective-permute", 100, 2) == 100.0
+    assert _traffic("all-reduce", 100, 1) == 0.0
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO)
+    ar = 1024 * 512 * 2
+    assert out["all-reduce"] == ar + 200       # -start counted, -done not
+    assert out["all-gather"] == 64 * 64 * 4
+    assert out["all-to-all"] == 32 * 2
+    assert out["collective-permute"] == 16 * 16 * 4
+    assert out["reduce-scatter"] == 2 * 8 * 8 * 2
+    expected = (2 * 15 / 16 * ar            # ar, S=16
+                + 0.75 * 16384               # ag, S=4
+                + 0.75 * 64                  # aa, S=4
+                + 1024                       # cp
+                + 7 * 256                    # rs, S=8
+                + 2 * 255 / 256 * 200)       # ars, S=256
+    assert out["traffic_weighted"] == pytest.approx(expected)
+
+
+def test_parser_ignores_non_collectives():
+    out = collective_bytes("%d = f32[10,10] dot(%a, %b)\n")
+    assert out["traffic_weighted"] == 0
+
+
+def test_model_flops_train_vs_decode():
+    t = model_flops("tinyllama-1.1b", "train_4k")
+    d = model_flops("tinyllama-1.1b", "decode_32k")
+    assert t == 6.0 * 1100046336 * 256 * 4096
+    assert d == 2.0 * 1100046336 * 128
+    from repro.configs import ARCHS
+    k = model_flops("kimi-k2-1t-a32b", "train_4k")
+    assert k == 6.0 * ARCHS["kimi-k2-1t-a32b"].active_param_count() * 256 * 4096
+
+
+def test_analyze_record_terms():
+    rec = {"arch": "tinyllama-1.1b", "shape": "train_4k",
+           "cost": {"flops": 197e12, "bytes_accessed": 819e9},
+           "collectives": {"traffic_weighted": 50e9}}
+    out = analyze_record(rec, 256)
+    assert abs(out["compute_s"] - 1.0) < 1e-6
+    assert abs(out["memory_s"] - 1.0) < 1e-6
+    assert abs(out["collective_s"] - 1.0) < 1e-6
+    assert out["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,147 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle,
+plus hypothesis property tests on the compression invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention as FA
+from repro.kernels import onebit, qsgd, terngrad, topk
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 64, 4, 4, 32), (2, 64, 4, 2, 32), (1, 128, 8, 1, 64),
+    (2, 96, 4, 2, 64), (1, 256, 2, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = FA.attention(q, k, v, causal=True, block_q=64, block_k=64)
+    ref = FA.attention_ref(q, k, v, causal=True)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out = FA.attention(q, k, v, causal=True, window=window,
+                       block_q=32, block_k=32)
+    ref = FA.attention_ref(q, k, v, causal=True, window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 4, 32))
+    v = jax.random.normal(ks[2], (2, 64, 4, 32))
+    out = FA.attention(q, k, v, causal=False, block_q=32, block_k=32)
+    ref = FA.attention_ref(q, k, v, causal=False)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+# ----------------------------------------------------------- compression
+SHAPES = [(8, 128), (64, 256), (100, 512), (3, 1024)]
+
+
+@pytest.mark.parametrize("R,C", SHAPES)
+def test_onebit_kernel_vs_ref(R, C):
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], (R, C))
+    e = jax.random.normal(ks[1], (R, C)) * 0.3
+    s_k, sc_k, ne_k = onebit.compress(g, e)
+    s_r, sc_r, ne_r = onebit.onebit_ref(g, e)
+    assert jnp.array_equal(s_k, s_r)
+    assert jnp.allclose(sc_k, sc_r, atol=1e-6)
+    assert jnp.allclose(ne_k, ne_r, atol=1e-5)
+
+
+@pytest.mark.parametrize("R,C", SHAPES)
+def test_terngrad_qsgd_kernel_vs_ref(R, C):
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], (R, C))
+    u = jax.random.uniform(ks[1], (R, C))
+    t_k, s_k = terngrad.compress(g, u)
+    t_r, s_r = terngrad.terngrad_ref(g, u)
+    assert jnp.array_equal(t_k, t_r) and jnp.allclose(s_k, s_r)
+    q_k, n_k = qsgd.compress(g, u)
+    q_r, n_r = qsgd.qsgd_ref(g, u)
+    assert jnp.array_equal(q_k, q_r) and jnp.allclose(n_k, n_r)
+
+
+@pytest.mark.parametrize("R,C", SHAPES)
+@pytest.mark.parametrize("density", [0.01, 0.1])
+def test_topk_kernel_vs_ref(R, C, density):
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], (R, C))
+    e = jax.random.normal(ks[1], (R, C)) * 0.1
+    th = topk.threshold_for_density(g, e, density)
+    o_k, ne_k = topk.compress(g, e, th)
+    o_r, ne_r = topk.topk_ref(g, e, th)
+    assert jnp.allclose(o_k, o_r) and jnp.allclose(ne_k, ne_r)
+    kept = float((o_k != 0).mean())
+    assert abs(kept - density) < 0.05
+
+
+def test_pack_unpack_roundtrip():
+    g = jax.random.normal(KEY, (16, 256))
+    e = jnp.zeros_like(g)
+    signs, _, _ = onebit.compress(g, e)
+    words = onebit.pack_bits(signs)
+    assert words.shape == (16, 8)           # 32x fewer words
+    assert jnp.array_equal(onebit.unpack_bits(words, C=256), signs)
+
+
+# --------------------------------------------------- hypothesis properties
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_onebit_error_feedback_telescopes(r, c, seed):
+    """EF invariant: compensated gradient == transmitted + residual exactly,
+    so no information is ever lost across steps (Seide et al.)."""
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (r, c))
+    e = jax.random.normal(jax.random.fold_in(k, 1), (r, c))
+    signs, scale, new_e = onebit.onebit_ref(g, e)
+    recon = signs.astype(jnp.float32) * scale + new_e
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g + e),
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_terngrad_unbiased_support(r, c, seed):
+    """TernGrad values are in {-1,0,1} * s and sign-consistent with g."""
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (r, c))
+    u = jax.random.uniform(jax.random.fold_in(k, 1), (r, c))
+    t, s = terngrad.terngrad_ref(g, u)
+    assert set(np.unique(np.asarray(t))) <= {-1, 0, 1}
+    nz = np.asarray(t) != 0
+    assert np.all(np.sign(np.asarray(t)[nz]) == np.sign(np.asarray(g)[nz]))
+    assert float(s) >= 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 200), st.integers(0, 2**31 - 1),
+       st.sampled_from([3, 15, 127]))
+def test_qsgd_reconstruction_bounded(r, c, seed, levels):
+    """QSGD: |decompressed - g| <= ||g||/s per element (stochastic rounding
+    never moves more than one level)."""
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (r, c))
+    u = jax.random.uniform(jax.random.fold_in(k, 1), (r, c))
+    q, norm = qsgd.qsgd_ref(g, u, levels)
+    recon = qsgd.decompress(q, norm, s_levels=levels)
+    assert np.all(np.abs(np.asarray(recon - g)) <= float(norm) / levels + 1e-5)

@@ -1,0 +1,58 @@
+"""Optimizer substrate tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import Adafactor, Adam, AdamW, SGD, cosine_warmup
+
+KEY = jax.random.PRNGKey(0)
+A = jax.random.normal(KEY, (12, 12))
+A = A @ A.T / 12 + jnp.eye(12)       # SPD quadratic
+
+
+def _run(opt, steps=200, lr=0.05):
+    params = {"x": jax.random.normal(jax.random.fold_in(KEY, 1), (12,))}
+
+    @jax.jit
+    def step(p, s):
+        def loss(pp):
+            return 0.5 * pp["x"] @ A @ pp["x"]
+        l, g = jax.value_and_grad(loss)(p)
+        p2, s2 = opt.step(p, g, s, lr)
+        return p2, s2, l
+
+    state = opt.init(params)
+    l0 = None
+    for _ in range(steps):
+        params, state, l = step(params, state)
+        l0 = l if l0 is None else l0
+    return float(l0), float(l)
+
+
+@pytest.mark.parametrize("opt,lr", [
+    (SGD(momentum=0.0), 0.1), (SGD(momentum=0.9), 0.05),
+    (SGD(momentum=0.9, nesterov=True), 0.05),
+    (Adam(), 0.05), (AdamW(0.001), 0.05), (Adafactor(), 0.2),
+])
+def test_optimizers_descend_quadratic(opt, lr):
+    l0, lT = _run(opt, lr=lr)
+    assert lT < l0 * 0.05, type(opt).__name__
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    st = Adafactor().init(params)
+    assert st["f"]["w"]["vr"].shape == (64,)
+    assert st["f"]["w"]["vc"].shape == (32,)
+    assert st["f"]["b"]["v"].shape == (32,)
+    full = 64 * 32
+    fact = 64 + 32
+    assert fact < full / 10
+
+
+def test_cosine_warmup_shape():
+    s = cosine_warmup(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < 0.2
+    assert float(s(55)) < float(s(20))

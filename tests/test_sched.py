@@ -1,0 +1,53 @@
+"""Multi-tenant scheduler simulator invariants (survey §3.4)."""
+import pytest
+
+from repro.sched import Cluster, POLICIES, make_trace, simulate
+
+
+def loaded_trace():
+    # many jobs, short interarrival -> real queueing
+    return make_trace(60, 16, seed=3, mean_interarrival=10.0)
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_all_jobs_finish(policy):
+    jobs = loaded_trace()
+    r = simulate(jobs, Cluster(n_nodes=2, gpus_per_node=8), policy=policy)
+    assert r.makespan > 0
+    assert r.avg_jct < float("inf")
+
+
+def test_srtf_beats_fifo_on_jct():
+    jobs = loaded_trace()
+    fifo = simulate(jobs, Cluster(n_nodes=2, gpus_per_node=8), policy="fifo")
+    srtf = simulate(jobs, Cluster(n_nodes=2, gpus_per_node=8), policy="srtf")
+    assert srtf.avg_jct <= fifo.avg_jct * 1.05
+
+
+def test_gandiva_timeslicing_improves_t90():
+    """Time slicing lets more jobs make early progress (where DL loss
+    curves earn the most) — Gandiva's motivation."""
+    jobs = loaded_trace()
+    base = simulate(jobs, Cluster(n_nodes=2, gpus_per_node=8), policy="fifo")
+    gand = simulate(jobs, Cluster(n_nodes=2, gpus_per_node=8), policy="fifo",
+                    gandiva=True)
+    assert gand.mean_t90 <= base.mean_t90 * 1.10
+
+
+def test_locality_penalty_applied():
+    c = Cluster(n_nodes=2, gpus_per_node=4, cross_node_penalty=1.5)
+    assert c.try_alloc(0, 2) == 1.0          # fits one node
+    assert c.try_alloc(1, 6) == 1.5          # must spread across nodes
+    assert c.try_alloc(2, 1) is None         # cluster full
+    c.release(0)
+    c.release(1)
+    assert c.free_gpus == 8
+
+
+def test_job_loss_curve_monotone():
+    jobs = make_trace(5, 8, seed=0)
+    j = jobs[0]
+    losses = [j.loss_at(e) for e in range(10)]
+    assert all(a >= b for a, b in zip(losses, losses[1:]))
+    # diminishing returns: first epoch improves more than the ninth
+    assert (losses[0] - losses[1]) > (losses[8] - losses[9])

@@ -1,0 +1,84 @@
+"""Sharding-rule consistency: every sharded dim divides its mesh axis for
+every (arch x shape) — catches partition misconfig without compiling."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, SKIPS
+from repro.core.parallelism import param_specs
+from repro.launch.specs import (cache_specs, decode_window,
+                                train_input_specs, VOCAB_PAD)
+from repro.models import build_model
+
+AXIS = {"data": 16, "model": 16, "pod": 2}
+
+
+def _check(spec, shape, where):
+    assert len(tuple(spec)) == len(shape), (where, spec, shape)
+    for dim, ax in zip(shape, tuple(spec)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= AXIS[a]
+        assert dim % n == 0, f"{where}: dim {dim} not divisible by {ax}={n}"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divisible(arch):
+    cfg = ARCHS[arch]
+    model = build_model(cfg)
+    shapes = jax.eval_shape(
+        lambda k: model.init(k, dtype=jnp.bfloat16,
+                             vocab_pad_multiple=VOCAB_PAD),
+        jax.random.PRNGKey(0))
+    specs = param_specs(shapes)
+    flat_s, _ = jax.tree.flatten(shapes)
+    flat_p = jax.tree.structure(shapes).flatten_up_to(specs)
+    for s, sp in zip(flat_s, flat_p):
+        _check(sp, s.shape, arch)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    if (arch, shape_name) in SKIPS:
+        pytest.skip(SKIPS[(arch, shape_name)])
+    cfg = ARCHS[arch]
+    shape = INPUT_SHAPES[shape_name]
+    model = build_model(cfg)
+    window = decode_window(cfg, shape)
+    if cfg.is_encoder_decoder:
+        c_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     dtype=jnp.bfloat16))
+    else:
+        c_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     dtype=jnp.bfloat16,
+                                     window_override=window))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+
+    specs = cache_specs(c_shapes, FakeMesh, False,
+                        shape.global_batch % 16 == 0)
+    flat_s = jax.tree.leaves(c_shapes)
+    flat_p = jax.tree.structure(c_shapes).flatten_up_to(specs)
+    for s, sp in zip(flat_s, flat_p):
+        _check(sp, s.shape, f"{arch}/{shape_name}")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_input_specs_complete(arch):
+    cfg = ARCHS[arch]
+    specs = train_input_specs(cfg, INPUT_SHAPES["train_4k"])
+    assert "tokens" in specs and "labels" in specs
+    if cfg.is_encoder_decoder:
+        assert specs["frames"].shape == (256, 1500, cfg.d_model)
+    if cfg.family == "vlm":
+        assert "vision_embeds" in specs and "positions" in specs

@@ -1,0 +1,73 @@
+"""Synchronization-model tests (survey Table 1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Compressor, SyncConfig, SyncEngine
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+
+
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+
+
+P0 = {"W": jnp.zeros((8, 1))}
+
+
+@pytest.mark.parametrize("mode", ["bsp", "ssp", "asp", "sma"])
+def test_all_modes_converge(mode):
+    eng = SyncEngine(SyncConfig(mode=mode, num_workers=4, lr=0.05),
+                     grad_fn)
+    _, hist, _ = eng.run(P0, make_batch, 25)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.5, mode
+
+
+def test_ssp_staleness_bounded():
+    s = 2
+    eng = SyncEngine(SyncConfig(mode="ssp", num_workers=4, staleness=s,
+                                lr=0.05, periods=(1, 2, 3, 5)), grad_fn)
+    _, hist, _ = eng.run(P0, make_batch, 15)
+    # SSP clock-bound invariant: no gradient from a worker more than
+    # (bound+1) * num_workers versions behind (loose but monotone check)
+    max_stale = max(h["max_staleness"] for h in hist)
+    eng_asp = SyncEngine(SyncConfig(mode="asp", num_workers=4, lr=0.05,
+                                    periods=(1, 2, 3, 5)), grad_fn)
+    _, hist_asp, _ = eng_asp.run(P0, make_batch, 15)
+    max_stale_asp = max(h["max_staleness"] for h in hist_asp)
+    assert max_stale <= max_stale_asp   # the bound can only reduce staleness
+
+
+def test_asp_has_staleness_with_heterogeneous_workers():
+    eng = SyncEngine(SyncConfig(mode="asp", num_workers=4, lr=0.05,
+                                periods=(1, 3, 5, 7)), grad_fn)
+    _, hist, _ = eng.run(P0, make_batch, 15)
+    assert max(h["max_staleness"] for h in hist) > 0
+
+
+def test_bsp_no_staleness():
+    eng = SyncEngine(SyncConfig(mode="bsp", num_workers=4, lr=0.05), grad_fn)
+    _, hist, _ = eng.run(P0, make_batch, 10)
+    assert all(h["max_staleness"] == 0 for h in hist)
+
+
+@pytest.mark.parametrize("method", ["onebit", "qsgd", "dgc"])
+def test_bsp_with_compression_converges(method):
+    eng = SyncEngine(SyncConfig(mode="bsp", num_workers=2, lr=0.05,
+                                compressor=Compressor(method, density=0.1)),
+                     grad_fn)
+    _, hist, wire = eng.run(P0, make_batch, 40)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.7, method
+    eng0 = SyncEngine(SyncConfig(mode="bsp", num_workers=2, lr=0.05), grad_fn)
+    _, _, wire0 = eng0.run(P0, make_batch, 40)
+    assert wire < wire0
