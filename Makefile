@@ -1,0 +1,27 @@
+# Test entry points.  `make smoke` is the fast inner-loop subset (no
+# multi-device subprocesses, no end-to-end transformer training); `make
+# tier1` is the full suite ROADMAP.md names as the verify gate.  The
+# subprocess-heavy tests spawn children with
+# --xla_force_host_platform_device_count and are bounded by `timeout`.
+PYTEST := env PYTHONPATH=src timeout
+
+SMOKE_TIMEOUT ?= 300
+TIER1_TIMEOUT ?= 900
+
+.PHONY: smoke tier1 bench
+
+# Fast subset: pure-host unit tests (collectives shim units, compression,
+# schedulers, configs, models). ~1 min.
+smoke:
+	$(PYTEST) $(SMOKE_TIMEOUT) python -m pytest -q -x \
+	    tests/test_compression.py tests/test_comm_scheduler.py \
+	    tests/test_configs.py tests/test_specs.py tests/test_sched.py \
+	    tests/test_data_parallel.py -k "not 8dev"
+
+# Full tier-1 verify (ROADMAP.md): everything, including the 8-virtual-
+# device subprocess tests and end-to-end training compositions.
+tier1:
+	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
+
+bench:
+	env PYTHONPATH=src python -m benchmarks.run

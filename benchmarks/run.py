@@ -19,6 +19,7 @@ BENCHES = [
     ("architecture", "benchmarks.architecture_bench"),  # §3.3.1(1) vs (2)
     ("federated", "benchmarks.federated_bench"),        # §3.3.1(3)
     ("comm_schedule", "benchmarks.comm_schedule_bench"),  # §3.3.3(3)
+    ("data_parallel", "benchmarks.data_parallel_bench"),  # §3.3 executable
     ("scheduler", "benchmarks.scheduler_bench"),        # §3.4.2
     ("kernel", "benchmarks.kernel_bench"),              # §3.3.3 hot spots
 ]

@@ -15,6 +15,7 @@ import jax.numpy as jnp                           # noqa: E402
 import numpy as np                                # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
+from repro.core.collectives import shard_map                   # noqa: E402
 from repro.core.pipeline import bubble_fraction, gpipe_forward  # noqa: E402
 
 
@@ -30,7 +31,7 @@ def main():
 
     for n_micro in (1, 4, 16):
         xm = jax.random.normal(key, (n_micro, 8, d))
-        f = jax.shard_map(
+        f = shard_map(
             lambda w, x: gpipe_forward(stage_fn, w[0], x, "stage")[None],
             mesh=mesh, in_specs=(P("stage"), P(None)), out_specs=P("stage"),
             check_vma=False)

@@ -4,23 +4,56 @@ schedule, checkpointing every N steps, and a final registry entry.
 
   PYTHONPATH=src python examples/train_100m_e2e.py --steps 300
 (CPU: ~1-4 s/step at the default batch; use --steps 30 for a quick pass.)
+
+Device-sharded data parallelism (PR 1): ``--workers 8`` re-execs with 8
+virtual host devices and runs the same train step under shard_map with a
+TicTac-ordered bucketed ring allreduce; ``--compress onebit|dgc`` adds
+per-worker error-feedback gradient compression on the wire.
+
+  PYTHONPATH=src python examples/train_100m_e2e.py \
+      --steps 30 --workers 8 --compress onebit
 """
 import argparse
 import dataclasses
 import json
 import os
+import sys
 import time
 
-import jax
 
-from repro.checkpoint import ModelRegistry, save_checkpoint
-from repro.configs import get_config
-from repro.core.precision import PrecisionPolicy
-from repro.data import LMDataConfig, make_lm_batches
-from repro.models import build_model
-from repro.optim import AdamW
-from repro.optim.schedule import cosine_warmup
-from repro.train import TrainState, make_train_step, train_loop
+def _maybe_reexec_with_devices():
+    """Virtual host devices must be configured before jax import."""
+    if "--workers" not in " ".join(sys.argv):
+        return
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--workers", type=int, default=1)
+    n = ap.parse_known_args()[0].workers
+    if n > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+
+
+_maybe_reexec_with_devices()
+
+import jax                                        # noqa: E402
+import jax.numpy as jnp                           # noqa: E402
+import numpy as np                                # noqa: E402
+from jax.sharding import Mesh                     # noqa: E402
+
+from repro.checkpoint import ModelRegistry, save_checkpoint   # noqa: E402
+from repro.configs import get_config              # noqa: E402
+from repro.core import Compressor                 # noqa: E402
+from repro.core.precision import PrecisionPolicy  # noqa: E402
+from repro.data import LMDataConfig, make_lm_batches  # noqa: E402
+from repro.models import build_model              # noqa: E402
+from repro.optim import AdamW                     # noqa: E402
+from repro.optim.schedule import cosine_warmup    # noqa: E402
+from repro.train import (TrainState, make_train_step, train_loop,  # noqa: E402
+                         make_bucketed_allreduce, make_sharded_train_step)
+from repro.train.data_parallel import AXIS        # noqa: E402
 
 
 def main():
@@ -29,6 +62,11 @@ def main():
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="data-parallel workers on virtual host devices")
+    ap.add_argument("--compress", default="none",
+                    choices=("none", "onebit", "dgc"),
+                    help="gradient compression on the allreduce wire")
     ap.add_argument("--out", default="results/train_100m")
     args = ap.parse_args()
 
@@ -46,15 +84,46 @@ def main():
     batches = make_lm_batches(data)
 
     opt = AdamW(0.01)
-    step = make_train_step(
-        model.loss_fn, opt, cosine_warmup(args.lr, 20, args.steps),
-        precision=PrecisionPolicy(compute_dtype="float32"))
-    state = TrainState.create(params, opt)
+    compressor = Compressor(args.compress, density=0.05)
+    K = args.workers
 
     os.makedirs(args.out, exist_ok=True)
     t0 = time.time()
-    state, hist = train_loop(step, state, lambda t: batches(t, 0),
-                             args.steps, log_every=10)
+    if K > 1:
+        reduce_fn = make_bucketed_allreduce(params, topology="ring",
+                                            bucket_mb=4.0, order="tictac")
+        step = make_train_step(
+            model.loss_fn, opt, cosine_warmup(args.lr, 20, args.steps),
+            precision=PrecisionPolicy(compute_dtype="float32"),
+            compressor=compressor, reduce_fn=reduce_fn)
+        state = TrainState.create(params, opt, compressor)
+        if state["ef"] is not None:     # per-worker error-feedback state
+            state["ef"] = jax.tree.map(
+                lambda x: jnp.zeros((K,) + x.shape, x.dtype), state["ef"])
+        if len(jax.devices()) < K:      # e.g. caller pre-set XLA_FLAGS low
+            raise SystemExit(
+                f"need {K} devices, have {len(jax.devices())}; unset "
+                "XLA_FLAGS or set --xla_force_host_platform_device_count")
+        mesh = Mesh(np.array(jax.devices()[:K]), (AXIS,))
+        sharded = make_sharded_train_step(step, mesh,
+                                          compressed=state["ef"] is not None)
+        print(f"data-parallel: {K} workers, compress={args.compress}, "
+              f"{len(reduce_fn.fused_layers)} buckets (tictac order)")
+
+        def stacked_batch(t):
+            per = [batches(t, w) for w in range(K)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+        state, hist = train_loop(sharded, state, stacked_batch,
+                                 args.steps, log_every=10, jit=False)
+    else:
+        step = make_train_step(
+            model.loss_fn, opt, cosine_warmup(args.lr, 20, args.steps),
+            precision=PrecisionPolicy(compute_dtype="float32"),
+            compressor=compressor)
+        state = TrainState.create(params, opt, compressor)
+        state, hist = train_loop(step, state, lambda t: batches(t, 0),
+                                 args.steps, log_every=10)
     wall = time.time() - t0
     with open(os.path.join(args.out, "history.json"), "w") as f:
         json.dump(hist, f, indent=1)

@@ -25,11 +25,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.collectives import axis_size
+
 
 # ------------------------------------------------------------------ schedules
 def ring_allreduce(x, axis_name: str):
     """Bandwidth-optimal ring: reduce-scatter then all-gather, 2(n-1) steps."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     me = lax.axis_index(axis_name)
@@ -58,7 +60,7 @@ def ring_allreduce(x, axis_name: str):
 
 def butterfly_allreduce(x, axis_name: str):
     """Recursive doubling: log2(n) exchange-and-add rounds (n power of 2)."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     assert n & (n - 1) == 0, "butterfly requires power-of-two workers"
@@ -72,7 +74,7 @@ def butterfly_allreduce(x, axis_name: str):
 
 def tree_allreduce(x, axis_name: str):
     """Binomial tree: reduce to rank 0, then broadcast back down."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     me = lax.axis_index(axis_name)
@@ -141,7 +143,7 @@ def make_allreduce(topology: str, axis_name: str, mean: bool = True):
         def one(x):
             y = fn(x, axis_name)
             if mean:
-                y = y / lax.axis_size(axis_name)
+                y = y / axis_size(axis_name)
             return y.astype(x.dtype)
         return jax.tree.map(one, tree)
 

@@ -1,0 +1,75 @@
+"""Version-portable ``shard_map`` (and friends) for the jax releases we
+support.
+
+jax has moved ``shard_map`` twice:
+
+  * jax < 0.4.30           : ``jax.experimental.shard_map.shard_map``
+    (kwarg ``check_rep``)
+  * 0.4.30 <= jax < 0.5    : same entry point, still ``check_rep``
+  * jax >= 0.5 / 0.6       : promoted to ``jax.shard_map``; the replication
+    check was renamed ``check_vma`` (varying-manual-axes)
+
+Call sites in this repo were written against the *new* spelling
+(``jax.shard_map(..., check_vma=...)``), which does not exist on the
+installed jax 0.4.37 — every multi-device test and benchmark broke.  This
+shim resolves the entry point once, translates ``check_vma``/``check_rep``
+into whatever the resolved function actually accepts, and is the single
+``shard_map`` used everywhere in the repo (core, examples, benchmarks,
+tests).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional
+
+import jax
+
+__all__ = ["shard_map", "resolve_shard_map", "axis_size"]
+
+
+def axis_size(axis_name: str):
+    """``lax.axis_size`` appeared after jax 0.4.37.  ``psum(1, axis)`` is
+    the portable spelling: jax constant-folds a literal psum to the static
+    axis size on every release we support."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def resolve_shard_map() -> tuple[Callable, str]:
+    """Return (shard_map_fn, dotted_origin).  Resolution order: the promoted
+    ``jax.shard_map`` if this jax has it, else the experimental module."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "jax.shard_map"
+    from jax.experimental.shard_map import shard_map as exp_fn
+    return exp_fn, "jax.experimental.shard_map.shard_map"
+
+
+def _replication_check_kwarg(fn: Callable) -> Optional[str]:
+    """Which kwarg (if any) the resolved shard_map uses for its replication
+    check: 'check_vma' (new), 'check_rep' (old), or None (unknown API)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C accelerated: assume new
+        return "check_vma"
+    if "check_vma" in params:
+        return "check_vma"
+    if "check_rep" in params:
+        return "check_rep"
+    return None
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None, **kwargs):
+    """Drop-in ``shard_map`` that accepts either ``check_vma`` (jax >= 0.5
+    spelling) or ``check_rep`` (jax < 0.5 spelling) and forwards whichever
+    the installed jax understands."""
+    fn, _ = resolve_shard_map()
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        target = _replication_check_kwarg(fn)
+        if target is not None:
+            kwargs[target] = flag
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

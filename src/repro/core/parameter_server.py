@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.collectives import axis_size
+
 
 def _pad_to(x, n):
     flat = x.reshape(-1)
@@ -34,7 +36,7 @@ def _pad_to(x, n):
 
 def push_reduce_scatter(g, axis_name: str):
     """Gradient pytree -> my shard of the summed gradient (flat per leaf)."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
 
     def one(x):
         flat, _ = _pad_to(x, n)
@@ -58,7 +60,7 @@ def make_ps_step(update_fn: Callable, axis_name: str):
     Returns ps_step(params, grads, opt_state) to be used inside shard_map:
     each worker plays parameter-server for its 1/n shard."""
     def ps_step(params, grads, opt_state):
-        n = lax.axis_size(axis_name)
+        n = axis_size(axis_name)
         g_shards = push_reduce_scatter(grads, axis_name)
         p_shards = jax.tree.map(
             lambda x: _shard_of(x, axis_name, n), params)

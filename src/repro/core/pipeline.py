@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.collectives import axis_size
+
 
 def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
     """Run inside shard_map over ``axis_name``.
@@ -28,7 +30,7 @@ def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
     Returns [n_micro, mb, ...]: outputs (nonzero only on the last stage —
     psum over the axis to broadcast if needed).
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     n_micro = x_micro.shape[0]
     mb_shape = x_micro.shape[1:]

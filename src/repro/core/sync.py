@@ -58,7 +58,10 @@ class SyncEngine:
     def _run_bsp(self, params, batches, steps):
         K = self.cfg.num_workers
         hist = []
-        comp_states = [self.cfg.compressor.init_state(params)] * K
+        # one independent EF state per worker (not K aliases of one tree):
+        # each worker's residual tracks what *it* failed to transmit
+        comp_states = [self.cfg.compressor.init_state(params)
+                       for _ in range(K)]
         rng = jax.random.PRNGKey(self.cfg.seed)
         wire_total = 0
         for t in range(steps):
@@ -91,7 +94,8 @@ class SyncEngine:
         pulled_ver = [0] * K
         server_ver = 0
         hist = []
-        comp_states = [self.cfg.compressor.init_state(params)] * K
+        comp_states = [self.cfg.compressor.init_state(params)
+                       for _ in range(K)]
         rng = jax.random.PRNGKey(self.cfg.seed)
         wire_total = 0
         tick = 0

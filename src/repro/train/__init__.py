@@ -1,3 +1,9 @@
+from repro.train.data_parallel import (DataParallelConfig,
+                                       DataParallelEngine,
+                                       make_bucketed_allreduce,
+                                       make_sharded_train_step)
 from repro.train.train_loop import TrainState, make_train_step, train_loop
 
-__all__ = ["TrainState", "make_train_step", "train_loop"]
+__all__ = ["TrainState", "make_train_step", "train_loop",
+           "DataParallelConfig", "DataParallelEngine",
+           "make_bucketed_allreduce", "make_sharded_train_step"]

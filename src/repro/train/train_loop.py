@@ -34,8 +34,13 @@ class TrainState:
 def make_train_step(loss_fn: Callable, opt, lr_schedule=None,
                     precision: PrecisionPolicy = DEFAULT,
                     compressor: Optional[Compressor] = None,
-                    remat: bool = False):
+                    remat: bool = False,
+                    reduce_fn: Optional[Callable] = None):
     """loss_fn(params, batch, compute_dtype) -> (loss, metrics).
+
+    ``reduce_fn(grads) -> grads`` runs after compression roundtrip — a
+    data-parallel caller passes the bucketed topology allreduce here (the
+    step is then used inside ``shard_map``; see train/data_parallel.py).
 
     Returns train_step(state, batch, rng) -> (state, metrics)."""
     lr_schedule = lr_schedule or constant(1e-3)
@@ -53,6 +58,8 @@ def make_train_step(loss_fn: Callable, opt, lr_schedule=None,
         if compressor is not None and compressor.method != "none":
             grads, ef, wire_py = compressor.roundtrip(grads, ef, rng)
             wire = jnp.int32(wire_py % (2**31 - 1))
+        if reduce_fn is not None:
+            grads = reduce_fn(grads)
         lr = lr_schedule(state["step"])
         params, opt_state = opt.step(state["params"], grads,
                                      state["opt_state"], lr)

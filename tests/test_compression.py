@@ -76,6 +76,64 @@ def test_kernel_path_matches_ref_path(method):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+def test_onebit_silent_channel_gets_no_noise():
+    """A channel row that produced no gradient (and has no residual) must
+    reconstruct to exactly zero — the seed's flat-lane layout leaked
+    +/- scale noise from unrelated channels into it."""
+    comp = Compressor("onebit")
+    g = {"embed": jnp.zeros((16, 128)).at[3].set(
+        jax.random.normal(KEY, (128,)))}
+    st = comp.init_state(g)
+    out, st2, _ = comp.roundtrip(g, st)
+    silent = jnp.asarray(out["embed"]).copy()
+    silent = np.delete(np.asarray(silent), 3, axis=0)
+    assert np.all(silent == 0.0), "silent channels must stay silent"
+    assert float(jnp.abs(out["embed"][3]).sum()) > 0
+
+
+def test_onebit_two_bin_reconstruction_is_asymmetric():
+    """Seide-style decode: each sign bin decodes to its own bin mean, so a
+    skewed row reconstructs with different + and - magnitudes."""
+    comp = Compressor("onebit")
+    row = jnp.concatenate([jnp.full((96,), 4.0), jnp.full((32,), -0.5)])
+    g = {"w": jnp.tile(row, (2, 1))}          # (2, 128): channelwise path
+    out, _, _ = comp.roundtrip(g, comp.init_state(g))
+    vals = np.unique(np.round(np.asarray(out["w"]), 5))
+    assert len(vals) == 2
+    assert abs(vals.max() - 4.0) < 1e-4      # + bin mean
+    assert abs(vals.min() + 0.5) < 1e-4      # - bin mean
+
+
+def test_ef_gain_preserves_telescoping():
+    """The over-relaxed residual repayment must not break the EF
+    bookkeeping: sent + residual == raw for any gain."""
+    for gain in (1.0, 2.0, 3.0):
+        comp = Compressor("onebit", ef_gain=gain)
+        g0 = _grads()
+        st = comp.init_state(g0)
+        acc = jax.tree.map(jnp.zeros_like, g0)
+        raw = jax.tree.map(jnp.zeros_like, g0)
+        for t in range(4):
+            g = jax.tree.map(lambda x: x * (0.5 + t), g0)
+            out, st, _ = comp.roundtrip(g, st)
+            acc = jax.tree.map(jnp.add, acc, out)
+            raw = jax.tree.map(jnp.add, raw, g)
+        tot = jax.tree.map(lambda s, e: s + e, acc, st)
+        for a, b in zip(jax.tree.leaves(tot), jax.tree.leaves(raw)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)
+
+
+def test_dgc_threshold_ignores_lane_padding():
+    """Quantile threshold must come from the real values only; the padded
+    256-lane layout used to dilute it with zeros and over-transmit."""
+    comp = Compressor("dgc", density=0.1)
+    g = {"w": jax.random.normal(KEY, (10,))}   # 10 real + 246 pad zeros
+    out, _, _ = comp.roundtrip(g, comp.init_state(g))
+    nz = int(jnp.sum(out["w"] != 0.0))
+    assert nz <= 2, f"10%% of 10 values is 1, sent {nz}"
+
+
 def test_direction_preserved():
     """All compressors keep a positive cosine with the raw gradient."""
     g = _grads()
