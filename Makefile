@@ -8,7 +8,7 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench
+.PHONY: smoke tier1 bench strategies
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -18,9 +18,16 @@ smoke:
 	    tests/test_configs.py tests/test_specs.py tests/test_sched.py \
 	    tests/test_data_parallel.py -k "not 8dev"
 
-# Full tier-1 verify (ROADMAP.md): everything, including the 8-virtual-
-# device subprocess tests and end-to-end training compositions.
-tier1:
+# Strategy-matrix gate: every registered (sync x arch x compression) cell
+# runs 2 steps on 2 virtual devices (see docs/strategies.md); fails if a
+# registered cell is untested or broken.
+strategies:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/strategy_smoke.py
+
+# Full tier-1 verify (ROADMAP.md): the strategy-matrix gate plus
+# everything in tests/, including the 8-virtual-device subprocess tests
+# and end-to-end training compositions.
+tier1: strategies
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

@@ -1,8 +1,9 @@
 """Shared benchmark helpers: a small real transformer + timing utils."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,3 +45,10 @@ def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def emit(rows: List[Tuple]):
     for r in rows:
         print(",".join(str(x) for x in r), flush=True)
+
+
+def emit_json(rows: List[Dict]):
+    """One JSON object per line — the format BENCH_*.json files collect
+    when a benchmark reports a keyed matrix rather than a flat CSV."""
+    for r in rows:
+        print(json.dumps(r, sort_keys=True), flush=True)

@@ -1,31 +1,44 @@
-"""PR 1 tentpole benchmark: device-sharded data parallelism (§3.3).
+"""Strategy-matrix benchmark: device-sharded data parallelism (§3.3).
 
-Reports, for the executable ``DataParallelEngine`` bucket plan on a real
-(reduced) transformer:
+Every cell is a declarative ``Strategy`` spec string and yields one JSON
+row, so ``BENCH_*.json`` files track the full sync × arch × compression
+matrix rather than just bsp/allreduce:
 
-  * modeled iteration time: no-overlap vs TicTac-ordered bucketed overlap
-    (same ``comm_scheduler`` code path the engine executes), and
-  * measured wire bytes per step for fp32 vs onebit vs dgc through the
-    sharded step, asserted equal to the compressor's ``wire_bytes()``
-    accounting.
+  PYTHONPATH=src python -m benchmarks.data_parallel_bench            # default matrix
+  PYTHONPATH=src python -m benchmarks.data_parallel_bench ssp:2/ps/onebit@8 ...
 
-The 8-device measurement runs in a subprocess with virtual host devices.
+Per cell, on a real (reduced) transformer on 8 virtual host devices:
+
+  * measured wire bytes (asserted equal to the compressor's own
+    ``roundtrip`` accounting — identical for both architectures), and
+  * the modeled iteration time for the executed bucket plan: no-overlap
+    vs TicTac-ordered bucketed overlap (the same ``comm_scheduler`` code
+    path the engine executes).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit_json
+
+DEFAULT_SPECS = [
+    "bsp/allreduce/none@8", "bsp/allreduce/onebit@8",
+    "bsp/allreduce/dgc:0.05@8",
+    "bsp/ps/none@8", "bsp/ps/onebit@8", "bsp/ps/dgc:0.05@8",
+    "ssp:3/allreduce/onebit@8", "ssp:3/ps/onebit@8",
+    "asp/allreduce/none@8", "asp/ps/none@8",
+]
 
 _CHILD = r"""
+import json, sys
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
-from repro.core import Compressor
 from repro.data import LMDataConfig, make_lm_batches
 from repro.models import build_model
-from repro.train import DataParallelConfig, DataParallelEngine
+from repro.train import Strategy
 
 cfg = get_config("tinyllama-1.1b").reduced()
 model = build_model(cfg)
@@ -38,46 +51,58 @@ def grad_fn(p, batch):
         has_aux=True)(p)
     return loss, g
 
-for method in ("none", "onebit", "dgc"):
-    eng = DataParallelEngine(
-        DataParallelConfig(num_workers=8, lr=0.01, bucket_mb=0.25,
-                           compressor=Compressor(method, density=0.05)),
-        grad_fn)
-    _, hist, wire = eng.run(params, batches, 2)
-    expect = eng.wire_bytes_per_step(params) * 2
-    assert wire == expect, (method, wire, expect)
-    tl = eng.modeled_timeline(params)
-    print(f"ROW {method} {wire//2} {tl['no_overlap_s']*1e6:.2f} "
-          f"{tl['overlap_s']*1e6:.2f} {tl['n_buckets']} "
-          f"{hist[-1]['loss']:.4f}")
-assert True
+STEPS = 2
+for spec in sys.argv[1:]:
+    strat = Strategy.parse(spec, lr=0.01, bucket_mb=0.25, backend="device")
+    engine = strat.build(grad_fn)
+    _, hist, wire = engine.run(params, batches, STEPS)
+    dev = engine.inner
+    # wire accounting: every event transmits the compressor's static
+    # per-worker byte count (bsp: all K workers per step)
+    per_event = dev.per_event_wire_bytes(params)
+    events = len(hist) * (strat.workers if strat.sync == "bsp" else 1)
+    assert wire == per_event * events, (spec, wire, per_event, events)
+    row = {
+        "bench": "data_parallel",
+        "strategy": strat.spec(),
+        "sync": strat.sync, "arch": strat.arch,
+        "compression": strat.compressor.method,
+        "workers": strat.workers,
+        "wire_bytes_per_step": wire // STEPS,
+        "events": len(hist),
+        "loss_last": round(hist[-1]["loss"], 4),
+    }
+    if strat.sync == "bsp":
+        # only BSP executes the fused-bucket plan the timeline models;
+        # async pushes are per-event, so the columns would be fiction there
+        tl = dev.modeled_timeline(params)
+        assert tl["overlap_s"] <= tl["no_overlap_s"], spec
+        row.update(
+            modeled_no_overlap_us=round(tl["no_overlap_s"] * 1e6, 2),
+            modeled_tictac_overlap_us=round(tl["overlap_s"] * 1e6, 2),
+            n_buckets=tl["n_buckets"])
+    print("ROW " + json.dumps(row))
 print("WIRE-ACCOUNTING-MATCHES")
 """
 
 
-def main():
+def main(specs=None):
+    specs = specs or DEFAULT_SPECS
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.path.join(repo, "src")
-    res = subprocess.run([sys.executable, "-c", _CHILD], env=env,
-                         capture_output=True, text=True, timeout=600)
+    res = subprocess.run([sys.executable, "-c", _CHILD] + list(specs),
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
     if "WIRE-ACCOUNTING-MATCHES" not in res.stdout:
         sys.stderr.write(res.stdout + "\n" + res.stderr[-3000:])
         raise RuntimeError("data_parallel child failed")
-    rows = [("data_parallel.method", "wire_bytes_per_step",
-             "modeled_no_overlap_us", "modeled_tictac_overlap_us",
-             "n_buckets", "loss_after_2")]
-    for line in res.stdout.splitlines():
-        if line.startswith("ROW "):
-            _, method, wire, no_ov, ov, nb, loss = line.split()
-            assert float(ov) <= float(no_ov), (method, ov, no_ov)
-            rows.append((f"data_parallel.{method}", wire, no_ov, ov, nb,
-                         loss))
-    rows.append(("data_parallel.wire_accounting", "exact-match", "", "", "",
-                 ""))
-    emit(rows)
+    rows = [json.loads(line[4:]) for line in res.stdout.splitlines()
+            if line.startswith("ROW ")]
+    assert len(rows) == len(specs), (len(rows), len(specs))
+    emit_json(rows)
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -7,7 +7,7 @@ categorizes.
 """
 from __future__ import annotations
 
-from repro.core import SyncConfig, SyncEngine
+from repro.train import Strategy
 
 from benchmarks.common import emit, small_lm
 
@@ -21,8 +21,8 @@ def main(steps: int = STEPS):
     rows = [("table1_sync.mode", "final_loss", "max_staleness,events")]
     for mode, kw in [("bsp", {}), ("ssp", dict(staleness=1)),
                      ("ssp", dict(staleness=4)), ("asp", {}), ("sma", {})]:
-        eng = SyncEngine(SyncConfig(mode=mode, num_workers=WORKERS, lr=0.02,
-                                    periods=PERIODS, **kw), grad_fn)
+        eng = Strategy(sync=mode, workers=WORKERS, lr=0.02,
+                       periods=PERIODS, backend="sim", **kw).build(grad_fn)
         _, hist, _ = eng.run(params, batches, steps)
         label = mode if mode != "ssp" else f"ssp(s={kw['staleness']})"
         stale = max(h["max_staleness"] for h in hist)

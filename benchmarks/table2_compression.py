@@ -6,7 +6,8 @@ BSP steps (the accuracy cost) on the same reduced transformer.
 """
 from __future__ import annotations
 
-from repro.core import Compressor, SyncConfig, SyncEngine
+from repro.core import Compressor
+from repro.train import Strategy
 
 from benchmarks.common import emit, small_lm
 
@@ -20,8 +21,8 @@ def main(steps: int = STEPS):
     base_wire = None
     for method in ("none", "onebit", "terngrad", "qsgd", "dgc"):
         comp = Compressor(method, density=0.01)
-        eng = SyncEngine(SyncConfig(mode="bsp", num_workers=2, lr=0.02,
-                                    compressor=comp), grad_fn)
+        eng = Strategy(sync="bsp", workers=2, lr=0.02, compression=comp,
+                       backend="sim").build(grad_fn)
         _, hist, wire = eng.run(params, batches, steps)
         per_step = wire / steps / 2 / 1e6     # per worker per step
         if method == "none":

@@ -5,13 +5,18 @@ schedule, checkpointing every N steps, and a final registry entry.
   PYTHONPATH=src python examples/train_100m_e2e.py --steps 300
 (CPU: ~1-4 s/step at the default batch; use --steps 30 for a quick pass.)
 
-Device-sharded data parallelism (PR 1): ``--workers 8`` re-execs with 8
-virtual host devices and runs the same train step under shard_map with a
-TicTac-ordered bucketed ring allreduce; ``--compress onebit|dgc`` adds
-per-worker error-feedback gradient compression on the wire.
+The parallel-training strategy is one declarative spec string
+(``Strategy.parse``; see docs/strategies.md for the grammar and matrix):
 
-  PYTHONPATH=src python examples/train_100m_e2e.py \
-      --steps 30 --workers 8 --compress onebit
+  --strategy bsp/allreduce/onebit@8   8-worker BSP, TicTac-bucketed ring
+                                      allreduce, 1-bit EF compression,
+                                      AdamW + cosine schedule under
+                                      shard_map (the full trainer path)
+  --strategy bsp/ps/dgc:0.05@8        centralized ZeRO-style PS arch
+  --strategy ssp:3/allreduce/onebit@8 bounded-staleness on devices
+                                      (Strategy engine path, SGD)
+
+Multi-worker specs re-exec with that many virtual host devices.
 """
 import argparse
 import dataclasses
@@ -21,13 +26,17 @@ import sys
 import time
 
 
+def _spec_workers(spec: str) -> int:
+    """Worker count from a strategy spec string, pre-jax-import (the full
+    parse lives in repro.train.strategy, which imports jax)."""
+    return int(spec.rsplit("@", 1)[1]) if "@" in spec else 1
+
+
 def _maybe_reexec_with_devices():
     """Virtual host devices must be configured before jax import."""
-    if "--workers" not in " ".join(sys.argv):
-        return
     ap = argparse.ArgumentParser(add_help=False)
-    ap.add_argument("--workers", type=int, default=1)
-    n = ap.parse_known_args()[0].workers
+    ap.add_argument("--strategy", default="bsp/allreduce/none@1")
+    n = _spec_workers(ap.parse_known_args()[0].strategy)
     if n > 1 and "xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = (
@@ -45,53 +54,28 @@ from jax.sharding import Mesh                     # noqa: E402
 
 from repro.checkpoint import ModelRegistry, save_checkpoint   # noqa: E402
 from repro.configs import get_config              # noqa: E402
-from repro.core import Compressor                 # noqa: E402
 from repro.core.precision import PrecisionPolicy  # noqa: E402
 from repro.data import LMDataConfig, make_lm_batches  # noqa: E402
 from repro.models import build_model              # noqa: E402
 from repro.optim import AdamW                     # noqa: E402
 from repro.optim.schedule import cosine_warmup    # noqa: E402
-from repro.train import (TrainState, make_train_step, train_loop,  # noqa: E402
+from repro.train import (Strategy, Trainer, TrainState,  # noqa: E402
+                         make_train_step, train_loop,
                          make_bucketed_allreduce, make_sharded_train_step)
 from repro.train.data_parallel import AXIS        # noqa: E402
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=6e-4)
-    ap.add_argument("--workers", type=int, default=1,
-                    help="data-parallel workers on virtual host devices")
-    ap.add_argument("--compress", default="none",
-                    choices=("none", "onebit", "dgc"),
-                    help="gradient compression on the allreduce wire")
-    ap.add_argument("--out", default="results/train_100m")
-    args = ap.parse_args()
-
-    # ~100M-param member of the tinyllama (llama2) family
-    cfg = dataclasses.replace(
-        get_config("tinyllama-1.1b"),
-        name="tinyllama-100m", num_layers=10, d_model=640, d_ff=2560,
-        num_heads=10, num_kv_heads=2, head_dim=64, vocab_size=32000)
-    print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
-
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-                        batch_size=args.batch_size)
-    batches = make_lm_batches(data)
-
+def _fit_with_optimizer(strat, model, params, batches, args):
+    """The full trainer path (AdamW + cosine + checkpointable TrainState)
+    for bsp/allreduce specs — compression and worker count come from the
+    strategy; K>1 lifts the step under shard_map."""
     opt = AdamW(0.01)
-    compressor = Compressor(args.compress, density=0.05)
-    K = args.workers
-
-    os.makedirs(args.out, exist_ok=True)
-    t0 = time.time()
+    compressor = strat.compressor
+    K = strat.workers
     if K > 1:
-        reduce_fn = make_bucketed_allreduce(params, topology="ring",
-                                            bucket_mb=4.0, order="tictac")
+        reduce_fn = make_bucketed_allreduce(
+            params, topology=strat.topology, bucket_mb=strat.bucket_mb,
+            order=strat.order)
         step = make_train_step(
             model.loss_fn, opt, cosine_warmup(args.lr, 20, args.steps),
             precision=PrecisionPolicy(compute_dtype="float32"),
@@ -107,8 +91,8 @@ def main():
         mesh = Mesh(np.array(jax.devices()[:K]), (AXIS,))
         sharded = make_sharded_train_step(step, mesh,
                                           compressed=state["ef"] is not None)
-        print(f"data-parallel: {K} workers, compress={args.compress}, "
-              f"{len(reduce_fn.fused_layers)} buckets (tictac order)")
+        print(f"data-parallel: {strat.spec()}, "
+              f"{len(reduce_fn.fused_layers)} buckets ({strat.order} order)")
 
         def stacked_batch(t):
             per = [batches(t, w) for w in range(K)]
@@ -124,14 +108,79 @@ def main():
         state = TrainState.create(params, opt, compressor)
         state, hist = train_loop(step, state, lambda t: batches(t, 0),
                                  args.steps, log_every=10)
+    return state["params"], hist
+
+
+def _fit_with_strategy_engine(strat, model, params, batches, args):
+    """Every other cell (ssp/asp staleness replay, arch=ps, sma) goes
+    through the Strategy engine (SGD at --engine-lr) via Trainer.fit."""
+    def grad_fn(p, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: model.loss_fn(pp, batch, compute_dtype=jnp.float32),
+            has_aux=True)(p)
+        return loss, g
+
+    strat = dataclasses.replace(strat, lr=args.engine_lr)
+    trainer = Trainer(strat)
+    params, hist, mets = trainer.fit(grad_fn, params, batches, args.steps)
+    print(f"strategy engine: {mets['spec']} on {mets['backend']} backend, "
+          f"{mets['wire_bytes']} wire B total")
+    return params, hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--strategy", default="bsp/allreduce/none@1",
+                    help="parallel-training spec: "
+                         "sync[:staleness]/arch/comp[:density]@workers, "
+                         "e.g. bsp/allreduce/onebit@8 (docs/strategies.md)")
+    ap.add_argument("--engine-lr", type=float, default=0.05,
+                    help="SGD lr for non-bsp/allreduce cells, which train "
+                         "through the Strategy engine instead of AdamW")
+    ap.add_argument("--out", default="results/train_100m")
+    args = ap.parse_args()
+    # workers default must agree with the pre-jax re-exec hook, which
+    # reads only the "@N" suffix (no "@N" -> 1 worker, not Strategy's 4)
+    strat = Strategy.parse(args.strategy,
+                           workers=_spec_workers(args.strategy))
+
+    # ~100M-param member of the tinyllama (llama2) family
+    cfg = dataclasses.replace(
+        get_config("tinyllama-1.1b"),
+        name="tinyllama-100m", num_layers=10, d_model=640, d_ff=2560,
+        num_heads=10, num_kv_heads=2, head_dim=64, vocab_size=32000)
+    print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                        batch_size=args.batch_size)
+    batches = make_lm_batches(data)
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    if strat.sync == "bsp" and strat.arch == "allreduce":
+        params, hist = _fit_with_optimizer(strat, model, params, batches,
+                                           args)
+        trainer_used, lr_used = "adamw+cosine", args.lr
+    else:
+        params, hist = _fit_with_strategy_engine(strat, model, params,
+                                                 batches, args)
+        trainer_used, lr_used = "strategy-engine-sgd", args.engine_lr
     wall = time.time() - t0
     with open(os.path.join(args.out, "history.json"), "w") as f:
         json.dump(hist, f, indent=1)
     ck = os.path.join(args.out, "ckpt_final")
-    save_checkpoint(ck, state["params"], step=args.steps)
+    save_checkpoint(ck, params, step=args.steps)
     reg = ModelRegistry(os.path.join(args.out, "registry"))
     reg.register("tinyllama-100m", ck, arch=cfg.name,
-                 hyperparams={"lr": args.lr, "steps": args.steps},
+                 hyperparams={"lr": lr_used, "trainer": trainer_used,
+                              "steps": args.steps,
+                              "strategy": strat.spec()},
                  metrics={"final_loss": hist[-1]["loss"]})
     print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
           f"in {wall:.0f}s ({wall / args.steps:.2f}s/step)")

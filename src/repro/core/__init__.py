@@ -14,6 +14,7 @@ as first-class composable features:
 """
 from repro.core.collectives import shard_map
 from repro.core.compression import Compressor, METHODS
-from repro.core.sync import SyncConfig, SyncEngine
+from repro.core.sync import SimSyncEngine, SyncConfig, SyncEngine
 
-__all__ = ["Compressor", "METHODS", "SyncConfig", "SyncEngine", "shard_map"]
+__all__ = ["Compressor", "METHODS", "SimSyncEngine", "SyncConfig",
+           "SyncEngine", "shard_map"]

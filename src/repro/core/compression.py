@@ -56,9 +56,10 @@ from repro.kernels import terngrad as KT
 from repro.kernels import topk as KK
 
 _LANE = 256
-# Minimum trailing-axis length for per-channel two-bin reconstruction: with
-# shorter channels the 8 B/row of bin means would rival the 1-bit plane
-# itself and break the onebit < terngrad wire ordering.
+# Default minimum trailing-axis length for per-channel two-bin
+# reconstruction (the ``Compressor.min_channel`` kwarg): with shorter
+# channels the 8 B/row of bin means would rival the 1-bit plane itself and
+# break the onebit < terngrad wire ordering.
 _MIN_CHANNEL = 64
 
 
@@ -73,13 +74,13 @@ def _from2d(x2d, n, shape):
     return x2d.reshape(-1)[:n].reshape(shape)
 
 
-def _channel_axis(shape) -> int:
+def _channel_axis(shape, min_channel: int = _MIN_CHANNEL) -> int:
     """Trailing channel length used for per-channel reconstruction, or 0
     when the leaf is too small / scalar and should use the flat layout."""
     if len(shape) == 0:
         return 0
     b = shape[-1] if len(shape) > 1 else shape[0]
-    return b if b >= _MIN_CHANNEL else 0
+    return b if b >= min_channel else 0
 
 
 def _two_bin_recon(signs, c, valid=None):
@@ -104,17 +105,31 @@ def _two_bin_recon(signs, c, valid=None):
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """Stateless descriptor; EF state travels explicitly through the step."""
+    """Stateless descriptor; EF state travels explicitly through the step.
+
+    Convergence/fidelity knobs (see the module docstring for the math):
+
+    ``ef_gain``      onebit EF over-relaxation — compress ``g + ef_gain*e``
+                     so old residual debt is repaid first.  ``1.0`` is the
+                     textbook Seide EF; the ``2.0`` default cuts the
+                     steady-state EF lag on transformer training.  The
+                     telescoping invariant holds for any gain.
+    ``min_channel``  minimum trailing-axis length before onebit/dgc switch
+                     from the flat 256-lane layout to per-channel two-bin
+                     reconstruction.  Lower it to force channelwise recon
+                     on narrow layers (more side-info bytes on the wire);
+                     raise it to force the flat layout."""
     method: str = "none"
     density: float = 0.01        # dgc
     s_levels: int = 127          # qsgd
     clip_sigma: float = 2.5      # terngrad
     use_kernel: bool = False     # route through the Pallas kernel (interpret)
-    ef_gain: float = 2.0         # onebit EF over-relaxation (see module doc)
+    ef_gain: float = 2.0         # onebit EF over-relaxation (see above)
+    min_channel: int = _MIN_CHANNEL   # channelwise-recon threshold (above)
 
     # ---------------------------------------------------------------- state
     def init_state(self, grads) -> Any:
-        if self.method in ("onebit", "dgc"):
+        if self.method in EF_METHODS:
             return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
         return None
 
@@ -165,7 +180,7 @@ class Compressor:
         shape = g.shape
         ctrue = g.astype(jnp.float32) + e.astype(jnp.float32)
         cin = g.astype(jnp.float32) + self.ef_gain * e.astype(jnp.float32)
-        chan = _channel_axis(shape)
+        chan = _channel_axis(shape, self.min_channel)
         if chan:
             out, wb = self._onebit_plane(cin.reshape(-1, chan))
             out = out.reshape(shape)
@@ -194,7 +209,7 @@ class Compressor:
             kept2, _ = KK.topk_ref(g2, e2, th)
         kept = _from2d(kept2, n, shape)
         wb = KK.wire_bytes(n, self.density)
-        chan = _channel_axis(shape)
+        chan = _channel_axis(shape, self.min_channel)
         if chan:
             rem = (ctrue - kept).reshape(-1, chan)
             # kept slots were sent exactly by the sparse pass: the receiver
@@ -238,3 +253,6 @@ class Compressor:
 
 
 METHODS = ("none", "onebit", "terngrad", "qsgd", "dgc")
+# methods that carry per-worker error-feedback state through the step —
+# the single definition every EF-state check in the repo keys off
+EF_METHODS = ("onebit", "dgc")

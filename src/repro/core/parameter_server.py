@@ -53,6 +53,19 @@ def pull_all_gather(shard, shapes, axis_name: str):
     return jax.tree.map(one, shard, shapes)
 
 
+def sgd_update_fn(lr: float, mean_over=1) -> Callable:
+    """The plain-SGD ``update_fn`` for ``make_ps_step``: each worker
+    updates its own shard (the "server" work), optionally dividing the
+    pushed gradient *sum* by ``mean_over`` workers.  This is the update
+    the Strategy device backend (train/data_parallel.py) routes through
+    for ``arch=ps`` — bucketed BSP pushes pass ``mean_over=axis_size``,
+    single-worker SSP/ASP pushes use the raw sum."""
+    def update(p_shard, g_shard, opt_shard):
+        return (jax.tree.map(lambda p, g: p - lr * (g / mean_over),
+                             p_shard, g_shard), opt_shard)
+    return update
+
+
 def make_ps_step(update_fn: Callable, axis_name: str):
     """update_fn(param_shard, grad_shard, opt_shard) ->
     (new_param_shard, new_opt_shard).

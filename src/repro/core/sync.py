@@ -12,14 +12,22 @@ version they last pulled; the trainer replays the resulting staleness
 schedule exactly.  This reproduces the survey's convergence semantics
 (what staleness does to the loss curve, the straggler problem, the SSP
 bound) with bit-reproducible results.  Compute per event is a jitted step.
+
+``SimSyncEngine`` is the implementation, structured as
+``init / step / finalize`` so the declarative front-end
+(``repro.train.strategy``) can drive it one global step at a time through
+the shared trainer loop; ``run`` composes them and is bitwise-identical to
+the pre-refactor monolithic loops.  ``SyncEngine`` is a deprecated alias
+kept for existing call sites — construct engines via
+``repro.train.Strategy(...).build(grad_fn)`` instead.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import Compressor
@@ -38,142 +46,224 @@ class SyncConfig:
     seed: int = 0
 
 
-class SyncEngine:
+def default_periods(num_workers: int) -> Tuple[int, ...]:
+    """Heterogeneous-by-default deterministic worker speeds (worker i
+    finishes every i+1 ticks) — the one schedule both the simulator and the
+    device backend replay."""
+    return tuple(1 + i for i in range(num_workers))
+
+
+def firing_schedule(tick: int, periods: Tuple[int, ...],
+                    batch_idx: List[int],
+                    bound: Optional[int]) -> List[int]:
+    """Workers firing at this tick, in event order: worker w fires every
+    ``periods[w]`` ticks unless (SSP) its batch clock is more than
+    ``bound`` ahead of the slowest worker's (``bound=None`` = ASP).
+    Intra-tick clock increments are visible to later workers' bound
+    checks, exactly as the events apply.  This is the *single*
+    deterministic schedule: the simulator executes it and the device
+    backend replays it — divergence is impossible by construction."""
+    firing = []
+    scratch = list(batch_idx)
+    for w, p in enumerate(periods):
+        if tick % p:
+            continue
+        if bound is not None and scratch[w] - min(scratch) > bound:
+            continue  # SSP: fast worker blocks on clock bound
+        firing.append(w)
+        scratch[w] += 1
+    return firing
+
+
+class SimSyncEngine:
     """Drives ``grad_fn(params, batch) -> (loss, grads)`` under a
-    synchronization model over a stream of per-worker batches."""
+    synchronization model over a stream of per-worker batches.
+
+    One *global step* is K updates' worth of progress: a full round for
+    BSP/SMA, and for SSP/ASP as many whole ticks as it takes for the
+    update counter to cross the next multiple of K (ticks are atomic, so a
+    run of T steps replays exactly the event sequence of the monolithic
+    event loop with threshold ``updates < T*K``)."""
 
     def __init__(self, cfg: SyncConfig, grad_fn: Callable):
         self.cfg = cfg
         self.grad_fn = jax.jit(grad_fn)
-        periods = cfg.periods or tuple(
-            1 + i for i in range(cfg.num_workers))  # heterogeneous by default
+        periods = cfg.periods or default_periods(cfg.num_workers)
         assert len(periods) == cfg.num_workers
         self.periods = periods
         self._apply = jax.jit(
             lambda p, g, lr: jax.tree.map(lambda a, b: a - lr * b, p, g))
         self._avg = jax.jit(
             lambda gs: jax.tree.map(lambda *x: sum(x) / len(x), *gs))
+        mu = cfg.sma_mu
+        self._sma_correct = jax.jit(
+            lambda rep, center, g, lr: jax.tree.map(
+                lambda r, z, gg: r - lr * gg - mu * (r - z), rep, center, g))
+        self._wire = 0
+
+    # ----------------------------------------------------------- init state
+    def init(self, params) -> Dict[str, Any]:
+        cfg = self.cfg
+        K = cfg.num_workers
+        st: Dict[str, Any] = dict(
+            rng=jax.random.PRNGKey(cfg.seed),
+            comp_states=[cfg.compressor.init_state(params)
+                         for _ in range(K)],
+            wire=0,
+        )
+        if cfg.mode in ("bsp",):
+            st.update(params=params)
+        elif cfg.mode in ("ssp", "asp"):
+            st.update(
+                params=params,
+                pulled=[jax.tree.map(lambda x: x, params) for _ in range(K)],
+                pulled_ver=[0] * K,
+                server_ver=0,
+                tick=0,
+                updates=0,
+                batch_idx=[0] * K,
+            )
+        elif cfg.mode == "sma":
+            st.update(replicas=[jax.tree.map(lambda x: x, params)
+                                for _ in range(K)])
+        else:
+            raise ValueError(cfg.mode)
+        return st
 
     # ------------------------------------------------------------------ BSP
-    def _run_bsp(self, params, batches, steps):
-        K = self.cfg.num_workers
-        hist = []
-        # one independent EF state per worker (not K aliases of one tree):
-        # each worker's residual tracks what *it* failed to transmit
-        comp_states = [self.cfg.compressor.init_state(params)
-                       for _ in range(K)]
-        rng = jax.random.PRNGKey(self.cfg.seed)
-        wire_total = 0
-        for t in range(steps):
-            losses, grads = [], []
-            for w in range(K):
-                loss, g = self.grad_fn(params, batches(t, w))
-                if self.cfg.compressor.method != "none":
-                    rng, sub = jax.random.split(rng)
-                    g, comp_states[w], wb = self.cfg.compressor.roundtrip(
-                        g, comp_states[w], sub)
-                    wire_total += wb
-                else:
-                    wire_total += sum(int(x.size) * 4
-                                      for x in jax.tree.leaves(g))
-                losses.append(float(loss))
-                grads.append(g)
-            params = self._apply(params, self._avg(grads), self.cfg.lr)
-            hist.append(dict(step=t, loss=float(np.mean(losses)),
-                             max_staleness=0))
-        return params, hist, wire_total
+    def _step_bsp(self, st, batches, t):
+        cfg = self.cfg
+        K = cfg.num_workers
+        params = st["params"]
+        losses, grads = [], []
+        for w in range(K):
+            loss, g = self.grad_fn(params, batches(t, w))
+            if cfg.compressor.method != "none":
+                st["rng"], sub = jax.random.split(st["rng"])
+                g, st["comp_states"][w], wb = cfg.compressor.roundtrip(
+                    g, st["comp_states"][w], sub)
+                st["wire"] += wb
+            else:
+                st["wire"] += sum(int(x.size) * 4
+                                  for x in jax.tree.leaves(g))
+            losses.append(float(loss))
+            grads.append(g)
+        st["params"] = self._apply(params, self._avg(grads), cfg.lr)
+        return st, [dict(step=t, loss=float(np.mean(losses)),
+                         max_staleness=0)]
 
     # ------------------------------------------------------- SSP / ASP core
-    def _run_async(self, params, batches, steps, bound: Optional[int]):
+    def _step_async(self, st, batches, t, bound: Optional[int]):
         """Event simulation: server clock = #updates applied.  Worker w
         recomputes every periods[w] ticks against its pulled version;
         SSP blocks a worker whose pulled version lags > bound behind the
-        slowest worker's version (the SSP condition of [28])."""
-        K = self.cfg.num_workers
-        pulled = [jax.tree.map(lambda x: x, params) for _ in range(K)]
-        pulled_ver = [0] * K
-        server_ver = 0
-        hist = []
-        comp_states = [self.cfg.compressor.init_state(params)
-                       for _ in range(K)]
-        rng = jax.random.PRNGKey(self.cfg.seed)
-        wire_total = 0
-        tick = 0
-        updates = 0
-        batch_idx = [0] * K
-        while updates < steps * K:
-            tick += 1
-            for w in range(K):
-                if tick % self.periods[w]:
-                    continue
-                if bound is not None:
-                    slowest = min(batch_idx)
-                    if batch_idx[w] - slowest > bound:
-                        continue  # SSP: fast worker blocks on clock bound
-
-                loss, g = self.grad_fn(pulled[w], batches(batch_idx[w], w))
-                batch_idx[w] += 1
-                if self.cfg.compressor.method != "none":
-                    rng, sub = jax.random.split(rng)
-                    g, comp_states[w], wb = self.cfg.compressor.roundtrip(
-                        g, comp_states[w], sub)
-                    wire_total += wb
+        slowest worker's version (the SSP condition of [28]).  Advances
+        whole ticks until ``updates >= (t+1) * K``."""
+        cfg = self.cfg
+        K = cfg.num_workers
+        events = []
+        while st["updates"] < (t + 1) * K:
+            st["tick"] += 1
+            for w in firing_schedule(st["tick"], self.periods,
+                                     st["batch_idx"], bound):
+                loss, g = self.grad_fn(st["pulled"][w],
+                                       batches(st["batch_idx"][w], w))
+                st["batch_idx"][w] += 1
+                if cfg.compressor.method != "none":
+                    st["rng"], sub = jax.random.split(st["rng"])
+                    g, st["comp_states"][w], wb = cfg.compressor.roundtrip(
+                        g, st["comp_states"][w], sub)
+                    st["wire"] += wb
                 else:
-                    wire_total += sum(int(x.size) * 4
+                    st["wire"] += sum(int(x.size) * 4
                                       for x in jax.tree.leaves(g))
-                staleness = server_ver - pulled_ver[w]
-                params = self._apply(params, g, self.cfg.lr)
-                server_ver += 1
-                updates += 1
-                pulled[w] = params           # pull fresh copy after push
-                pulled_ver[w] = server_ver
-                hist.append(dict(step=updates, loss=float(loss),
-                                 max_staleness=staleness, worker=w))
-        return params, hist, wire_total
+                staleness = st["server_ver"] - st["pulled_ver"][w]
+                st["params"] = self._apply(st["params"], g, cfg.lr)
+                st["server_ver"] += 1
+                st["updates"] += 1
+                st["pulled"][w] = st["params"]   # pull fresh copy after push
+                st["pulled_ver"][w] = st["server_ver"]
+                events.append(dict(step=st["updates"], loss=float(loss),
+                                   max_staleness=staleness, worker=w))
+        return st, events
 
     # ------------------------------------------------------------------ SMA
-    def _run_sma(self, params, batches, steps):
+    def _step_sma(self, st, batches, t):
         """CROSSBOW synchronous model averaging: independent replicas pulled
         toward the central average each step."""
-        K = self.cfg.num_workers
-        replicas = [jax.tree.map(lambda x: x, params) for _ in range(K)]
-        mu = self.cfg.sma_mu
-        hist = []
-        wire_total = 0
+        cfg = self.cfg
+        K = cfg.num_workers
+        center = self._avg(st["replicas"])
+        losses = []
+        for w in range(K):
+            loss, g = self.grad_fn(st["replicas"][w], batches(t, w))
+            st["replicas"][w] = self._sma_correct(st["replicas"][w], center,
+                                                  g, cfg.lr)
+            losses.append(float(loss))
+            st["wire"] += sum(int(x.size) * 4 for x in jax.tree.leaves(g))
+        return st, [dict(step=t, loss=float(np.mean(losses)),
+                         max_staleness=0)]
 
-        @jax.jit
-        def avg_of(reps):
-            return jax.tree.map(lambda *x: sum(x) / len(x), *reps)
+    # ----------------------------------------------------------------- step
+    def step(self, st, batches: Callable[[int, int], Any], t: int):
+        """Advance one global step.  Returns (state, events) where events is
+        the list of per-update history records produced in this step."""
+        mode = self.cfg.mode
+        if mode == "bsp":
+            st, ev = self._step_bsp(st, batches, t)
+        elif mode == "ssp":
+            st, ev = self._step_async(st, batches, t, self.cfg.staleness)
+        elif mode == "asp":
+            st, ev = self._step_async(st, batches, t, None)
+        elif mode == "sma":
+            st, ev = self._step_sma(st, batches, t)
+        else:
+            raise ValueError(mode)
+        self._wire = st["wire"]
+        return st, ev
 
-        @jax.jit
-        def correct(rep, center, g, lr):
-            return jax.tree.map(
-                lambda r, z, gg: r - lr * gg - mu * (r - z), rep, center, g)
+    def finalize(self, st):
+        """Final parameters for the run-state (SMA: replica average)."""
+        if self.cfg.mode == "sma":
+            return self._avg(st["replicas"])
+        return st["params"]
 
-        for t in range(steps):
-            center = avg_of(replicas)
-            losses = []
-            for w in range(K):
-                loss, g = self.grad_fn(replicas[w], batches(t, w))
-                replicas[w] = correct(replicas[w], center, g, self.cfg.lr)
-                losses.append(float(loss))
-                wire_total += sum(int(x.size) * 4 for x in jax.tree.leaves(g))
-            hist.append(dict(step=t, loss=float(np.mean(losses)),
-                             max_staleness=0))
-        return avg_of(replicas), hist, wire_total
+    def wire_bytes(self) -> int:
+        return self._wire
 
     # ------------------------------------------------------------------ run
     def run(self, params, batches: Callable[[int, int], Any], steps: int):
         """batches(t, worker) -> batch pytree.  Returns (params, history,
         wire_bytes)."""
-        mode = self.cfg.mode
-        if mode == "bsp":
-            return self._run_bsp(params, batches, steps)
-        if mode == "ssp":
-            return self._run_async(params, batches, steps,
-                                   self.cfg.staleness)
-        if mode == "asp":
-            return self._run_async(params, batches, steps, None)
-        if mode == "sma":
-            return self._run_sma(params, batches, steps)
-        raise ValueError(mode)
+        st = self.init(params)
+        hist: List[dict] = []
+        for t in range(steps):
+            st, ev = self.step(st, batches, t)
+            hist.extend(ev)
+        return self.finalize(st), hist, st["wire"]
+
+
+# ------------------------------------------------------- deprecation shim
+_WARNED: set = set()
+
+
+def warn_deprecated(name: str, replacement: str):
+    """Warn once per process per deprecated entry point."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; construct engines declaratively via "
+        f"{replacement}", DeprecationWarning, stacklevel=3)
+
+
+class SyncEngine(SimSyncEngine):
+    """Deprecated alias for ``SimSyncEngine`` — kept so existing call sites
+    keep working.  Use ``repro.train.Strategy(sync=..., backend='sim')
+    .build(grad_fn)`` which wraps the same engine (bitwise-identical
+    results)."""
+
+    def __init__(self, cfg: SyncConfig, grad_fn: Callable):
+        warn_deprecated("SyncEngine",
+                        "repro.train.Strategy(...).build(grad_fn)")
+        super().__init__(cfg, grad_fn)

@@ -1,9 +1,19 @@
 from repro.train.data_parallel import (DataParallelConfig,
-                                       DataParallelEngine,
+                                       DataParallelEngine, DeviceEngine,
                                        make_bucketed_allreduce,
+                                       make_bucketed_ps_update,
                                        make_sharded_train_step)
+from repro.train.strategy import (BACKENDS, Cell, DeviceBackend, Engine,
+                                  SimBackend, Strategy, Trainer,
+                                  registered_cells)
 from repro.train.train_loop import TrainState, make_train_step, train_loop
 
 __all__ = ["TrainState", "make_train_step", "train_loop",
-           "DataParallelConfig", "DataParallelEngine",
-           "make_bucketed_allreduce", "make_sharded_train_step"]
+           # declarative front-end (the one Strategy API)
+           "Strategy", "Trainer", "Engine", "SimBackend", "DeviceBackend",
+           "BACKENDS", "Cell", "registered_cells",
+           # device engine + shard_map helpers
+           "DeviceEngine", "make_bucketed_allreduce",
+           "make_bucketed_ps_update", "make_sharded_train_step",
+           # deprecated aliases (warn once; use Strategy.build)
+           "DataParallelConfig", "DataParallelEngine"]

@@ -1,25 +1,43 @@
-"""Device-sharded BSP data parallelism with compressed, bucketed,
-topology-explicit allreduce (survey §3.3).
+"""Device-sharded data parallelism with compressed, bucketed,
+topology-explicit communication (survey §3.3).
 
-``SyncEngine`` (core/sync.py) *simulates* K workers on one device; this
+``SimSyncEngine`` (core/sync.py) *simulates* K workers on one device; this
 module is the executable counterpart: N real (virtual-host) devices under
-``shard_map``, where each step
+``shard_map``.  ``DeviceEngine`` executes the full synchronization ×
+architecture cross-product of the survey's Table 1:
 
-  1. computes per-worker gradients on the worker's batch shard,
-  2. compresses each gradient bucket with per-worker error-feedback state
-     (the EF state lives in the training state, sharded over the worker
-     axis),
-  3. reduces the decompressed buckets with a topology-explicit schedule
-     from ``core.allreduce.TOPOLOGIES`` (ring / tree / butterfly / ...),
-     issuing buckets in the order chosen by ``core.comm_scheduler`` —
-     the same ``bucketize`` + ``tictac_order`` code path the analytic
-     timeline model uses, so the modeled schedule and the executed
-     schedule cannot drift apart.
+  sync=bsp        every step: per-worker gradients on the worker's batch
+                  shard, compressed with per-worker error-feedback state,
+                  then reduced bucket-by-bucket in ``comm_scheduler``
+                  TicTac order — one plan shared by the executed schedule
+                  and the analytic timeline, so they cannot drift apart.
+  sync=ssp | asp  the *simulator's own deterministic staleness schedule*
+                  replayed on devices: each tick, every worker computes its
+                  gradient against its stale pulled parameters in parallel
+                  under shard_map; the host then applies the tick's firing
+                  events in the simulator's event order (worker w fires
+                  every periods[w] ticks; SSP blocks a worker more than
+                  ``staleness`` clocks ahead).  Losses cross-validate
+                  against ``SimSyncEngine`` on identical batch streams.
+  arch=allreduce  decentralized: bucketed topology-explicit allreduce
+                  (``core.allreduce.TOPOLOGIES``), update replicated.
+  arch=ps         centralized: the ZeRO-style reduce-scatter / shard-update
+                  / all-gather path of ``core.parameter_server`` — each
+                  worker plays parameter server for its 1/n shard.  Under
+                  BSP it runs over the *same* fused-bucket plan and issue
+                  order as allreduce; under SSP/ASP each firing worker's
+                  push is a per-event reduce-scatter (no bucketing — one
+                  gradient per event).
 
-Wire-byte accounting comes from the compressor's own ``roundtrip``
-(what each worker would transmit per step); the modeled iteration
-timeline comes from ``comm_scheduler.schedule_overlap`` over the very
-bucket list executed in 3.
+Wire-byte accounting comes from the compressor's own ``roundtrip`` (what
+each worker would transmit per event) and is by construction identical for
+both architectures (RS + AG moves the same bytes as a ring allreduce);
+the modeled iteration timeline comes from ``comm_scheduler
+.schedule_overlap`` over the very bucket list executed on device.
+
+``DataParallelEngine`` is the deprecated PR-1 alias (BSP/allreduce only by
+contract, though it accepts the extended config); construct engines via
+``repro.train.Strategy(...).build(grad_fn)`` instead.
 """
 from __future__ import annotations
 
@@ -36,15 +54,26 @@ from repro.core.collectives import axis_size, shard_map
 from repro.core.comm_scheduler import (LayerCost, LinkModel, bucketize,
                                        random_order, schedule_no_overlap,
                                        schedule_overlap, tictac_order)
-from repro.core.compression import Compressor
+from repro.core.compression import Compressor, EF_METHODS
+from repro.core.parameter_server import make_ps_step, sgd_update_fn
+from repro.core.sync import (default_periods, firing_schedule,
+                             warn_deprecated)
 
 AXIS = "workers"
+
+DEVICE_SYNCS = ("bsp", "ssp", "asp")   # device-executable sync models
+ARCHS = ("allreduce", "ps")            # §3.3.1 architectures
 
 
 @dataclasses.dataclass(frozen=True)
 class DataParallelConfig:
     num_workers: int = 8
     lr: float = 0.1
+    sync: str = "bsp"                # bsp | ssp | asp (sma is sim-only)
+    arch: str = "allreduce"          # allreduce | ps
+    staleness: int = 3               # SSP bound s
+    # deterministic worker speeds: worker i finishes every periods[i] ticks
+    periods: Optional[Tuple[int, ...]] = None
     topology: str = "ring"           # key into TOPOLOGIES
     compressor: Compressor = Compressor("none")
     bucket_mb: float = 4.0           # gradient bucket fusion size
@@ -71,7 +100,8 @@ def _plan_buckets(params_example, bucket_mb: float, order: str,
                   ) -> Tuple[List[List[int]], List[int], List[LayerCost]]:
     """Fuse gradient leaves (backward = reverse-pytree order) into buckets
     of ~bucket_mb and choose the transfer issue order.  This single plan is
-    shared by the executed schedule and the analytic timeline model."""
+    shared by the executed schedule (both architectures) and the analytic
+    timeline model."""
     leaves = jax.tree.leaves(params_example)
     layers = [LayerCost(f"g{i}", back_s_per_byte * x.size * 4, x.size * 4)
               for i, x in enumerate(leaves)]
@@ -79,6 +109,22 @@ def _plan_buckets(params_example, bucket_mb: float, order: str,
     buckets = [[int(nm[1:]) for nm in b.name.split("+")] for b in fused]
     order_idx = _bucket_order(len(fused), order, fused, seed)
     return buckets, order_idx, fused
+
+
+def _leaf_meta(params_example):
+    return (jax.tree.structure(params_example),
+            [(x.shape, x.dtype) for x in jax.tree.leaves(params_example)])
+
+
+def _scatter_flat(flat, idxs, leaf_shapes, out):
+    """Split a fused bucket vector back into its leaves (into ``out``)."""
+    off = 0
+    for i in idxs:
+        shape, dtype = leaf_shapes[i]
+        size = int(np.prod(shape)) if shape else 1
+        out[i] = flat[off:off + size].reshape(shape).astype(dtype)
+        off += size
+    return out
 
 
 def make_bucketed_allreduce(params_example, topology: str = "ring",
@@ -92,9 +138,7 @@ def make_bucketed_allreduce(params_example, topology: str = "ring",
     reduce_leaf = TOPOLOGIES[topology]
     buckets, order_idx, fused = _plan_buckets(
         params_example, bucket_mb, order, back_s_per_byte, seed)
-    treedef = jax.tree.structure(params_example)
-    leaf_shapes = [(x.shape, x.dtype)
-                   for x in jax.tree.leaves(params_example)]
+    treedef, leaf_shapes = _leaf_meta(params_example)
 
     def reduce_grads(grads):
         leaves = jax.tree.leaves(grads)
@@ -105,17 +149,50 @@ def make_bucketed_allreduce(params_example, topology: str = "ring",
             flat = jnp.concatenate(
                 [leaves[i].astype(jnp.float32).reshape(-1) for i in idxs])
             red = reduce_leaf(flat, axis) / n
-            off = 0
-            for i in idxs:
-                shape, dtype = leaf_shapes[i]
-                size = int(np.prod(shape)) if shape else 1
-                out[i] = red[off:off + size].reshape(shape).astype(dtype)
-                off += size
+            _scatter_flat(red, idxs, leaf_shapes, out)
         return jax.tree.unflatten(treedef, out)
 
     reduce_grads.fused_layers = fused
     reduce_grads.order = order_idx
     return reduce_grads
+
+
+def make_bucketed_ps_update(params_example, lr: float,
+                            bucket_mb: float = 4.0, order: str = "tictac",
+                            back_s_per_byte: float = 2e-12,
+                            seed: int = 0, axis: str = AXIS):
+    """Centralized (params, grads) -> new params for use inside
+    ``shard_map``: the same fused-bucket plan and issue order as
+    ``make_bucketed_allreduce``, but each bucket takes the parameter-server
+    path of ``core.parameter_server`` — reduce-scatter the bucket's summed
+    gradient, SGD-update only my 1/n shard (the "server" work, ZeRO-style),
+    and all-gather the updated shard back.  Traffic per device equals the
+    ring allreduce; update FLOPs drop by n."""
+    buckets, order_idx, fused = _plan_buckets(
+        params_example, bucket_mb, order, back_s_per_byte, seed)
+    treedef, leaf_shapes = _leaf_meta(params_example)
+
+    def ps_update(params, grads):
+        n = axis_size(axis)
+        p_leaves = jax.tree.leaves(params)
+        g_leaves = jax.tree.leaves(grads)
+        # lists, NOT dicts: jax flattens dict keys in sorted order, which
+        # would silently retrace the collectives in lexicographic bucket
+        # order; list position preserves the planned issue order
+        pb = [jnp.concatenate([p_leaves[i].astype(jnp.float32).reshape(-1)
+                               for i in buckets[b]]) for b in order_idx]
+        gb = [jnp.concatenate([g_leaves[i].astype(jnp.float32).reshape(-1)
+                               for i in buckets[b]]) for b in order_idx]
+        step = make_ps_step(sgd_update_fn(lr, mean_over=n), axis)
+        new_pb, _ = step(pb, gb, None)
+        out: List[Any] = [None] * len(p_leaves)
+        for flat, b in zip(new_pb, order_idx):
+            _scatter_flat(flat, buckets[b], leaf_shapes, out)
+        return jax.tree.unflatten(treedef, out)
+
+    ps_update.fused_layers = fused
+    ps_update.order = order_idx
+    return ps_update
 
 
 def make_sharded_train_step(train_step: Callable, mesh: Mesh,
@@ -154,13 +231,20 @@ def make_sharded_train_step(train_step: Callable, mesh: Mesh,
     return jax.jit(fn)
 
 
-class DataParallelEngine:
-    """BSP over N host devices; drop-in comparable with
-    ``SyncEngine(mode="bsp")``: ``run`` has the same signature and returns
-    the same ``(params, history, wire_bytes)`` triple."""
+class DeviceEngine:
+    """Executable {bsp,ssp,asp} × {allreduce,ps} over N host devices;
+    drop-in comparable with ``SimSyncEngine``: ``init / step / finalize``
+    plus a composed ``run`` with the same signature and the same
+    ``(params, history, wire_bytes)`` triple."""
 
     def __init__(self, cfg: DataParallelConfig, grad_fn: Callable,
                  devices: Optional[Sequence] = None):
+        if cfg.sync not in DEVICE_SYNCS:
+            raise ValueError(
+                f"sync={cfg.sync!r} is not device-executable "
+                f"(supported: {DEVICE_SYNCS}; sma is simulated-only)")
+        if cfg.arch not in ARCHS:
+            raise ValueError(f"arch={cfg.arch!r} (supported: {ARCHS})")
         self.cfg = cfg
         self.grad_fn = grad_fn
         devs = list(devices or jax.devices())
@@ -169,8 +253,19 @@ class DataParallelEngine:
                 f"need {cfg.num_workers} devices, have {len(devs)} "
                 "(run under XLA_FLAGS=--xla_force_host_platform_device_count=N)")
         self.mesh = Mesh(np.array(devs[:cfg.num_workers]), (AXIS,))
+        self.periods = cfg.periods or default_periods(cfg.num_workers)
+        assert len(self.periods) == cfg.num_workers
         self._step_fn = None
         self._wire_cell: List[int] = []
+        self._async_fns = None
+        self._wire_total = 0
+        # same replicated apply as the simulator uses (allreduce arch)
+        self._apply = jax.jit(
+            lambda p, g, lr: jax.tree.map(lambda a, b: a - lr * b, p, g))
+
+    @property
+    def _ef_active(self) -> bool:
+        return self.cfg.compressor.method in EF_METHODS
 
     # ------------------------------------------------------------- planning
     def _bucket_plan(self, params) -> Tuple[List[List[int]], List[int],
@@ -188,23 +283,31 @@ class DataParallelEngine:
             "n_buckets": len(fused),
         }
 
-    def wire_bytes_per_step(self, params) -> int:
-        """Bytes each worker puts on the wire per step (compressor
-        accounting), summed over workers like ``SyncEngine`` does."""
+    def per_event_wire_bytes(self, params) -> int:
+        """Bytes one worker puts on the wire per gradient push (compressor
+        accounting; shape-static).  Identical for both architectures."""
         comp = self.cfg.compressor
         state = comp.init_state(params)
         zeros = jax.tree.map(jnp.zeros_like, params)
         _, _, wb = comp.roundtrip(zeros, state, jax.random.PRNGKey(0))
-        return int(wb) * self.cfg.num_workers
+        return int(wb)
 
-    # ------------------------------------------------------------- stepping
+    def wire_bytes_per_step(self, params) -> int:
+        """Bytes per BSP step summed over workers, like the simulator."""
+        return self.per_event_wire_bytes(params) * self.cfg.num_workers
+
+    # --------------------------------------------------------- bsp stepping
     def _build_step(self, params_example):
         cfg = self.cfg
         comp = cfg.compressor
-        bucketed_allreduce = make_bucketed_allreduce(
+        bucketed_ps = (make_bucketed_ps_update(
+            params_example, cfg.lr, bucket_mb=cfg.bucket_mb,
+            order=cfg.order, back_s_per_byte=cfg.back_s_per_byte,
+            seed=cfg.seed) if cfg.arch == "ps" else None)
+        bucketed_allreduce = (make_bucketed_allreduce(
             params_example, topology=cfg.topology, bucket_mb=cfg.bucket_mb,
             order=cfg.order, back_s_per_byte=cfg.back_s_per_byte,
-            seed=cfg.seed)
+            seed=cfg.seed) if cfg.arch != "ps" else None)
         # compressor wire counts are shape-static Python ints at trace
         # time; capture them host-side rather than threading them through
         # the device as int32 (which overflows past 2 GiB/step)
@@ -222,41 +325,218 @@ class DataParallelEngine:
                 wb = sum(int(x.size) * 4 for x in jax.tree.leaves(grads))
             if not wire_cell:
                 wire_cell.append(int(wb) * cfg.num_workers)
-            avg = bucketed_allreduce(grads)
-            new_params = jax.tree.map(lambda p, g: p - cfg.lr * g,
-                                      params, avg)
+            if cfg.arch == "ps":
+                new_params = bucketed_ps(params, grads)
+            else:
+                avg = bucketed_allreduce(grads)
+                new_params = jax.tree.map(lambda p, g: p - cfg.lr * g,
+                                          params, avg)
             ef_out = (jax.tree.map(lambda x: x[None], ef)
                       if ef is not None else None)
             return (new_params, ef_out, loss[None])
 
-        ef_spec = P(AXIS) if comp.method in ("onebit", "dgc") else P()
+        ef_spec = P(AXIS) if self._ef_active else P()
         fn = shard_map(sharded_step, mesh=self.mesh,
                        in_specs=(P(), ef_spec, P(AXIS), P(AXIS)),
                        out_specs=(P(), ef_spec, P(AXIS)),
                        check_vma=False)
         return jax.jit(fn), wire_cell
 
+    def _step_bsp(self, st, batches, t):
+        K = self.cfg.num_workers
+        if self._step_fn is None:
+            self._step_fn, self._wire_cell = self._build_step(st["params"])
+        per_worker = [batches(t, w) for w in range(K)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_worker)
+        st["rng"], *subs = jax.random.split(st["rng"], K + 1)
+        params, ef, losses = self._step_fn(
+            st["params"], st["ef"], batch, jnp.stack(subs))
+        st.update(params=params, ef=ef)
+        st["wire"] += self._wire_cell[0]
+        return st, [dict(step=t, loss=float(jnp.mean(losses)),
+                         max_staleness=0)]
+
+    # --------------------------------------------------- ssp / asp stepping
+    def _build_async_fns(self, params_example):
+        cfg = self.cfg
+        comp = cfg.compressor
+
+        def grad_body(pulled, ef, batch, key, fire):
+            # every input carries a leading worker axis; each worker sees
+            # its own row and computes against its *stale* pulled params
+            pulled = jax.tree.map(lambda x: x[0], pulled)
+            batch = jax.tree.map(lambda x: x[0], batch)
+            key = key[0]
+            fire = fire[0]
+            loss, g = self.grad_fn(pulled, batch)
+            if comp.method != "none":
+                ef_w = (jax.tree.map(lambda x: x[0], ef)
+                        if ef is not None else None)
+                g, ef_new, _wb = comp.roundtrip(g, ef_w, key)
+                if ef_new is not None:
+                    # only firing workers consume their error-feedback state
+                    ef_out = jax.tree.map(
+                        lambda new, old: jnp.where(fire > 0, new, old),
+                        ef_new, ef_w)
+                    ef_out = jax.tree.map(lambda x: x[None], ef_out)
+                else:
+                    ef_out = ef
+            else:
+                ef_out = ef
+            g = jax.tree.map(lambda x: x[None], g)
+            return loss[None], g, ef_out
+
+        ef_spec = P(AXIS) if self._ef_active else P()
+        grad_fn = jax.jit(shard_map(
+            grad_body, mesh=self.mesh,
+            in_specs=(P(AXIS), ef_spec, P(AXIS), P(AXIS), P(AXIS)),
+            out_specs=(P(AXIS), P(AXIS), ef_spec),
+            check_vma=False))
+
+        ps_apply = None
+        if cfg.arch == "ps":
+            step = make_ps_step(sgd_update_fn(cfg.lr), AXIS)
+
+            def ps_body(params, g_stack, onehot):
+                # the firing worker pushes its gradient; everyone else
+                # contributes exact zeros, so the reduce-scatter delivers
+                # the push to each shard's owner, which updates and
+                # all-gathers back — a literal single-worker PS push
+                g_mine = jax.tree.map(lambda x: x[0], g_stack)
+                o = onehot[0]
+                contrib = jax.tree.map(lambda x: x * o, g_mine)
+                new_params, _ = step(params, contrib, None)
+                return new_params
+
+            ps_apply = jax.jit(shard_map(
+                ps_body, mesh=self.mesh,
+                in_specs=(P(), P(AXIS), P(AXIS)),
+                out_specs=P(),
+                check_vma=False))
+        return grad_fn, ps_apply
+
+    def _step_async(self, st, batches, t, bound: Optional[int]):
+        """Replay the simulator's deterministic tick schedule: gradient
+        compute for the whole worker set runs data-parallel on devices;
+        the tick's firing events then apply in the simulator's worker
+        order (each pushing through the configured architecture)."""
+        cfg = self.cfg
+        K = cfg.num_workers
+        comp = cfg.compressor
+        if self._async_fns is None:
+            self._async_fns = self._build_async_fns(st["params"])
+            self._event_wire = self.per_event_wire_bytes(st["params"])
+        grad_fn, ps_apply = self._async_fns
+        events = []
+        while st["updates"] < (t + 1) * K:
+            st["tick"] += 1
+            # the same deterministic schedule the simulator executes
+            firing = firing_schedule(st["tick"], self.periods,
+                                     st["batch_idx"], bound)
+            if not firing:
+                continue
+            fire = np.zeros((K,), np.float32)
+            fire[firing] = 1.0
+            # a worker's batch index only advances at its own events, so
+            # its batch is cached until it fires (invalidated below)
+            for w in range(K):
+                if st["batch_cache"][w] is None:
+                    st["batch_cache"][w] = batches(st["batch_idx"][w], w)
+            batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *st["batch_cache"])
+            # mirror the simulator's rng stream: one split per firing event
+            keys = [jax.random.PRNGKey(0)] * K
+            if comp.method != "none":
+                for w in firing:
+                    st["rng"], sub = jax.random.split(st["rng"])
+                    keys[w] = sub
+            pulled_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *st["pulled"])
+            losses, grads, st["ef"] = grad_fn(
+                pulled_stack, st["ef"], batch, jnp.stack(keys),
+                jnp.asarray(fire))
+            for w in firing:
+                staleness = st["server_ver"] - st["pulled_ver"][w]
+                if cfg.arch == "ps":
+                    onehot = np.zeros((K,), np.float32)
+                    onehot[w] = 1.0
+                    st["params"] = ps_apply(st["params"], grads,
+                                            jnp.asarray(onehot))
+                else:
+                    g_w = jax.tree.map(lambda x: x[w], grads)
+                    st["params"] = self._apply(st["params"], g_w, cfg.lr)
+                st["server_ver"] += 1
+                st["updates"] += 1
+                st["pulled"][w] = st["params"]   # pull = reference rebind
+                st["pulled_ver"][w] = st["server_ver"]
+                st["batch_idx"][w] += 1
+                st["batch_cache"][w] = None
+                st["wire"] += self._event_wire
+                events.append(dict(step=st["updates"],
+                                   loss=float(losses[w]),
+                                   max_staleness=staleness, worker=w))
+        return st, events
+
+    # -------------------------------------------------- engine protocol
+    def init(self, params) -> Dict[str, Any]:
+        cfg = self.cfg
+        K = cfg.num_workers
+        ef = (jax.tree.map(
+            lambda x: jnp.zeros((K,) + x.shape, jnp.float32), params)
+            if self._ef_active else None)
+        st: Dict[str, Any] = dict(
+            params=params, ef=ef, rng=jax.random.PRNGKey(cfg.seed), wire=0)
+        if cfg.sync in ("ssp", "asp"):
+            st.update(
+                # per-worker pulled copies are reference rebinds (like the
+                # simulator); they are stacked once per tick for shard_map
+                pulled=[params] * K,
+                pulled_ver=[0] * K,
+                server_ver=0,
+                tick=0,
+                updates=0,
+                batch_idx=[0] * K,
+                batch_cache=[None] * K,
+            )
+        return st
+
+    def step(self, st, batches: Callable[[int, int], Any], t: int):
+        sync = self.cfg.sync
+        if sync == "bsp":
+            st, ev = self._step_bsp(st, batches, t)
+        elif sync == "ssp":
+            st, ev = self._step_async(st, batches, t, self.cfg.staleness)
+        else:
+            st, ev = self._step_async(st, batches, t, None)
+        self._wire_total = st["wire"]
+        return st, ev
+
+    def finalize(self, st):
+        return st["params"]
+
+    def wire_bytes(self) -> int:
+        return self._wire_total
+
     # ------------------------------------------------------------------ run
     def run(self, params, batches: Callable[[int, int], Any], steps: int):
         """batches(t, worker) -> batch pytree (same contract as
-        ``SyncEngine.run``).  Returns (params, history, wire_bytes)."""
-        K = self.cfg.num_workers
-        comp = self.cfg.compressor
-        if self._step_fn is None:
-            self._step_fn, self._wire_cell = self._build_step(params)
-        ef = (jax.tree.map(
-            lambda x: jnp.zeros((K,) + x.shape, jnp.float32), params)
-            if comp.method in ("onebit", "dgc") else None)
-        rng = jax.random.PRNGKey(self.cfg.seed)
-        hist = []
-        wire_total = 0
+        ``SimSyncEngine.run``).  Returns (params, history, wire_bytes)."""
+        st = self.init(params)
+        hist: List[dict] = []
         for t in range(steps):
-            per_worker = [batches(t, w) for w in range(K)]
-            batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_worker)
-            rng, *subs = jax.random.split(rng, K + 1)
-            params, ef, losses = self._step_fn(
-                params, ef, batch, jnp.stack(subs))
-            wire_total += self._wire_cell[0]
-            hist.append(dict(step=t, loss=float(jnp.mean(losses)),
-                             max_staleness=0))
-        return params, hist, wire_total
+            st, ev = self.step(st, batches, t)
+            hist.extend(ev)
+        return self.finalize(st), hist, st["wire"]
+
+
+class DataParallelEngine(DeviceEngine):
+    """Deprecated PR-1 alias for ``DeviceEngine`` — kept so existing call
+    sites keep working.  Use ``repro.train.Strategy(sync=..., arch=...,
+    backend='device').build(grad_fn)`` which wraps the same engine
+    (bitwise-identical results)."""
+
+    def __init__(self, cfg: DataParallelConfig, grad_fn: Callable,
+                 devices: Optional[Sequence] = None):
+        warn_deprecated("DataParallelEngine",
+                        "repro.train.Strategy(...).build(grad_fn)")
+        super().__init__(cfg, grad_fn, devices)

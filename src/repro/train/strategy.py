@@ -1,0 +1,341 @@
+"""One declarative ``Strategy`` surface for the survey's §3.3 cross-product.
+
+The survey's core taxonomy is a cross-product — architecture (centralized
+PS vs decentralized allreduce, §3.3.1) × synchronization (BSP/SSP/ASP/SMA,
+§3.3.2) × gradient compression (§3.3.3) — and this module exposes it as
+one frozen spec with interchangeable execution backends:
+
+    Strategy(sync="ssp", arch="ps", compression="onebit", workers=8)
+        .build(grad_fn)            # -> Engine (device or simulated)
+
+or, equivalently, from a spec string (the examples' ``--strategy`` flag):
+
+    Strategy.parse("ssp:3/ps/onebit@8")
+
+Backends (the ``BACKENDS`` registry):
+
+  sim     ``SimSyncEngine`` — the deterministic discrete-event simulation
+          of core/sync.py.  Any sync model, any compressor, single device.
+          Architecture is semantically transparent here: the simulated
+          server *is* the PS, and RS+AG traffic equals ring-allreduce
+          traffic, so both arches produce identical trajectories.
+  device  ``DeviceEngine`` — N virtual/real devices under shard_map
+          (train/data_parallel.py).  BSP natively; SSP/ASP by replaying
+          the simulator's deterministic staleness schedule with gradient
+          compute data-parallel on devices; arch=ps routed through the
+          reduce-scatter/all-gather ZeRO path of core/parameter_server.py
+          over the same bucket plan as allreduce.  SMA is simulated-only.
+
+Every engine follows the ``Engine`` protocol (``init / step / finalize /
+metrics``) and is driven by the single ``Trainer.fit`` loop, which is the
+same ``train_loop`` that drives ``make_train_step`` steps.
+
+``registered_cells()`` enumerates the supported (sync, arch, compression,
+backend) cells; ``tools/strategy_smoke.py`` executes every one of them
+(the ``make strategies`` tier-1 gate), and docs/strategies.md renders the
+matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
+
+import jax
+
+from repro.core.compression import EF_METHODS, METHODS, Compressor
+from repro.core.sync import SimSyncEngine, SyncConfig
+from repro.train.data_parallel import (ARCHS, DEVICE_SYNCS,
+                                       DataParallelConfig, DeviceEngine)
+from repro.train.train_loop import train_loop
+
+SYNCS = ("bsp", "ssp", "asp", "sma")
+# the tested compression column set: the EF methods plus the baseline
+MATRIX_METHODS = ("none",) + EF_METHODS
+_DENSITY_DEFAULT = 0.01
+
+
+class Cell(NamedTuple):
+    """One point of the sync × arch × compression matrix on a backend."""
+    sync: str
+    arch: str
+    compression: str
+    backend: str
+
+
+# the ISSUE-2 acceptance matrix: every one of these cells must stay
+# registered and device-executable — `make strategies` and
+# tests/test_strategy.py both enforce this single set
+ACCEPTANCE_CELLS = frozenset(
+    Cell(s, a, c, "device")
+    for s in DEVICE_SYNCS for a in ARCHS for c in MATRIX_METHODS)
+
+
+def registered_cells() -> List[Cell]:
+    """Every supported Strategy cell.  ``make strategies`` executes each of
+    these for 2 steps on 2 virtual devices and fails if any cell in this
+    registry goes untested."""
+    cells: List[Cell] = []
+    # device: the full EF matrix, plus the stateless quantizers under BSP
+    for s in DEVICE_SYNCS:
+        for a in ARCHS:
+            for c in MATRIX_METHODS:
+                cells.append(Cell(s, a, c, "device"))
+    for c in ("terngrad", "qsgd"):
+        for a in ARCHS:
+            cells.append(Cell("bsp", a, c, "device"))
+    # sim: staleness replay source of truth + the sim-only SMA model
+    for s in DEVICE_SYNCS:
+        for c in MATRIX_METHODS:
+            cells.append(Cell(s, "allreduce", c, "sim"))
+    cells.append(Cell("sma", "allreduce", "none", "sim"))
+    return cells
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """Frozen declarative spec for one cell of the survey's taxonomy.
+
+    ``compression`` may be a method name (a ``Compressor`` is derived with
+    ``density``) or a fully-configured ``Compressor``.  ``backend="auto"``
+    picks the device backend when the process has >= ``workers`` devices
+    and the cell is device-executable, else the simulator."""
+    sync: str = "bsp"                # bsp | ssp | asp | sma
+    arch: str = "allreduce"          # allreduce | ps
+    compression: Union[str, Compressor] = "none"
+    workers: int = 4
+    backend: str = "auto"            # auto | sim | device
+    staleness: int = 3               # SSP bound s
+    lr: float = 0.1
+    topology: str = "ring"           # device allreduce schedule
+    bucket_mb: float = 4.0           # device gradient bucket fusion
+    order: str = "tictac"            # device bucket issue order
+    periods: Optional[Tuple[int, ...]] = None   # worker speeds (sim schedule)
+    sma_mu: float = 0.1              # SMA correction strength
+    density: float = _DENSITY_DEFAULT   # dgc density (compression as str)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.sync not in SYNCS:
+            raise ValueError(f"sync={self.sync!r} not in {SYNCS}")
+        if self.arch not in ARCHS:
+            raise ValueError(f"arch={self.arch!r} not in {ARCHS}")
+        method = (self.compression.method
+                  if isinstance(self.compression, Compressor)
+                  else self.compression)
+        if method not in METHODS:
+            raise ValueError(f"compression={method!r} not in {METHODS}")
+        if self.backend not in ("auto", "sim", "device"):
+            raise ValueError(f"backend={self.backend!r}")
+        if self.workers < 1:
+            raise ValueError("workers must be >= 1")
+        if self.staleness < 0:
+            # a negative SSP bound blocks every worker forever
+            raise ValueError("staleness must be >= 0")
+        if self.sync == "sma" and method != "none":
+            # the SMA engine exchanges replicas, not gradients — it has no
+            # compression path, so a compressed spec would silently run
+            # uncompressed (docs/strategies.md marks these cells "—")
+            raise ValueError("sma does not compose with compression; "
+                             "use compression='none'")
+        if isinstance(self.compression, Compressor) and \
+                self.density != _DENSITY_DEFAULT:
+            # a full Compressor instance carries its own density — a
+            # Strategy-level density would be silently ignored
+            raise ValueError(
+                "pass density inside the Compressor instance, not as a "
+                "separate Strategy field")
+
+    # ------------------------------------------------------------ derived
+    @property
+    def compressor(self) -> Compressor:
+        if isinstance(self.compression, Compressor):
+            return self.compression
+        return Compressor(self.compression, density=self.density)
+
+    def spec(self) -> str:
+        """Canonical spec string (inverse of ``parse``)."""
+        sync = self.sync + (f":{self.staleness}" if self.sync == "ssp"
+                            else "")
+        comp = self.compressor.method
+        if comp == "dgc":
+            comp += f":{self.compressor.density:g}"
+        return f"{sync}/{self.arch}/{comp}@{self.workers}"
+
+    @classmethod
+    def parse(cls, spec: str, **defaults) -> "Strategy":
+        """Parse ``sync[:staleness]/arch/comp[:density]@workers`` — every
+        segment after ``sync`` optional, e.g. ``"bsp"``, ``"ssp:2/ps"``,
+        ``"bsp/allreduce/onebit@8"``, ``"asp/ps/dgc:0.05@4"``.  Keyword
+        arguments are defaults for fields the spec string does not name;
+        named segments always win."""
+        fields = dict(defaults)
+        s = spec.strip()
+        if "@" in s:
+            s, w = s.rsplit("@", 1)
+            fields["workers"] = int(w)
+        parts = s.split("/") if s else [""]
+        if not parts[0]:
+            raise ValueError(f"empty strategy spec: {spec!r}")
+        if len(parts) > 3:
+            raise ValueError(
+                f"bad strategy spec {spec!r}: want sync[/arch[/comp]][@N]")
+        sync = parts[0]
+        if ":" in sync:
+            sync, st = sync.split(":", 1)
+            if sync != "ssp":
+                raise ValueError(
+                    f"bad strategy spec {spec!r}: only ssp takes a "
+                    f"staleness bound (got {sync}:{st})")
+            fields["staleness"] = int(st)
+        fields["sync"] = sync
+        if len(parts) > 1 and parts[1]:
+            fields["arch"] = parts[1]
+        if len(parts) > 2 and parts[2]:
+            comp = parts[2]
+            if ":" in comp:
+                comp, d = comp.split(":", 1)
+                if comp != "dgc":
+                    raise ValueError(
+                        f"bad strategy spec {spec!r}: only dgc takes a "
+                        f"density (got {comp}:{d})")
+                fields["density"] = float(d)
+            fields["compression"] = comp
+        return cls(**fields)
+
+    # ------------------------------------------------------------ backends
+    def resolve_backend(self, devices: Optional[Sequence] = None) -> str:
+        if self.backend == "sim":
+            return "sim"
+        if self.backend == "device":
+            if self.sync not in DEVICE_SYNCS:
+                raise ValueError(
+                    f"sync={self.sync!r} is simulated-only; use "
+                    "backend='sim' (or 'auto')")
+            return "device"
+        # auto: device when the cell is device-executable and the process
+        # actually has the workers
+        if self.sync not in DEVICE_SYNCS:
+            return "sim"
+        n = len(devices) if devices is not None else len(jax.devices())
+        return "device" if n >= self.workers else "sim"
+
+    def build(self, grad_fn: Callable,
+              devices: Optional[Sequence] = None) -> "Engine":
+        """Construct the engine for this cell: the single entry point that
+        replaces direct ``SyncEngine`` / ``DataParallelEngine`` /
+        ``make_ps_step`` wiring."""
+        kind = self.resolve_backend(devices)
+        return BACKENDS[kind](self, grad_fn, devices)
+
+
+# --------------------------------------------------------------- engines
+class Engine:
+    """Execution-backend protocol shared by every Strategy cell:
+
+      init(params)              -> run-state
+      step(state, batches, t)   -> (state, events)   # one global step
+      finalize(state)           -> params
+      metrics()                 -> {backend, spec, wire_bytes, ...}
+
+    ``run`` composes them through the shared fit loop and returns the
+    legacy ``(params, history, wire_bytes)`` triple."""
+
+    backend = "?"
+
+    def __init__(self, strategy: Strategy, grad_fn: Callable,
+                 devices: Optional[Sequence] = None):
+        self.strategy = strategy
+        self.inner = self._make_inner(strategy, grad_fn, devices)
+
+    def _make_inner(self, strategy, grad_fn, devices):
+        raise NotImplementedError
+
+    def init(self, params):
+        return self.inner.init(params)
+
+    def step(self, state, batches: Callable[[int, int], Any], t: int):
+        return self.inner.step(state, batches, t)
+
+    def finalize(self, state):
+        return self.inner.finalize(state)
+
+    def metrics(self) -> Dict[str, Any]:
+        return dict(backend=self.backend, spec=self.strategy.spec(),
+                    wire_bytes=self.inner.wire_bytes())
+
+    def run(self, params, batches: Callable[[int, int], Any], steps: int):
+        params, events, mets = fit(self, params, batches, steps)
+        return params, events, mets["wire_bytes"]
+
+
+class SimBackend(Engine):
+    """Wraps the deterministic event simulation (``SimSyncEngine``)."""
+
+    backend = "sim"
+
+    def _make_inner(self, s: Strategy, grad_fn, devices):
+        return SimSyncEngine(
+            SyncConfig(mode=s.sync, num_workers=s.workers,
+                       staleness=s.staleness, lr=s.lr, sma_mu=s.sma_mu,
+                       periods=s.periods, compressor=s.compressor,
+                       seed=s.seed),
+            grad_fn)
+
+
+class DeviceBackend(Engine):
+    """Wraps the device-sharded engine (``DeviceEngine``)."""
+
+    backend = "device"
+
+    def _make_inner(self, s: Strategy, grad_fn, devices):
+        return DeviceEngine(
+            DataParallelConfig(
+                num_workers=s.workers, lr=s.lr, sync=s.sync, arch=s.arch,
+                staleness=s.staleness, periods=s.periods,
+                topology=s.topology, compressor=s.compressor,
+                bucket_mb=s.bucket_mb, order=s.order, seed=s.seed),
+            grad_fn, devices)
+
+
+BACKENDS: Dict[str, type] = {"sim": SimBackend, "device": DeviceBackend}
+
+
+# -------------------------------------------------------------- trainer
+def fit(engine: Engine, params, batches: Callable[[int, int], Any],
+        steps: int):
+    """The single driver loop shared by every backend — the Engine protocol
+    adapted onto the same ``train_loop`` that drives ``make_train_step``
+    steps.  Returns (params, events, metrics); ``events`` is the full
+    per-update history (no subsampling — async engines' staleness records
+    are the point)."""
+    all_events: List[dict] = []
+
+    def step_fn(st, t, rng=None):
+        st, events = engine.step(st, batches, t)
+        all_events.extend(events)
+        mets = dict(
+            loss=events[-1]["loss"] if events else float("nan"),
+            max_staleness=max((e["max_staleness"] for e in events),
+                              default=0))
+        return st, mets
+
+    state, _ = train_loop(step_fn, engine.init(params), lambda t: t, steps,
+                          log_every=steps, jit=False)
+    return engine.finalize(state), all_events, engine.metrics()
+
+
+class Trainer:
+    """Declarative front-end: ``Trainer(strategy).fit(grad_fn, params,
+    batches, steps)`` builds the strategy's engine and drives it through
+    the shared loop.  Returns (params, history, metrics)."""
+
+    def __init__(self, strategy: Strategy,
+                 devices: Optional[Sequence] = None):
+        self.strategy = strategy
+        self.devices = devices
+
+    def fit(self, grad_fn: Callable, params,
+            batches: Callable[[int, int], Any], steps: int):
+        engine = self.strategy.build(grad_fn, self.devices)
+        return fit(engine, params, batches, steps)

@@ -11,7 +11,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression import Compressor
+from repro.core.compression import Compressor, EF_METHODS
 from repro.core.precision import PrecisionPolicy, DEFAULT
 from repro.optim.schedule import constant
 
@@ -26,7 +26,7 @@ class TrainState:
             opt_state=opt.init(params),
             step=jnp.zeros((), jnp.int32),
             ef=(compressor.init_state(params)
-                if compressor and compressor.method in ("onebit", "dgc")
+                if compressor and compressor.method in EF_METHODS
                 else None),
         )
 
@@ -75,7 +75,10 @@ def make_train_step(loss_fn: Callable, opt, lr_schedule=None,
 def train_loop(train_step, state, batch_fn: Callable[[int], Any],
                steps: int, log_every: int = 10, jit: bool = True,
                rng=None):
-    """Simple host loop for the examples; returns (state, history)."""
+    """The single host driver loop: drives ``make_train_step`` steps in
+    the examples AND every Strategy engine (``repro.train.strategy.fit``
+    adapts the Engine protocol onto this same contract, with ``batch_fn``
+    yielding the global-step index).  Returns (state, history)."""
     step_fn = jax.jit(train_step) if jit else train_step
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     hist = []

@@ -1,0 +1,237 @@
+"""One-Strategy-API tests (PR 2 tentpole).
+
+Covers: spec-string parsing and roundtrip, backend resolution, the Engine
+init/step/finalize protocol vs the composed run, Trainer.fit through the
+shared train_loop, deprecation shims (warn once + bitwise-identical
+results), the cell registry, and the full device sync×arch×compression
+matrix cross-validated against the simulator on 4 virtual devices.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.sync as sync_mod
+from repro.core import Compressor, SyncConfig, SyncEngine
+from repro.train import (DataParallelConfig, DataParallelEngine, Strategy,
+                         Trainer, registered_cells)
+from repro.train.strategy import ACCEPTANCE_CELLS, Cell
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+
+
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+
+
+P0 = {"W": jnp.zeros((8, 1))}
+
+
+# ------------------------------------------------------------------ parsing
+def test_parse_full_spec():
+    s = Strategy.parse("ssp:2/ps/dgc:0.05@8")
+    assert (s.sync, s.arch, s.workers, s.staleness) == ("ssp", "ps", 8, 2)
+    assert s.compressor.method == "dgc"
+    assert s.compressor.density == 0.05
+
+
+def test_parse_partial_specs_fill_defaults():
+    assert Strategy.parse("bsp").arch == "allreduce"
+    assert Strategy.parse("bsp").compressor.method == "none"
+    s = Strategy.parse("asp/ps@4", lr=0.5)
+    assert (s.sync, s.arch, s.workers, s.lr) == ("asp", "ps", 4, 0.5)
+    # segments named in the spec win over keyword defaults
+    assert Strategy.parse("bsp@4", workers=8).workers == 4
+    assert Strategy.parse("ssp:1", staleness=7).staleness == 1
+
+
+def test_parse_spec_roundtrip():
+    for spec in ("bsp/allreduce/none@4", "ssp:3/ps/onebit@8",
+                 "asp/allreduce/dgc:0.05@2", "sma/allreduce/none@4"):
+        assert Strategy.parse(spec).spec() == spec
+
+
+def test_parse_rejects_bad_specs():
+    for bad in ("", "warp/allreduce", "bsp/mesh", "bsp/allreduce/zip",
+                "bsp/allreduce/none/extra",
+                "asp:3/ps",                 # staleness bound is ssp-only
+                "bsp/allreduce/onebit:0.5",  # density is dgc-only
+                "ssp:-1",                   # negative bound never fires
+                "sma/allreduce/onebit",     # sma has no compression path
+                ):
+        with pytest.raises(ValueError):
+            Strategy.parse(bad)
+
+
+# -------------------------------------------------------- backend resolution
+def test_auto_backend_falls_back_to_sim_without_devices():
+    # host test process has a single device; workers=4 cannot shard
+    s = Strategy(sync="bsp", workers=4)
+    assert s.resolve_backend() == "sim"
+    assert s.build(grad_fn).backend == "sim"
+
+
+def test_sma_is_simulated_only():
+    assert Strategy(sync="sma", workers=4).resolve_backend() == "sim"
+    with pytest.raises(ValueError):
+        Strategy(sync="sma", workers=4, backend="device").resolve_backend()
+
+
+def test_device_backend_requires_devices():
+    with pytest.raises(ValueError, match="devices"):
+        Strategy(sync="bsp", workers=64, backend="device").build(grad_fn)
+
+
+# ------------------------------------------------------------ engine protocol
+def test_stepwise_protocol_equals_composed_run():
+    mk = lambda: Strategy(sync="ssp", workers=4, lr=0.05, staleness=2,
+                          backend="sim").build(grad_fn)
+    p_run, hist_run, wire_run = mk().run(P0, make_batch, 6)
+    eng = mk()
+    st, events = eng.init(P0), []
+    for t in range(6):
+        st, ev = eng.step(st, make_batch, t)
+        events.extend(ev)
+    assert [e["loss"] for e in events] == [e["loss"] for e in hist_run]
+    assert eng.metrics()["wire_bytes"] == wire_run
+    np.testing.assert_array_equal(np.asarray(eng.finalize(st)["W"]),
+                                  np.asarray(p_run["W"]))
+
+
+def test_trainer_fit_drives_shared_loop():
+    params, hist, mets = Trainer(
+        Strategy(sync="asp", workers=4, lr=0.05, backend="sim")
+    ).fit(grad_fn, P0, make_batch, 5)
+    assert mets["backend"] == "sim"
+    assert mets["spec"] == "asp/allreduce/none@4"
+    assert mets["wire_bytes"] > 0
+    assert len(hist) >= 5 * 4          # async: >= K updates per global step
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_all_sim_modes_converge_via_strategy():
+    for mode in ("bsp", "ssp", "asp", "sma"):
+        eng = Strategy(sync=mode, workers=4, lr=0.05,
+                       backend="sim").build(grad_fn)
+        _, hist, _ = eng.run(P0, make_batch, 25)
+        assert hist[-1]["loss"] < hist[0]["loss"] * 0.5, mode
+
+
+# ---------------------------------------------------------------- registry
+def test_registered_cells_cover_acceptance_matrix():
+    cells = set(registered_cells())
+    assert len(ACCEPTANCE_CELLS) == 18      # {bsp,ssp,asp}x{ar,ps}x{EF set}
+    assert ACCEPTANCE_CELLS <= cells
+    assert Cell("sma", "allreduce", "none", "sim") in cells
+
+
+# --------------------------------------------------------- deprecation shims
+def test_sync_engine_shim_warns_once_and_is_bitwise_identical():
+    sync_mod._WARNED.discard("SyncEngine")
+    cfg = SyncConfig(mode="ssp", num_workers=4, lr=0.05, staleness=2,
+                     compressor=Compressor("onebit"))
+    with pytest.warns(DeprecationWarning, match="SyncEngine"):
+        old = SyncEngine(cfg, grad_fn)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # second construction is quiet
+        SyncEngine(cfg, grad_fn)
+    p_old, h_old, w_old = old.run(P0, make_batch, 8)
+    eng = Strategy(sync="ssp", workers=4, lr=0.05, staleness=2,
+                   compression="onebit", backend="sim").build(grad_fn)
+    p_new, h_new, w_new = eng.run(P0, make_batch, 8)
+    assert [h["loss"] for h in h_old] == [h["loss"] for h in h_new]
+    assert w_old == w_new
+    np.testing.assert_array_equal(np.asarray(p_old["W"]),
+                                  np.asarray(p_new["W"]))
+
+
+def test_data_parallel_engine_shim_warns_once_and_is_bitwise_identical():
+    # num_workers=1 shards onto the host's single device
+    sync_mod._WARNED.discard("DataParallelEngine")
+    cfg = DataParallelConfig(num_workers=1, lr=0.05,
+                             compressor=Compressor("onebit"))
+    with pytest.warns(DeprecationWarning, match="DataParallelEngine"):
+        old = DataParallelEngine(cfg, grad_fn)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        DataParallelEngine(cfg, grad_fn)
+    p_old, h_old, w_old = old.run(P0, make_batch, 5)
+    eng = Strategy(sync="bsp", workers=1, lr=0.05, compression="onebit",
+                   backend="device").build(grad_fn)
+    p_new, h_new, w_new = eng.run(P0, make_batch, 5)
+    assert [h["loss"] for h in h_old] == [h["loss"] for h in h_new]
+    assert w_old == w_new
+    np.testing.assert_array_equal(np.asarray(p_old["W"]),
+                                  np.asarray(p_new["W"]))
+
+
+# -------------------------------------- device matrix (subprocess, 4 devices)
+SCRIPT_MATRIX = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.train import Strategy
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+# second leaf exercises the channelwise onebit/dgc reconstruction path
+P0 = {"W": jnp.zeros((8, 1)), "b": jnp.zeros((130,))}
+
+def maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+STEPS = 3
+for sync in ("bsp", "ssp", "asp"):
+    for comp in ("none", "onebit", "dgc"):
+        base = dict(sync=sync, workers=4, lr=0.05, compression=comp,
+                    density=0.1, staleness=2, bucket_mb=1e-4)
+        sim = Strategy(backend="sim", **base).build(grad_fn)
+        p_sim, h_sim, w_sim = sim.run(P0, make_batch, STEPS)
+        results = {}
+        for arch in ("allreduce", "ps"):
+            dev = Strategy(backend="device", arch=arch, **base).build(grad_fn)
+            assert dev.backend == "device"
+            p_dev, h_dev, w_dev = dev.run(P0, make_batch, STEPS)
+            results[arch] = (p_dev, w_dev)
+            # the device engine replays the simulator's event schedule
+            assert len(h_dev) == len(h_sim), (sync, comp, arch)
+            ldiff = max(abs(a["loss"] - b["loss"])
+                        for a, b in zip(h_dev, h_sim))
+            assert ldiff <= 1e-4, (sync, comp, arch, ldiff)
+            if sync != "bsp":
+                assert [e["worker"] for e in h_dev] == \
+                       [e["worker"] for e in h_sim]
+                assert [e["max_staleness"] for e in h_dev] == \
+                       [e["max_staleness"] for e in h_sim]
+            # wire accounting identical to the simulator's
+            assert w_dev == w_sim, (sync, comp, arch, w_dev, w_sim)
+        pd = maxdiff(results["allreduce"][0], results["ps"][0])
+        assert pd <= 1e-5, (sync, comp, pd)
+        assert results["allreduce"][1] == results["ps"][1]
+        print(f"CELL-OK {sync} {comp}")
+print("DEVICE-MATRIX-OK")
+"""
+
+
+def test_strategy_device_matrix_4dev(multidevice):
+    out = multidevice(SCRIPT_MATRIX, 4)
+    assert out.count("CELL-OK") == 9
+    assert "DEVICE-MATRIX-OK" in out

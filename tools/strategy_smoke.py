@@ -1,0 +1,91 @@
+"""`make strategies` tier-1 gate: execute EVERY registered Strategy cell.
+
+Each cell of ``repro.train.strategy.registered_cells()`` — the full
+sync × arch × compression matrix on both backends — runs for 2 global
+steps on a tiny deterministic regression problem with 2 workers; device
+cells run on 2 virtual host devices.  The target fails if any registered
+cell raises, produces a non-finite loss, or goes unexecuted, and if the
+registry ever stops covering the acceptance matrix.
+
+  PYTHONPATH=src python tools/strategy_smoke.py
+"""
+import os
+import sys
+
+# virtual devices must be configured before jax import
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=2").strip()
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.train import Strategy, registered_cells   # noqa: E402
+from repro.train.strategy import ACCEPTANCE_CELLS    # noqa: E402
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+
+
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+
+
+# a second leaf exercises the channelwise onebit/dgc reconstruction path
+P0 = {"W": jnp.zeros((8, 1)), "b": jnp.zeros((130,))}
+STEPS = 2
+WORKERS = 2
+
+
+def main() -> int:
+    registry = registered_cells()
+    # the registry must keep covering the acceptance matrix — removing a
+    # cell from registered_cells() is a test failure, not a silent skip
+    missing_required = ACCEPTANCE_CELLS - set(registry)
+    if missing_required:
+        print(f"FAIL: registry no longer covers the acceptance matrix: "
+              f"{sorted(missing_required)}")
+        return 1
+
+    executed, failures = set(), []
+    for cell in registry:
+        strat = Strategy(sync=cell.sync, arch=cell.arch,
+                         compression=cell.compression, workers=WORKERS,
+                         lr=0.05, staleness=1, density=0.1,
+                         backend=cell.backend)
+        try:
+            engine = strat.build(grad_fn)
+            _, hist, wire = engine.run(P0, make_batch, STEPS)
+            assert hist, "no history"
+            assert all(np.isfinite(h["loss"]) for h in hist), "loss NaN"
+            assert wire > 0, "no wire accounting"
+            executed.add(cell)
+            print(f"ok   {cell.backend:6s} {strat.spec()} "
+                  f"({len(hist)} events, {wire} wire B)")
+        except Exception as e:  # noqa: BLE001
+            failures.append((cell, e))
+            print(f"FAIL {cell.backend:6s} {strat.spec()}: {e!r}")
+
+    if failures:
+        print(f"FAIL: {len(failures)} of {len(registry)} registered "
+              f"cells failing")
+        return 1
+    print(f"strategies: all {len(executed)} registered cells executed on "
+          f"{WORKERS} virtual devices")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
