@@ -8,7 +8,7 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench strategies
+.PHONY: smoke tier1 bench strategies elastic
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -24,10 +24,16 @@ smoke:
 strategies:
 	$(PYTEST) $(SMOKE_TIMEOUT) python tools/strategy_smoke.py
 
-# Full tier-1 verify (ROADMAP.md): the strategy-matrix gate plus
-# everything in tests/, including the 8-virtual-device subprocess tests
-# and end-to-end training compositions.
-tier1: strategies
+# Elasticity gate: one crash, one resize, one straggler, and one
+# scheduler-trace-driven scenario on 2 virtual devices
+# (see docs/elasticity.md); fails if any scenario can't recover.
+elastic:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/elastic_smoke.py
+
+# Full tier-1 verify (ROADMAP.md): the strategy-matrix and elasticity
+# gates plus everything in tests/, including the 8-virtual-device
+# subprocess tests and end-to-end training compositions.
+tier1: strategies elastic
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

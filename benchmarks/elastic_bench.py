@@ -1,0 +1,94 @@
+"""Elasticity benchmark: goodput vs failure rate, recovery time.
+
+One JSON row per scenario (``benchmarks/common.emit_json``), on the tiny
+deterministic regression problem the elastic tests use (the point is the
+recovery machinery, not the model):
+
+  * ``goodput`` — committed steps / executed steps (rollbacks redo work)
+  * ``recovery_s`` — mean wall-clock of a restore+reshard cycle
+  * ``failure_rate`` — crashes per 100 steps injected by the plan
+  * ``final_loss`` vs the uninterrupted baseline
+
+  PYTHONPATH=src python -m benchmarks.elastic_bench
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_json
+from repro.elastic import EventPlan
+from repro.train import Strategy, Trainer
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+STEPS = 20
+SPEC = "ssp:2/allreduce/onebit@4"
+
+
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+
+
+P0 = {"W": jnp.zeros((8, 1)), "b": jnp.zeros((130,))}
+
+SCENARIOS = [
+    ("baseline", ""),
+    ("crash_x1", "crash:w1@7"),
+    ("crash_x2", "crash:w1@7,crash:w2@14"),
+    ("resize_down_up", "resize:2@7,resize:4@14"),
+    ("backup_straggler", None),          # handled below (spec change)
+    ("restart", "restart@10"),
+]
+
+
+def run_one(name: str, spec: str, plan: str):
+    strat = Strategy.parse(spec, lr=0.05, backend="sim")
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as d:
+        params, hist, mets = Trainer(strat).fit(
+            grad_fn, P0, make_batch, STEPS,
+            plan=EventPlan.parse(plan), checkpoint_dir=d,
+            checkpoint_every=5)
+    wall = time.time() - t0
+    n_crash = plan.count("crash")
+    recov = mets["recoveries"]
+    return dict(
+        scenario=name, spec=mets["spec"], steps=STEPS,
+        executed_steps=mets["executed_steps"],
+        goodput=STEPS / max(1, mets["executed_steps"]),
+        failure_rate=100.0 * n_crash / STEPS,
+        recoveries=len(recov),
+        recovery_s=(sum(r["wall_s"] for r in recov) / len(recov)
+                    if recov else 0.0),
+        lost_steps=sum(r["lost_steps"] for r in recov),
+        dropped_updates=mets["dropped_updates"],
+        resizes=mets["resizes"], final_workers=mets["final_workers"],
+        wire_bytes=mets["wire_bytes"], final_loss=hist[-1]["loss"],
+        wall_s=wall)
+
+
+def main():
+    rows = []
+    for name, plan in SCENARIOS:
+        if name == "backup_straggler":
+            rows.append(run_one(name, "bsp+backup:1/allreduce/onebit@4",
+                                "slow:w0x4@5"))
+        else:
+            rows.append(run_one(name, SPEC, plan))
+    emit_json(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ BENCHES = [
     ("comm_schedule", "benchmarks.comm_schedule_bench"),  # §3.3.3(3)
     ("data_parallel", "benchmarks.data_parallel_bench"),  # §3.3 executable
     ("scheduler", "benchmarks.scheduler_bench"),        # §3.4.2
+    ("elastic", "benchmarks.elastic_bench"),            # §3.2.3 / §3.4.2
     ("kernel", "benchmarks.kernel_bench"),              # §3.3.3 hot spots
 ]
 

@@ -17,6 +17,16 @@ The parallel-training strategy is one declarative spec string
                                       (Strategy engine path, SGD)
 
 Multi-worker specs re-exec with that many virtual host devices.
+
+``--failure-plan "crash:w1@5,resize:4@10"`` demonstrates elastic
+fault-tolerant training end to end: the run snapshots through
+repro.checkpoint, loses worker 1 before step 5, recovers from the latest
+checkpoint, reshards to the survivors, and grows back to 4 workers at
+step 10 — all in one process (docs/elasticity.md):
+
+  PYTHONPATH=src python examples/train_100m_e2e.py --steps 30 \
+      --strategy ssp:2/allreduce/onebit@4 --failure-plan crash:w1@5 \
+      --checkpoint-every 5
 """
 import argparse
 import dataclasses
@@ -113,7 +123,10 @@ def _fit_with_optimizer(strat, model, params, batches, args):
 
 def _fit_with_strategy_engine(strat, model, params, batches, args):
     """Every other cell (ssp/asp staleness replay, arch=ps, sma) goes
-    through the Strategy engine (SGD at --engine-lr) via Trainer.fit."""
+    through the Strategy engine (SGD at --engine-lr) via Trainer.fit.
+    With --failure-plan the run goes through the elastic trainer: the
+    engine is snapshotted every --checkpoint-every steps and survives the
+    plan's crashes/resizes/stragglers in process (docs/elasticity.md)."""
     def grad_fn(p, batch):
         (loss, _), g = jax.value_and_grad(
             lambda pp: model.loss_fn(pp, batch, compute_dtype=jnp.float32),
@@ -122,7 +135,24 @@ def _fit_with_strategy_engine(strat, model, params, batches, args):
 
     strat = dataclasses.replace(strat, lr=args.engine_lr)
     trainer = Trainer(strat)
-    params, hist, mets = trainer.fit(grad_fn, params, batches, args.steps)
+    if args.failure_plan:
+        params, hist, mets = trainer.fit(
+            grad_fn, params, batches, args.steps, plan=args.failure_plan,
+            checkpoint_dir=os.path.join(args.out, "elastic_ckpts"),
+            checkpoint_every=args.checkpoint_every)
+        for r in mets["recoveries"]:
+            print(f"  {r['kind']} at step {r['at']}: restored step "
+                  f"{r['restored_step']} ({r['lost_steps']} steps lost, "
+                  f"{r['wall_s']:.2f}s), now {r['workers']} workers")
+        print(f"elastic: {len(mets['recoveries'])} recoveries, "
+              f"{mets['resizes']} resizes, "
+              f"{mets['executed_steps']} steps executed for "
+              f"{args.steps} committed "
+              f"(goodput {args.steps / mets['executed_steps']:.2f}), "
+              f"{mets['dropped_updates']} straggler pushes dropped")
+    else:
+        params, hist, mets = trainer.fit(grad_fn, params, batches,
+                                         args.steps)
     print(f"strategy engine: {mets['spec']} on {mets['backend']} backend, "
           f"{mets['wire_bytes']} wire B total")
     return params, hist
@@ -141,6 +171,13 @@ def main():
     ap.add_argument("--engine-lr", type=float, default=0.05,
                     help="SGD lr for non-bsp/allreduce cells, which train "
                          "through the Strategy engine instead of AdamW")
+    ap.add_argument("--failure-plan", default="",
+                    help="elastic event plan, e.g. 'crash:w1@5,resize:4@10'"
+                         " — inject a mid-run crash + recovery (grammar in"
+                         " docs/elasticity.md; routes through the Strategy"
+                         " engine + elastic trainer)")
+    ap.add_argument("--checkpoint-every", type=int, default=10,
+                    help="elastic snapshot cadence (global steps)")
     ap.add_argument("--out", default="results/train_100m")
     args = ap.parse_args()
     # workers default must agree with the pre-jax re-exec hook, which
@@ -163,7 +200,11 @@ def main():
 
     os.makedirs(args.out, exist_ok=True)
     t0 = time.time()
-    if strat.sync == "bsp" and strat.arch == "allreduce":
+    if args.failure_plan:
+        params, hist = _fit_with_strategy_engine(strat, model, params,
+                                                 batches, args)
+        trainer_used, lr_used = "strategy-engine-elastic", args.engine_lr
+    elif strat.sync == "bsp" and strat.arch == "allreduce":
         params, hist = _fit_with_optimizer(strat, model, params, batches,
                                            args)
         trainer_used, lr_used = "adamw+cosine", args.lr

@@ -1,6 +1,8 @@
 """Model-data management (survey §3.5.2): sharded checkpoints + a
 ModelDB-style registry."""
-from repro.checkpoint.store import save_checkpoint, load_checkpoint
+from repro.checkpoint.store import (is_valid_checkpoint, load_checkpoint,
+                                    read_manifest, save_checkpoint)
 from repro.checkpoint.registry import ModelRegistry
 
-__all__ = ["save_checkpoint", "load_checkpoint", "ModelRegistry"]
+__all__ = ["save_checkpoint", "load_checkpoint", "read_manifest",
+           "is_valid_checkpoint", "ModelRegistry"]

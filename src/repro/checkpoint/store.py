@@ -4,12 +4,20 @@ Layout: <dir>/manifest.json (treedef + leaf metadata + shard map) and
 <dir>/shard_<i>.npz.  Large leaves are split across shards so no single
 file exceeds ``shard_bytes`` — the layout a multi-host save would produce
 with one shard per host.
+
+Writes are atomic: shards and manifest are staged into a sibling temp
+directory which is then renamed into place with ``os.replace``, so a crash
+mid-save can never leave a torn checkpoint for recovery to load.  The
+manifest carries an optional ``extra`` JSON blob (``read_manifest``) —
+the elastic trainer stores engine bookkeeping (worker count, tick/update
+counters) there next to the array state.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, List
+import shutil
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -21,12 +29,14 @@ def _leaf_paths(tree):
                      for k in path) for path, _ in flat]
 
 
-def save_checkpoint(path: str, tree, step: int = 0,
-                    shard_bytes: int = 512 * 1024 * 1024) -> Dict:
+def _write_checkpoint(path: str, tree, step: int, shard_bytes: int,
+                      extra: Optional[Dict]) -> Dict:
     os.makedirs(path, exist_ok=True)
     leaves = jax.tree.leaves(tree)
     names = _leaf_paths(tree)
     manifest: Dict[str, Any] = {"step": step, "leaves": [], "shards": 0}
+    if extra is not None:
+        manifest["extra"] = extra
     shard: Dict[str, np.ndarray] = {}
     shard_size = 0
     shard_idx = 0
@@ -51,15 +61,57 @@ def save_checkpoint(path: str, tree, step: int = 0,
                                    "dtype": str(arr.dtype)})
     flush()
     manifest["shards"] = shard_idx
+    # manifest last: its presence is the per-directory commit marker
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     return manifest
 
 
+def save_checkpoint(path: str, tree, step: int = 0,
+                    shard_bytes: int = 512 * 1024 * 1024,
+                    extra: Optional[Dict] = None) -> Dict:
+    """Atomically write ``tree`` to the checkpoint directory ``path``.
+
+    All files are staged into ``<path>.tmp.<pid>`` and swapped in with one
+    ``os.replace`` — a reader either sees the complete old checkpoint, no
+    checkpoint, or the complete new one, never a torn mix.  When
+    overwriting, the existing checkpoint is renamed aside (not deleted)
+    before the swap, so even a crash mid-swap leaves the old data
+    recoverable at ``<path>.old.<pid>``."""
+    path = os.path.abspath(path)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    old = f"{path}.old.{os.getpid()}"
+    shutil.rmtree(tmp, ignore_errors=True)
+    try:
+        manifest = _write_checkpoint(tmp, tree, step, shard_bytes, extra)
+        if os.path.isdir(path):
+            shutil.rmtree(old, ignore_errors=True)
+            os.rename(path, old)
+        os.replace(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return manifest
+
+
+def read_manifest(path: str) -> Dict:
+    """The checkpoint's manifest (step, leaf metadata, ``extra`` blob).
+    Raises FileNotFoundError for a missing or uncommitted checkpoint."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def is_valid_checkpoint(path: str) -> bool:
+    """True iff ``path`` holds a committed (manifest-bearing) checkpoint."""
+    return os.path.isfile(os.path.join(path, "manifest.json"))
+
+
 def load_checkpoint(path: str, like):
     """Restore into the structure of `like` (a pytree or eval_shape result)."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(path)
     by_shard: Dict[int, List[dict]] = {}
     for rec in manifest["leaves"]:
         by_shard.setdefault(rec["shard"], []).append(rec)

@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 from repro.core.compression import Compressor
+from repro.elastic.backup import drop_set
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,7 @@ class SyncConfig:
     # deterministic worker speeds: worker i finishes every periods[i] ticks
     periods: Optional[Tuple[int, ...]] = None
     compressor: Compressor = Compressor("none")
+    backup: int = 0              # BSP backup workers: drop the k slowest
     seed: int = 0
 
 
@@ -75,7 +77,37 @@ def firing_schedule(tick: int, periods: Tuple[int, ...],
     return firing
 
 
-class SimSyncEngine:
+class ElasticWorkerSet:
+    """The shared elastic worker-schedule surface of every engine
+    (simulated and device): straggler slowdowns over the base ``periods``
+    and the backup-drop accounting.  One implementation, inherited by
+    both backends, so the effective schedule — and therefore the async
+    firing order and the backup drop set — cannot desynchronize between
+    them.  Subclass ``__init__`` must set ``self.periods``,
+    ``self.slowdowns``, and ``self._dropped``."""
+
+    periods: Tuple[int, ...]
+    slowdowns: List[float]
+    _dropped: int
+
+    def set_slowdown(self, worker: int, factor: float):
+        """Apply a straggler event: worker's period scales by ``factor``
+        (1.0 clears).  Affects the async firing schedule and the backup
+        drop set."""
+        self.slowdowns[worker] = factor
+
+    def effective_periods(self) -> Tuple[int, ...]:
+        """Base periods with active slowdowns folded in (min 1 tick) —
+        the schedule both the firing loop and the backup drop set use."""
+        return tuple(max(1, int(round(p * s)))
+                     for p, s in zip(self.periods, self.slowdowns))
+
+    def dropped_updates(self) -> int:
+        """Gradient pushes discarded by the backup-worker policy."""
+        return self._dropped
+
+
+class SimSyncEngine(ElasticWorkerSet):
     """Drives ``grad_fn(params, batch) -> (loss, grads)`` under a
     synchronization model over a stream of per-worker batches.
 
@@ -86,11 +118,19 @@ class SimSyncEngine:
     event loop with threshold ``updates < T*K``)."""
 
     def __init__(self, cfg: SyncConfig, grad_fn: Callable):
+        if cfg.backup and cfg.mode != "bsp":
+            raise ValueError("backup workers compose with bsp only "
+                             "(async modes have no round to drop from)")
+        if cfg.backup >= cfg.num_workers:
+            raise ValueError("backup k must leave at least one worker")
         self.cfg = cfg
         self.grad_fn = jax.jit(grad_fn)
         periods = cfg.periods or default_periods(cfg.num_workers)
         assert len(periods) == cfg.num_workers
         self.periods = periods
+        # elastic straggler state: slow:wNxF events scale worker N's period
+        self.slowdowns: List[float] = [1.0] * cfg.num_workers
+        self._dropped = 0
         self._apply = jax.jit(
             lambda p, g, lr: jax.tree.map(lambda a, b: a - lr * b, p, g))
         self._avg = jax.jit(
@@ -122,6 +162,11 @@ class SimSyncEngine:
                 tick=0,
                 updates=0,
                 batch_idx=[0] * K,
+                # reshard rebases the step↔update accounting here so a
+                # resized run keeps "one global step = K updates" at the
+                # *current* K (see reshard)
+                updates_base=0,
+                step_base=0,
             )
         elif cfg.mode == "sma":
             st.update(replicas=[jax.tree.map(lambda x: x, params)
@@ -135,8 +180,14 @@ class SimSyncEngine:
         cfg = self.cfg
         K = cfg.num_workers
         params = st["params"]
+        # backup workers: the k slowest under the effective schedule never
+        # reach the server this round — their batch is discarded and their
+        # EF state is untouched (elastic/backup.py; same rule on devices)
+        drop = drop_set(self.periods, cfg.backup, self.slowdowns)
         losses, grads = [], []
         for w in range(K):
+            if w in drop:
+                continue
             loss, g = self.grad_fn(params, batches(t, w))
             if cfg.compressor.method != "none":
                 st["rng"], sub = jax.random.split(st["rng"])
@@ -148,9 +199,12 @@ class SimSyncEngine:
                                   for x in jax.tree.leaves(g))
             losses.append(float(loss))
             grads.append(g)
+        self._dropped += len(drop)
         st["params"] = self._apply(params, self._avg(grads), cfg.lr)
-        return st, [dict(step=t, loss=float(np.mean(losses)),
-                         max_staleness=0)]
+        ev = dict(step=t, loss=float(np.mean(losses)), max_staleness=0)
+        if drop:
+            ev["dropped"] = sorted(drop)
+        return st, [ev]
 
     # ------------------------------------------------------- SSP / ASP core
     def _step_async(self, st, batches, t, bound: Optional[int]):
@@ -162,9 +216,11 @@ class SimSyncEngine:
         cfg = self.cfg
         K = cfg.num_workers
         events = []
-        while st["updates"] < (t + 1) * K:
+        eff_periods = self.effective_periods()   # invariant within a step
+        while st["updates"] - st["updates_base"] < \
+                (t + 1 - st["step_base"]) * K:
             st["tick"] += 1
-            for w in firing_schedule(st["tick"], self.periods,
+            for w in firing_schedule(st["tick"], eff_periods,
                                      st["batch_idx"], bound):
                 loss, g = self.grad_fn(st["pulled"][w],
                                        batches(st["batch_idx"][w], w))
@@ -230,6 +286,112 @@ class SimSyncEngine:
 
     def wire_bytes(self) -> int:
         return self._wire
+
+    # ------------------------------------------- elastic reshard / snapshot
+    def reshard(self, st, new_workers: int, step: int = 0,
+                lost: Tuple[int, ...] = ()):
+        """Re-size the simulated worker set N→M in place and return the
+        resharded run-state.  Survivors (old slots minus ``lost``, in
+        order) keep their compressor/EF state and batch clocks; grown
+        slots start fresh at the batch frontier.  A reshard is a
+        synchronization barrier: every async worker re-pulls the current
+        params at the current server version, and the step↔update
+        accounting rebases at global step ``step`` so one global step
+        stays M updates."""
+        cfg = self.cfg
+        if new_workers < 1:
+            raise ValueError("new_workers must be >= 1")
+        if cfg.backup >= new_workers:
+            raise ValueError(f"backup k={cfg.backup} needs > k workers")
+        bad = [w for w in lost if w < 0 or w >= cfg.num_workers]
+        if bad:
+            raise ValueError(f"lost workers {bad} out of range for "
+                             f"{cfg.num_workers} workers")
+        survivors = [w for w in range(cfg.num_workers) if w not in set(lost)]
+        slots = survivors[:new_workers]
+        grown = new_workers - len(slots)
+        # survivors keep their speed identity (like their slowdowns and
+        # EF state); grown slots take the default-schedule tail
+        periods = tuple([self.periods[s] for s in slots]
+                        + list(default_periods(new_workers))[len(slots):])
+        self.cfg = cfg = dataclasses.replace(
+            cfg, num_workers=new_workers, periods=periods)
+        self.periods = periods
+        self.slowdowns = [self.slowdowns[s] for s in slots] + [1.0] * grown
+        params_like = (st["replicas"][0] if cfg.mode == "sma"
+                       else st["params"])
+        st["comp_states"] = (
+            [st["comp_states"][s] for s in slots]
+            + [cfg.compressor.init_state(params_like) for _ in range(grown)])
+        if cfg.mode in ("ssp", "asp"):
+            frontier = max([st["batch_idx"][s] for s in slots] or [0])
+            st["pulled"] = [st["params"]] * new_workers
+            st["pulled_ver"] = [st["server_ver"]] * new_workers
+            st["batch_idx"] = ([st["batch_idx"][s] for s in slots]
+                               + [frontier] * grown)
+            st["updates_base"] = st["updates"]
+            st["step_base"] = step
+        elif cfg.mode == "sma":
+            center = self._avg(st["replicas"])
+            st["replicas"] = ([st["replicas"][s] for s in slots]
+                              + [center] * grown)
+        return st
+
+    def export_state(self, st) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """Split the run-state into (array pytree, JSON-able meta) for
+        ``repro.checkpoint`` — the inverse of ``import_state``."""
+        cfg = self.cfg
+        arrays: Dict[str, Any] = {"rng": st["rng"],
+                                  "comp_states": st["comp_states"]}
+        meta: Dict[str, Any] = dict(
+            backend="sim", mode=cfg.mode, num_workers=cfg.num_workers,
+            wire=int(st["wire"]), periods=list(self.periods),
+            slowdowns=list(self.slowdowns), dropped=self._dropped)
+        if cfg.mode == "sma":
+            arrays["replicas"] = st["replicas"]
+        else:
+            arrays["params"] = st["params"]
+        if cfg.mode in ("ssp", "asp"):
+            arrays["pulled"] = st["pulled"]
+            meta.update(pulled_ver=list(st["pulled_ver"]),
+                        server_ver=int(st["server_ver"]),
+                        tick=int(st["tick"]), updates=int(st["updates"]),
+                        batch_idx=list(st["batch_idx"]),
+                        updates_base=int(st["updates_base"]),
+                        step_base=int(st["step_base"]))
+        return arrays, meta
+
+    def import_state(self, arrays: Dict[str, Any], meta: Dict[str, Any]):
+        """Rebuild the run-state from an ``export_state`` snapshot.  The
+        engine must already be configured at ``meta['num_workers']``."""
+        cfg = self.cfg
+        if meta["num_workers"] != cfg.num_workers:
+            raise ValueError(
+                f"snapshot has {meta['num_workers']} workers, engine has "
+                f"{cfg.num_workers}; reshard the engine first")
+        # the worker speed schedule travels with the snapshot: a resharded
+        # run's remapped periods must survive a cross-process restore
+        self.periods = tuple(int(p) for p in meta["periods"])
+        self.cfg = cfg = dataclasses.replace(cfg, periods=self.periods)
+        self.slowdowns = [float(s) for s in meta["slowdowns"]]
+        self._dropped = int(meta["dropped"])
+        st: Dict[str, Any] = dict(
+            rng=jax.numpy.asarray(arrays["rng"]),
+            comp_states=arrays["comp_states"], wire=int(meta["wire"]))
+        if cfg.mode == "sma":
+            st["replicas"] = arrays["replicas"]
+        else:
+            st["params"] = arrays["params"]
+        if cfg.mode in ("ssp", "asp"):
+            st.update(pulled=arrays["pulled"],
+                      pulled_ver=list(meta["pulled_ver"]),
+                      server_ver=int(meta["server_ver"]),
+                      tick=int(meta["tick"]), updates=int(meta["updates"]),
+                      batch_idx=list(meta["batch_idx"]),
+                      updates_base=int(meta["updates_base"]),
+                      step_base=int(meta["step_base"]))
+        self._wire = st["wire"]
+        return st
 
     # ------------------------------------------------------------------ run
     def run(self, params, batches: Callable[[int, int], Any], steps: int):

@@ -49,6 +49,25 @@ def dirichlet_partition(labels: np.ndarray, num_clients: int,
     return [np.sort(np.array(ix, dtype=np.int64)) for ix in client_idx]
 
 
+def stream_assignment(n_streams: int, num_workers: int,
+                      seed: int = 0) -> List[List[int]]:
+    """Deterministic worker→streams map for elastic resizing.
+
+    A job keeps ``n_streams`` logical data streams (one per worker at its
+    nominal size); when the scheduler resizes it to ``num_workers``, each
+    worker slot covers an ordered list of streams: its own at nominal
+    size, one ``iid_partition`` part when shrunk (the M workers *cover*
+    all N streams, rotating within their part), round-robin wrap when
+    grown beyond the stream count.  Pure in (n_streams, num_workers,
+    seed), so the sim and device backends repartition identically."""
+    if num_workers == n_streams:
+        return [[s] for s in range(n_streams)]
+    if num_workers < n_streams:
+        parts = iid_partition(n_streams, num_workers, seed)
+        return [[int(s) for s in p] for p in parts]
+    return [[w % n_streams] for w in range(num_workers)]
+
+
 def label_skew(partitions: List[np.ndarray], labels: np.ndarray) -> float:
     """Mean total-variation distance of client label dists from global."""
     n_classes = int(labels.max()) + 1

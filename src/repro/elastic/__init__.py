@@ -1,0 +1,29 @@
+"""Elastic, fault-tolerant training (survey §3.2.3 / §3.4.2).
+
+Makes every registered Strategy cell survivable and resizable:
+
+  events.py    declarative FailurePlan / ResizePlan / StragglerPlan event
+               schedules + the sched/-trace adapter (scheduler↔trainer)
+  recovery.py  fit_elastic: periodic engine snapshots through
+               repro.checkpoint, crash rollback + reshard, live resize
+  backup.py    bounded drop-slowest-k gradient aggregation (the survey's
+               backup-worker straggler mitigation; ``bsp+backup:k``)
+
+See docs/elasticity.md for the grammar, recovery semantics, and the
+backup-worker accounting.
+"""
+from repro.elastic.backup import drop_set, participation_weights
+from repro.elastic.events import (ElasticEvent, EventPlan, FailurePlan,
+                                  ResizePlan, StragglerPlan, merge_plans,
+                                  plan_from_sched_trace)
+from repro.elastic.recovery import (ElasticBatches, fit_elastic,
+                                    latest_checkpoint, restore_engine_state,
+                                    save_engine_state)
+
+__all__ = [
+    "ElasticEvent", "EventPlan", "FailurePlan", "ResizePlan",
+    "StragglerPlan", "merge_plans", "plan_from_sched_trace",
+    "fit_elastic", "ElasticBatches", "save_engine_state",
+    "restore_engine_state", "latest_checkpoint",
+    "drop_set", "participation_weights",
+]

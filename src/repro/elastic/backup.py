@@ -1,0 +1,55 @@
+"""Straggler mitigation via backup workers (survey §3.2.3 / §3.3.2).
+
+The survey's backup-worker technique (Chen et al.: run N workers, apply
+the first N-k gradients, discard the k stragglers') becomes a Strategy
+knob: ``bsp+backup:k`` runs synchronous data parallelism but aggregates
+only the fastest N-k workers each step.  The straggler's mini-batch is
+discarded — its gradient never reaches the server, so its error-feedback
+state must not be consumed either (both engines mask EF updates with the
+participation weights below).
+
+Which workers are "slowest" is deterministic, like everything else in the
+repo: the engine's worker speed schedule (``periods``, optionally scaled
+by elastic ``slow`` events — see elastic/events.py) ranks the workers,
+and the k with the largest effective period are dropped, ties broken
+toward the higher worker id.  The simulator and the device backend rank
+with the same function, so their drop sets — and therefore losses and
+wire accounting — agree by construction.
+"""
+from __future__ import annotations
+
+from typing import FrozenSet, Optional, Sequence
+
+import numpy as np
+
+
+def drop_set(periods: Sequence[float], k: int,
+             slowdowns: Optional[Sequence[float]] = None) -> FrozenSet[int]:
+    """The k slowest workers under the effective speed schedule.
+
+    ``periods[w]`` is worker w's base period (larger = slower); an active
+    ``slowdowns[w]`` factor multiplies it.  Ties break toward the higher
+    worker id so the drop set is a pure function of (periods, slowdowns,
+    k) on every backend."""
+    n = len(periods)
+    if k <= 0:
+        return frozenset()
+    if k >= n:
+        raise ValueError(f"backup k={k} must leave at least one of "
+                         f"{n} workers")
+    eff = [p * (slowdowns[w] if slowdowns is not None else 1.0)
+           for w, p in enumerate(periods)]
+    order = sorted(range(n), key=lambda w: (eff[w], w))
+    return frozenset(order[n - k:])
+
+
+def participation_weights(num_workers: int, drop: FrozenSet[int]
+                          ) -> np.ndarray:
+    """Per-worker aggregation weights for a drop-slowest-k step: a mean
+    over ``num_workers`` of the weighted gradients equals the plain mean
+    over the participants (dropped workers contribute exact zeros)."""
+    n_part = num_workers - len(drop)
+    w = np.full((num_workers,), num_workers / max(1, n_part), np.float32)
+    if drop:
+        w[sorted(drop)] = 0.0
+    return w

@@ -1,0 +1,244 @@
+"""Checkpoint-recovery and scheduler-driven resize for Strategy engines.
+
+``fit_elastic`` is the elastic counterpart of ``repro.train.strategy.fit``:
+it drives any Strategy engine step by step while consuming an elastic
+event plan (elastic/events.py).  Semantics, in the order events fire
+(always *before* the step they are scheduled at):
+
+  slow:wNxF   straggler: the engine's speed schedule scales worker N's
+              period by F — changes the async firing schedule and the
+              ``bsp+backup:k`` drop set (elastic/backup.py).
+  resize:M@t  scheduler grant/revoke: the engine reshards N→M live, in
+              process — no rollback.  Survivor workers keep their EF
+              residuals and batch clocks; data streams are re-assigned
+              through ``data/partition.stream_assignment``.  A
+              post-reshard checkpoint is written immediately so a later
+              crash never restores across a resize boundary.
+  crash:wN@t  failure: the run rolls back to the latest committed
+              checkpoint, reshards to the surviving K-1 workers (slot N
+              dropped), and continues — work since the checkpoint is
+              lost (counted in ``metrics["recoveries"]``), the process
+              survives.
+  restart@t   Gandiva-style suspend/resume: snapshot now, then restore —
+              exercises the full save→load→import path with zero lost
+              steps.
+
+Engine state travels through ``repro.checkpoint``: arrays (params, EF
+residuals, per-worker pulled copies, rng) in the sharded npz store,
+bookkeeping (worker count, tick/update counters, staleness clocks) in the
+manifest's ``extra`` blob.  Checkpoints are atomic (store.py), so a crash
+mid-save leaves the previous checkpoint intact.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.checkpoint.store import (is_valid_checkpoint, load_checkpoint,
+                                    read_manifest, save_checkpoint)
+from repro.data.partition import stream_assignment
+from repro.elastic.events import EventPlan, merge_plans
+
+_CKPT_FMT = "step_{:06d}"
+
+
+# ------------------------------------------------------- engine snapshots
+def save_engine_state(path: str, engine, state, step: int,
+                      history_len: int = 0) -> None:
+    """Atomically snapshot an engine's full run-state at ``step``."""
+    arrays, meta = engine.export_state(state)
+    meta = dict(meta, step=int(step), history_len=int(history_len))
+    save_checkpoint(path, arrays, step=int(step), extra=meta)
+
+
+def restore_engine_state(path: str, engine, params_like
+                         ) -> Tuple[Any, Dict[str, Any]]:
+    """Load a snapshot back into ``engine`` (resharding it first if the
+    snapshot was taken at a different worker count).  ``params_like``
+    only provides the parameter pytree *structure* for decoding.
+    Returns (state, meta)."""
+    meta = read_manifest(path)["extra"]
+    # one throwaway init provides the pytree structure; reshard it (not a
+    # second init) when the snapshot was taken at a different size
+    probe = engine.init(params_like)
+    if meta["num_workers"] != _engine_workers(engine):
+        probe = engine.reshard(probe, meta["num_workers"],
+                               step=meta["step"])
+    template, _ = engine.export_state(probe)
+    arrays, _step = load_checkpoint(path, template)
+    state = engine.import_state(arrays, meta)
+    return state, meta
+
+
+def _engine_workers(engine) -> int:
+    inner = getattr(engine, "inner", engine)
+    return inner.cfg.num_workers
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    """Newest committed (manifest-bearing) step_* checkpoint, or None."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for name in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, name)
+        if name.startswith("step_") and is_valid_checkpoint(full):
+            try:
+                step = int(name.split("_", 1)[1])
+            except ValueError:
+                continue
+            if best is None or step > best[0]:
+                best = (step, full)
+    return best[1] if best else None
+
+
+# --------------------------------------------------------- elastic batches
+class ElasticBatches:
+    """Worker→stream indirection for resizable jobs.
+
+    The user's ``batches(t, s)`` is keyed by a *logical stream* s in
+    [0, n_streams); each worker slot covers an ordered list of streams
+    through ``data/partition.stream_assignment`` (identity at nominal
+    size, so an unresized run sees exactly the original batches) and
+    rotates through its list by step — after a shrink the M workers keep
+    covering all N streams instead of starving N−M of them.  The map is
+    recomputed deterministically at every resize."""
+
+    def __init__(self, batches: Callable[[int, int], Any], n_streams: int,
+                 seed: int = 0):
+        self.batches = batches
+        self.n_streams = n_streams
+        self.seed = seed
+        self.assignment = stream_assignment(n_streams, n_streams, seed)
+
+    def assign(self, num_workers: int) -> List[List[int]]:
+        self.assignment = stream_assignment(self.n_streams, num_workers,
+                                            self.seed)
+        return self.assignment
+
+    def __call__(self, t: int, worker: int):
+        streams = self.assignment[worker]
+        return self.batches(t, streams[t % len(streams)])
+
+
+# ------------------------------------------------------------ the trainer
+def fit_elastic(strategy, grad_fn: Callable, params,
+                batches: Callable[[int, int], Any], steps: int, plan,
+                checkpoint_dir: Optional[str] = None,
+                checkpoint_every: int = 5,
+                devices=None):
+    """Drive ``strategy``'s engine for ``steps`` global steps under an
+    elastic event plan.  Returns (params, history, metrics) like
+    ``Trainer.fit``; metrics additionally carry ``recoveries`` (one
+    record per crash/restart), ``resizes``, ``executed_steps`` (includes
+    work redone after rollbacks), ``final_workers`` and
+    ``dropped_updates``."""
+    if isinstance(plan, str):
+        plan = EventPlan.parse(plan)
+    elif not isinstance(plan, EventPlan):
+        plan = merge_plans(plan)
+    if plan.needs_checkpoints and checkpoint_dir is None:
+        raise ValueError("plan contains crash/restart events; "
+                         "fit_elastic needs a checkpoint_dir to recover "
+                         "from")
+    if checkpoint_every < 1:
+        raise ValueError("checkpoint_every must be >= 1")
+    engine = strategy.build(grad_fn, devices)
+    eb = ElasticBatches(batches, n_streams=strategy.workers,
+                        seed=strategy.seed)
+    run = plan.start()
+    st = engine.init(params)
+    ckpt = (lambda step: os.path.join(checkpoint_dir,
+                                      _CKPT_FMT.format(step))) \
+        if checkpoint_dir else None
+
+    history: List[dict] = []
+    recoveries: List[dict] = []
+    resizes = 0
+    executed = 0
+    # recovery only ever restores checkpoints THIS run committed —
+    # a reused checkpoint_dir with stale step_* dirs from an earlier
+    # run must not leak foreign state into this one
+    written: set = set()
+
+    def commit(step: int, state, hist_len: int):
+        save_engine_state(ckpt(step), engine, state, step, hist_len)
+        written.add(step)
+
+    if ckpt:
+        commit(0, st, 0)
+
+    t = 0
+    while t < steps:
+        rolled_back = False
+        # one event at a time: a crash rollback leaves the rest of the
+        # due batch pending, to fire when the run reaches them again
+        while (ev := run.take_one(t)) is not None:
+            if ev.kind == "slow":
+                engine.set_slowdown(ev.worker, ev.factor)
+                if ckpt:
+                    # commit so a later crash rollback (which restores
+                    # pre-event slowdowns and never re-fires consumed
+                    # events) cannot erase the straggler
+                    commit(t, st, len(history))
+            elif ev.kind == "resize":
+                st = engine.reshard(st, ev.workers, step=t)
+                eb.assign(ev.workers)
+                resizes += 1
+                if ckpt:
+                    # commit the post-reshard state so a later crash never
+                    # restores across the resize boundary
+                    commit(t, st, len(history))
+            elif ev.kind in ("crash", "restart"):
+                t0 = time.time()
+                if ev.kind == "restart":
+                    # scheduler suspend: snapshot the live state first
+                    commit(t, st, len(history))
+                if not written:
+                    raise RuntimeError(
+                        f"no checkpoint committed by this run in "
+                        f"{checkpoint_dir!r} to recover from at step {t}")
+                path = ckpt(max(written))
+                if not is_valid_checkpoint(path):
+                    raise RuntimeError(
+                        f"checkpoint {path!r} is gone or torn; cannot "
+                        f"recover at step {t}")
+                st, meta = restore_engine_state(path, engine, params)
+                rstep = int(meta["step"])
+                history = history[:int(meta["history_len"])]
+                # checkpoints from the abandoned timeline (steps beyond
+                # the restore point) must not satisfy a later recovery
+                written = {s for s in written if s <= rstep}
+                if ev.kind == "crash":
+                    survivors = _engine_workers(engine) - 1
+                    st = engine.reshard(st, survivors, step=rstep,
+                                        lost=(ev.worker,))
+                    eb.assign(survivors)
+                    commit(rstep, st, len(history))
+                recoveries.append(dict(
+                    kind=ev.kind, at=t, restored_step=rstep,
+                    lost_steps=t - rstep,
+                    lost_worker=ev.worker if ev.kind == "crash" else None,
+                    workers=_engine_workers(engine),
+                    wall_s=time.time() - t0))
+                t = rstep
+                rolled_back = True
+                break
+        if rolled_back:
+            continue
+        if ckpt and t > 0 and t % checkpoint_every == 0:
+            commit(t, st, len(history))
+        st, evs = engine.step(st, eb, t)
+        history.extend(evs)
+        executed += 1
+        t += 1
+        if executed > steps * 10 + 100:
+            raise RuntimeError("elastic run not converging on its step "
+                               "target (runaway rollback loop?)")
+
+    mets = engine.metrics()
+    mets.update(recoveries=recoveries, resizes=resizes,
+                executed_steps=executed, wasted_steps=executed - steps,
+                final_workers=_engine_workers(engine))
+    return engine.finalize(st), history, mets

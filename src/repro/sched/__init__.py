@@ -3,6 +3,7 @@ multi-tenant GPU-cluster simulator with pluggable policies."""
 from repro.sched.jobs import Job, make_trace
 from repro.sched.cluster import Cluster
 from repro.sched.policies import POLICIES
-from repro.sched.simulator import simulate
+from repro.sched.simulator import SimResult, TraceEvent, simulate
 
-__all__ = ["Job", "make_trace", "Cluster", "POLICIES", "simulate"]
+__all__ = ["Job", "make_trace", "Cluster", "POLICIES", "simulate",
+           "SimResult", "TraceEvent"]

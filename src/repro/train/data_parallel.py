@@ -56,8 +56,9 @@ from repro.core.comm_scheduler import (LayerCost, LinkModel, bucketize,
                                        schedule_overlap, tictac_order)
 from repro.core.compression import Compressor, EF_METHODS
 from repro.core.parameter_server import make_ps_step, sgd_update_fn
-from repro.core.sync import (default_periods, firing_schedule,
-                             warn_deprecated)
+from repro.core.sync import (ElasticWorkerSet, default_periods,
+                             firing_schedule, warn_deprecated)
+from repro.elastic.backup import drop_set, participation_weights
 
 AXIS = "workers"
 
@@ -76,6 +77,7 @@ class DataParallelConfig:
     periods: Optional[Tuple[int, ...]] = None
     topology: str = "ring"           # key into TOPOLOGIES
     compressor: Compressor = Compressor("none")
+    backup: int = 0                  # BSP backup workers: drop the k slowest
     bucket_mb: float = 4.0           # gradient bucket fusion size
     order: str = "tictac"            # "tictac" | "random" | "layer"
     link: LinkModel = LinkModel()
@@ -231,7 +233,7 @@ def make_sharded_train_step(train_step: Callable, mesh: Mesh,
     return jax.jit(fn)
 
 
-class DeviceEngine:
+class DeviceEngine(ElasticWorkerSet):
     """Executable {bsp,ssp,asp} × {allreduce,ps} over N host devices;
     drop-in comparable with ``SimSyncEngine``: ``init / step / finalize``
     plus a composed ``run`` with the same signature and the same
@@ -245,16 +247,23 @@ class DeviceEngine:
                 f"(supported: {DEVICE_SYNCS}; sma is simulated-only)")
         if cfg.arch not in ARCHS:
             raise ValueError(f"arch={cfg.arch!r} (supported: {ARCHS})")
+        if cfg.backup and cfg.sync != "bsp":
+            raise ValueError("backup workers compose with bsp only "
+                             "(async modes have no round to drop from)")
+        if cfg.backup >= cfg.num_workers:
+            raise ValueError("backup k must leave at least one worker")
         self.cfg = cfg
         self.grad_fn = grad_fn
-        devs = list(devices or jax.devices())
-        if len(devs) < cfg.num_workers:
+        self._devs = list(devices or jax.devices())
+        if len(self._devs) < cfg.num_workers:
             raise ValueError(
-                f"need {cfg.num_workers} devices, have {len(devs)} "
+                f"need {cfg.num_workers} devices, have {len(self._devs)} "
                 "(run under XLA_FLAGS=--xla_force_host_platform_device_count=N)")
-        self.mesh = Mesh(np.array(devs[:cfg.num_workers]), (AXIS,))
+        self.mesh = Mesh(np.array(self._devs[:cfg.num_workers]), (AXIS,))
         self.periods = cfg.periods or default_periods(cfg.num_workers)
         assert len(self.periods) == cfg.num_workers
+        self.slowdowns: List[float] = [1.0] * cfg.num_workers
+        self._dropped = 0
         self._step_fn = None
         self._wire_cell: List[int] = []
         self._async_fns = None
@@ -310,34 +319,49 @@ class DeviceEngine:
             seed=cfg.seed) if cfg.arch != "ps" else None)
         # compressor wire counts are shape-static Python ints at trace
         # time; capture them host-side rather than threading them through
-        # the device as int32 (which overflows past 2 GiB/step)
+        # the device as int32 (which overflows past 2 GiB/step); the entry
+        # is per worker-event — the host multiplies by the participant
+        # count (all K, or K-k under backup)
         wire_cell: List[int] = []
 
-        def sharded_step(params, ef, batch, rng):
-            # params replicated; ef/batch/rng carry a leading worker axis
+        def sharded_step(params, ef, batch, rng, weight):
+            # params replicated; ef/batch/rng/weight carry a worker axis.
+            # weight is this worker's aggregation weight: 1 normally,
+            # K/(K-k) for backup-round participants, 0 for dropped
+            # stragglers (whose push never reaches the server and whose
+            # EF state is therefore not consumed).
             batch = jax.tree.map(lambda x: x[0], batch)
-            ef = jax.tree.map(lambda x: x[0], ef) if ef is not None else None
+            ef_in = (jax.tree.map(lambda x: x[0], ef)
+                     if ef is not None else None)
             rng = rng[0]
+            wt = weight[0]
             loss, grads = self.grad_fn(params, batch)
             if comp.method != "none":
-                grads, ef, wb = comp.roundtrip(grads, ef, rng)
+                grads, ef_new, wb = comp.roundtrip(grads, ef_in, rng)
             else:
+                ef_new = ef_in
                 wb = sum(int(x.size) * 4 for x in jax.tree.leaves(grads))
             if not wire_cell:
-                wire_cell.append(int(wb) * cfg.num_workers)
+                wire_cell.append(int(wb))
+            grads = jax.tree.map(lambda x: x * wt, grads)
             if cfg.arch == "ps":
                 new_params = bucketed_ps(params, grads)
             else:
                 avg = bucketed_allreduce(grads)
                 new_params = jax.tree.map(lambda p, g: p - cfg.lr * g,
                                           params, avg)
-            ef_out = (jax.tree.map(lambda x: x[None], ef)
-                      if ef is not None else None)
+            if ef_new is not None:
+                ef_out = jax.tree.map(
+                    lambda new, old: jnp.where(wt > 0, new, old),
+                    ef_new, ef_in)
+                ef_out = jax.tree.map(lambda x: x[None], ef_out)
+            else:
+                ef_out = ef
             return (new_params, ef_out, loss[None])
 
         ef_spec = P(AXIS) if self._ef_active else P()
         fn = shard_map(sharded_step, mesh=self.mesh,
-                       in_specs=(P(), ef_spec, P(AXIS), P(AXIS)),
+                       in_specs=(P(), ef_spec, P(AXIS), P(AXIS), P(AXIS)),
                        out_specs=(P(), ef_spec, P(AXIS)),
                        check_vma=False)
         return jax.jit(fn), wire_cell
@@ -346,15 +370,25 @@ class DeviceEngine:
         K = self.cfg.num_workers
         if self._step_fn is None:
             self._step_fn, self._wire_cell = self._build_step(st["params"])
+        # backup workers: drop the k slowest under the same effective
+        # schedule the simulator ranks with (elastic/backup.py)
+        drop = drop_set(self.periods, self.cfg.backup, self.slowdowns)
+        weights = participation_weights(K, drop)
         per_worker = [batches(t, w) for w in range(K)]
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_worker)
         st["rng"], *subs = jax.random.split(st["rng"], K + 1)
         params, ef, losses = self._step_fn(
-            st["params"], st["ef"], batch, jnp.stack(subs))
+            st["params"], st["ef"], batch, jnp.stack(subs),
+            jnp.asarray(weights))
         st.update(params=params, ef=ef)
-        st["wire"] += self._wire_cell[0]
-        return st, [dict(step=t, loss=float(jnp.mean(losses)),
-                         max_staleness=0)]
+        st["wire"] += self._wire_cell[0] * (K - len(drop))
+        self._dropped += len(drop)
+        # participant-mean loss, float64 like the simulator's accounting
+        part_losses = [float(losses[w]) for w in range(K) if w not in drop]
+        ev = dict(step=t, loss=float(np.mean(part_losses)), max_staleness=0)
+        if drop:
+            ev["dropped"] = sorted(drop)
+        return st, [ev]
 
     # --------------------------------------------------- ssp / asp stepping
     def _build_async_fns(self, params_example):
@@ -428,10 +462,12 @@ class DeviceEngine:
             self._event_wire = self.per_event_wire_bytes(st["params"])
         grad_fn, ps_apply = self._async_fns
         events = []
-        while st["updates"] < (t + 1) * K:
+        eff_periods = self.effective_periods()   # invariant within a step
+        while st["updates"] - st["updates_base"] < \
+                (t + 1 - st["step_base"]) * K:
             st["tick"] += 1
             # the same deterministic schedule the simulator executes
-            firing = firing_schedule(st["tick"], self.periods,
+            firing = firing_schedule(st["tick"], eff_periods,
                                      st["batch_idx"], bound)
             if not firing:
                 continue
@@ -497,6 +533,10 @@ class DeviceEngine:
                 updates=0,
                 batch_idx=[0] * K,
                 batch_cache=[None] * K,
+                # reshard rebases the step↔update accounting here (one
+                # global step = K updates at the *current* K)
+                updates_base=0,
+                step_base=0,
             )
         return st
 
@@ -516,6 +556,122 @@ class DeviceEngine:
 
     def wire_bytes(self) -> int:
         return self._wire_total
+
+    # --------------------------------------------------- elastic interface
+    # (set_slowdown / effective_periods / dropped_updates come from the
+    # shared ElasticWorkerSet, so the schedule rule cannot diverge from
+    # the simulator's)
+    def reshard(self, st, new_workers: int, step: int = 0,
+                lost: Tuple[int, ...] = ()):
+        """Re-size the worker set N→M *in the same process*: rebuild the
+        mesh over the first M live devices, invalidate the compiled step
+        functions (the bucket plan is re-planned for the new mesh on the
+        next step), and remap per-worker state — survivors (old slots
+        minus ``lost``, in order) keep their EF residuals and batch
+        clocks, grown slots start with zero residuals at the batch
+        frontier.  A reshard is a synchronization barrier: every async
+        worker re-pulls the current params, and the step↔update
+        accounting rebases at global step ``step``."""
+        cfg = self.cfg
+        if new_workers < 1:
+            raise ValueError("new_workers must be >= 1")
+        if cfg.backup >= new_workers:
+            raise ValueError(f"backup k={cfg.backup} needs > k workers")
+        if new_workers > len(self._devs):
+            raise ValueError(
+                f"resize to {new_workers} workers needs {new_workers} "
+                f"devices, have {len(self._devs)}")
+        bad = [w for w in lost if w < 0 or w >= cfg.num_workers]
+        if bad:
+            raise ValueError(f"lost workers {bad} out of range for "
+                             f"{cfg.num_workers} workers")
+        survivors = [w for w in range(cfg.num_workers) if w not in set(lost)]
+        slots = survivors[:new_workers]
+        grown = new_workers - len(slots)
+        # survivors keep their speed identity (like their slowdowns and
+        # EF state); grown slots take the default-schedule tail
+        periods = tuple([self.periods[s] for s in slots]
+                        + list(default_periods(new_workers))[len(slots):])
+        self.cfg = cfg = dataclasses.replace(
+            cfg, num_workers=new_workers, periods=periods)
+        self.mesh = Mesh(np.array(self._devs[:new_workers]), (AXIS,))
+        self.periods = periods
+        self.slowdowns = [self.slowdowns[s] for s in slots] + [1.0] * grown
+        self._step_fn, self._wire_cell = None, []
+        self._async_fns = None
+        if st.get("ef") is not None:
+            def remap_rows(x):     # (K_old,)+s -> (M,)+s
+                rows = ([x[s] for s in slots]
+                        + [jnp.zeros_like(x[0])] * grown)
+                return jnp.stack(rows)
+            st["ef"] = jax.tree.map(remap_rows, st["ef"])
+        if cfg.sync in ("ssp", "asp"):
+            frontier = max([st["batch_idx"][s] for s in slots] or [0])
+            st["pulled"] = [st["params"]] * new_workers
+            st["pulled_ver"] = [st["server_ver"]] * new_workers
+            st["batch_idx"] = ([st["batch_idx"][s] for s in slots]
+                               + [frontier] * grown)
+            st["batch_cache"] = [None] * new_workers
+            st["updates_base"] = st["updates"]
+            st["step_base"] = step
+        # arrays committed to the old mesh's devices would clash with the
+        # new mesh inside jit — pull them to host; the next step re-places
+        # them on the resized mesh
+        for key in ("params", "ef", "pulled", "rng"):
+            if st.get(key) is not None:
+                st[key] = jax.device_get(st[key])
+        return st
+
+    def export_state(self, st) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """Split the run-state into (array pytree, JSON-able meta) for
+        ``repro.checkpoint`` — the inverse of ``import_state``.  The
+        per-worker batch cache is dropped: batches are a pure function of
+        (batch_idx, worker), so resume re-fetches identical tensors."""
+        cfg = self.cfg
+        arrays: Dict[str, Any] = {"params": st["params"], "ef": st["ef"],
+                                  "rng": st["rng"]}
+        meta: Dict[str, Any] = dict(
+            backend="device", mode=cfg.sync, num_workers=cfg.num_workers,
+            wire=int(st["wire"]), periods=list(self.periods),
+            slowdowns=list(self.slowdowns), dropped=self._dropped)
+        if cfg.sync in ("ssp", "asp"):
+            arrays["pulled"] = st["pulled"]
+            meta.update(pulled_ver=list(st["pulled_ver"]),
+                        server_ver=int(st["server_ver"]),
+                        tick=int(st["tick"]), updates=int(st["updates"]),
+                        batch_idx=list(st["batch_idx"]),
+                        updates_base=int(st["updates_base"]),
+                        step_base=int(st["step_base"]))
+        return arrays, meta
+
+    def import_state(self, arrays: Dict[str, Any], meta: Dict[str, Any]):
+        """Rebuild the run-state from an ``export_state`` snapshot.  The
+        engine must already be configured at ``meta['num_workers']``."""
+        cfg = self.cfg
+        if meta["num_workers"] != cfg.num_workers:
+            raise ValueError(
+                f"snapshot has {meta['num_workers']} workers, engine has "
+                f"{cfg.num_workers}; reshard the engine first")
+        # the worker speed schedule travels with the snapshot: a resharded
+        # run's remapped periods must survive a cross-process restore
+        self.periods = tuple(int(p) for p in meta["periods"])
+        self.cfg = cfg = dataclasses.replace(cfg, periods=self.periods)
+        self.slowdowns = [float(s) for s in meta["slowdowns"]]
+        self._dropped = int(meta["dropped"])
+        st: Dict[str, Any] = dict(
+            params=arrays["params"], ef=arrays["ef"],
+            rng=jnp.asarray(arrays["rng"]), wire=int(meta["wire"]))
+        if cfg.sync in ("ssp", "asp"):
+            st.update(pulled=arrays["pulled"],
+                      pulled_ver=list(meta["pulled_ver"]),
+                      server_ver=int(meta["server_ver"]),
+                      tick=int(meta["tick"]), updates=int(meta["updates"]),
+                      batch_idx=list(meta["batch_idx"]),
+                      batch_cache=[None] * cfg.num_workers,
+                      updates_base=int(meta["updates_base"]),
+                      step_base=int(meta["step_base"]))
+        self._wire_total = st["wire"]
+        return st
 
     # ------------------------------------------------------------------ run
     def run(self, params, batches: Callable[[int, int], Any], steps: int):

@@ -43,6 +43,7 @@ from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
 
 import jax
 
+from repro.core.allreduce import TOPOLOGIES
 from repro.core.compression import EF_METHODS, METHODS, Compressor
 from repro.core.sync import SimSyncEngine, SyncConfig
 from repro.train.data_parallel import (ARCHS, DEVICE_SYNCS,
@@ -106,6 +107,7 @@ class Strategy:
     workers: int = 4
     backend: str = "auto"            # auto | sim | device
     staleness: int = 3               # SSP bound s
+    backup: int = 0                  # BSP backup workers: drop the k slowest
     lr: float = 0.1
     topology: str = "ring"           # device allreduce schedule
     bucket_mb: float = 4.0           # device gradient bucket fusion
@@ -132,6 +134,14 @@ class Strategy:
         if self.staleness < 0:
             # a negative SSP bound blocks every worker forever
             raise ValueError("staleness must be >= 0")
+        if self.backup < 0:
+            raise ValueError("backup must be >= 0")
+        if self.backup and self.sync != "bsp":
+            # the backup-worker technique drops stragglers from a
+            # synchronous round; async modes have no round to drop from
+            raise ValueError("backup workers compose with bsp only")
+        if self.backup >= self.workers:
+            raise ValueError("backup k must leave at least one worker")
         if self.sync == "sma" and method != "none":
             # the SMA engine exchanges replicas, not gradients — it has no
             # compression path, so a compressed spec would silently run
@@ -157,10 +167,17 @@ class Strategy:
         """Canonical spec string (inverse of ``parse``)."""
         sync = self.sync + (f":{self.staleness}" if self.sync == "ssp"
                             else "")
+        if self.backup:
+            sync = f"bsp+backup:{self.backup}"
         comp = self.compressor.method
         if comp == "dgc":
             comp += f":{self.compressor.density:g}"
-        return f"{sync}/{self.arch}/{comp}@{self.workers}"
+        # a non-default topology rides in the arch slot (its alias form)
+        # so the canonical spec reproduces the run it came from
+        arch = self.arch
+        if arch == "allreduce" and self.topology != "ring":
+            arch = self.topology
+        return f"{sync}/{arch}/{comp}@{self.workers}"
 
     @classmethod
     def parse(cls, spec: str, **defaults) -> "Strategy":
@@ -181,16 +198,35 @@ class Strategy:
             raise ValueError(
                 f"bad strategy spec {spec!r}: want sync[/arch[/comp]][@N]")
         sync = parts[0]
+        val = None
         if ":" in sync:
-            sync, st = sync.split(":", 1)
-            if sync != "ssp":
+            sync, val = sync.split(":", 1)
+        if sync == "bsp+backup":
+            # the survey's backup-worker straggler mitigation as a sync
+            # knob: bsp+backup:k drops the k slowest workers per round
+            if val is None:
                 raise ValueError(
-                    f"bad strategy spec {spec!r}: only ssp takes a "
-                    f"staleness bound (got {sync}:{st})")
-            fields["staleness"] = int(st)
+                    f"bad strategy spec {spec!r}: bsp+backup needs a "
+                    "count, e.g. bsp+backup:1")
+            fields["backup"] = int(val)
+            sync = "bsp"
+        elif sync == "ssp":
+            if val is not None:
+                fields["staleness"] = int(val)
+        elif val is not None:
+            raise ValueError(
+                f"bad strategy spec {spec!r}: only ssp takes a "
+                f"staleness bound (got {sync}:{val})")
         fields["sync"] = sync
         if len(parts) > 1 and parts[1]:
-            fields["arch"] = parts[1]
+            arch = parts[1]
+            if arch in TOPOLOGIES:
+                # topology names are arch aliases: "ssp:2/ring/onebit@4"
+                # means decentralized allreduce over a ring schedule
+                fields["arch"] = "allreduce"
+                fields["topology"] = arch
+            else:
+                fields["arch"] = arch
         if len(parts) > 2 and parts[2]:
             comp = parts[2]
             if ":" in comp:
@@ -261,8 +297,29 @@ class Engine:
         return self.inner.finalize(state)
 
     def metrics(self) -> Dict[str, Any]:
-        return dict(backend=self.backend, spec=self.strategy.spec(),
-                    wire_bytes=self.inner.wire_bytes())
+        m = dict(backend=self.backend, spec=self.strategy.spec(),
+                 wire_bytes=self.inner.wire_bytes())
+        if hasattr(self.inner, "dropped_updates"):
+            m["dropped_updates"] = self.inner.dropped_updates()
+        return m
+
+    # --------------------------------------------------- elastic interface
+    # (repro.elastic.recovery drives these; every backend implements them)
+    def reshard(self, state, new_workers: int, step: int = 0,
+                lost: Tuple[int, ...] = ()):
+        # self.strategy stays the *launched* configuration: metrics()
+        # keeps reporting the reproducible spec, and the current size is
+        # the engine's (fit_elastic reports it as final_workers)
+        return self.inner.reshard(state, new_workers, step=step, lost=lost)
+
+    def set_slowdown(self, worker: int, factor: float):
+        self.inner.set_slowdown(worker, factor)
+
+    def export_state(self, state):
+        return self.inner.export_state(state)
+
+    def import_state(self, arrays, meta):
+        return self.inner.import_state(arrays, meta)
 
     def run(self, params, batches: Callable[[int, int], Any], steps: int):
         params, events, mets = fit(self, params, batches, steps)
@@ -279,7 +336,7 @@ class SimBackend(Engine):
             SyncConfig(mode=s.sync, num_workers=s.workers,
                        staleness=s.staleness, lr=s.lr, sma_mu=s.sma_mu,
                        periods=s.periods, compressor=s.compressor,
-                       seed=s.seed),
+                       backup=s.backup, seed=s.seed),
             grad_fn)
 
 
@@ -294,7 +351,8 @@ class DeviceBackend(Engine):
                 num_workers=s.workers, lr=s.lr, sync=s.sync, arch=s.arch,
                 staleness=s.staleness, periods=s.periods,
                 topology=s.topology, compressor=s.compressor,
-                bucket_mb=s.bucket_mb, order=s.order, seed=s.seed),
+                backup=s.backup, bucket_mb=s.bucket_mb, order=s.order,
+                seed=s.seed),
             grad_fn, devices)
 
 
@@ -328,7 +386,13 @@ def fit(engine: Engine, params, batches: Callable[[int, int], Any],
 class Trainer:
     """Declarative front-end: ``Trainer(strategy).fit(grad_fn, params,
     batches, steps)`` builds the strategy's engine and drives it through
-    the shared loop.  Returns (params, history, metrics)."""
+    the shared loop.  Returns (params, history, metrics).
+
+    Passing ``plan`` (an ``repro.elastic`` EventPlan, typed plan, or plan
+    spec string like ``"crash:w1@5,resize:4@10"``) routes the run through
+    the elastic trainer: the engine is periodically snapshotted through
+    ``repro.checkpoint`` and survives crashes, resizes, restarts, and
+    straggler events without restarting the process (docs/elasticity.md)."""
 
     def __init__(self, strategy: Strategy,
                  devices: Optional[Sequence] = None):
@@ -336,6 +400,14 @@ class Trainer:
         self.devices = devices
 
     def fit(self, grad_fn: Callable, params,
-            batches: Callable[[int, int], Any], steps: int):
+            batches: Callable[[int, int], Any], steps: int, *,
+            plan=None, checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 5):
+        if plan is not None:
+            from repro.elastic.recovery import fit_elastic
+            return fit_elastic(self.strategy, grad_fn, params, batches,
+                               steps, plan, checkpoint_dir=checkpoint_dir,
+                               checkpoint_every=checkpoint_every,
+                               devices=self.devices)
         engine = self.strategy.build(grad_fn, self.devices)
         return fit(engine, params, batches, steps)

@@ -1,4 +1,5 @@
-"""Model-data management tests (survey §3.5.2)."""
+"""Model-data management tests (survey §3.5.2): roundtrip, sharding,
+atomic (crash-safe) writes, manifest extra blob, and the registry."""
 import os
 
 import jax
@@ -6,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import ModelRegistry, load_checkpoint, save_checkpoint
+from repro.checkpoint import (ModelRegistry, is_valid_checkpoint,
+                              load_checkpoint, read_manifest,
+                              save_checkpoint)
 
 
 def _tree(key):
@@ -35,6 +38,52 @@ def test_sharding_by_size(tmp_path):
     assert manifest["shards"] >= 2       # 400KB leaf forces multiple shards
     restored, _ = load_checkpoint(str(tmp_path / "c"), tree)
     assert float(restored["big"].sum()) == 100_000
+
+
+def test_atomic_save_crash_leaves_old_checkpoint_intact(tmp_path,
+                                                        monkeypatch):
+    """A crash mid-save (np.savez raising) must not tear the previous
+    checkpoint: writes stage in a temp dir and commit via os.replace."""
+    path = str(tmp_path / "ckpt")
+    old = {"w": jnp.arange(8.0)}
+    save_checkpoint(path, old, step=7)
+
+    real_savez = np.savez
+
+    def exploding_savez(file, **arrs):
+        raise IOError("disk died mid-save")
+
+    monkeypatch.setattr(np, "savez", exploding_savez)
+    with pytest.raises(IOError):
+        save_checkpoint(path, {"w": jnp.zeros(8)}, step=8)
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    # no stray staging dirs, and the old checkpoint still loads
+    assert os.listdir(str(tmp_path)) == ["ckpt"]
+    assert is_valid_checkpoint(path)
+    restored, step = load_checkpoint(path, old)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8.0))
+
+
+def test_atomic_save_replaces_existing_checkpoint(tmp_path):
+    path = str(tmp_path / "c")
+    save_checkpoint(path, {"w": jnp.zeros(4)}, step=1)
+    save_checkpoint(path, {"w": jnp.ones(4)}, step=2)
+    restored, step = load_checkpoint(path, {"w": jnp.zeros(4)})
+    assert step == 2
+    assert float(np.asarray(restored["w"]).sum()) == 4.0
+
+
+def test_manifest_extra_roundtrip(tmp_path):
+    path = str(tmp_path / "c")
+    extra = {"num_workers": 3, "tick": 17, "batch_idx": [4, 2, 0]}
+    save_checkpoint(path, {"w": jnp.zeros(4)}, step=5, extra=extra)
+    man = read_manifest(path)
+    assert man["step"] == 5
+    assert man["extra"] == extra
+    assert not is_valid_checkpoint(str(tmp_path / "nope"))
 
 
 def test_registry_query_and_lineage(tmp_path):
