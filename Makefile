@@ -8,7 +8,7 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench strategies elastic
+.PHONY: smoke tier1 bench strategies elastic hybrid
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -30,10 +30,17 @@ strategies:
 elastic:
 	$(PYTEST) $(SMOKE_TIMEOUT) python tools/elastic_smoke.py
 
-# Full tier-1 verify (ROADMAP.md): the strategy-matrix and elasticity
-# gates plus everything in tests/, including the 8-virtual-device
-# subprocess tests and end-to-end training compositions.
-tier1: strategies elastic
+# Hybrid-parallel gate: representative mesh x ZeRO cells (data x tensor
+# x stage, ZeRO-1/2/3, sgd + adamw, compressed data axis) on 8 virtual
+# devices (see docs/hybrid.md); uncompressed sgd cells are cross-checked
+# against the single-device stacked reference.
+hybrid:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/hybrid_smoke.py
+
+# Full tier-1 verify (ROADMAP.md): the strategy-matrix, elasticity, and
+# hybrid-mesh gates plus everything in tests/, including the
+# 8-virtual-device subprocess tests and end-to-end training compositions.
+tier1: strategies elastic hybrid
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

@@ -1,0 +1,120 @@
+"""Hybrid-parallel benchmark: mesh × ZeRO cells (§3.2 / docs/hybrid.md).
+
+One JSON row per mesh cell on 8 virtual host devices, tracking the three
+quantities the hybrid subsystem trades against each other:
+
+  * measured step wall time (post-compile),
+  * wire accounting: the data-axis exchange plus the modeled ring-
+    schedule bytes and the pipeline/tensor activation traffic,
+  * measured per-device persistent state bytes (params + optimizer) —
+    the ZeRO rows must show ~the data-axis-factor reduction, asserted.
+
+  PYTHONPATH=src python -m benchmarks.hybrid_bench                 # default matrix
+  PYTHONPATH=src python -m benchmarks.hybrid_bench bsp/ring/none@8:d2.t2.s2 ...
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit_json
+
+DEFAULT_SPECS = [
+    "bsp/ring/none@8:d8",
+    "bsp/ring/none@8:d4.s2",
+    "bsp/ring/none@8:d4.t2",
+    "bsp/ring/none@8:d2.t2.s2",
+    "bsp/ring/onebit@8:d2.t2.s2",
+    "bsp/ring/none@8:d8.adamw",
+    "bsp/ps/none@8:d8.z1.adamw",
+    "bsp/ps/none@8:d8.z2.adamw",
+    "bsp/ps/none@8:d8.z3.adamw",
+    "bsp/ps/none@8:d2.t2.s2.z3.adamw",
+]
+
+_CHILD = r"""
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel import make_tiny_transformer
+from repro.train import Strategy
+
+S_LAYERS, D_MODEL, FF = 4, 32, 64
+params, model = make_tiny_transformer(S_LAYERS, D_MODEL, FF, seed=0)
+KEY = jax.random.PRNGKey(1)
+W_T = jax.random.normal(KEY, (D_MODEL, D_MODEL))
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    x = jax.random.normal(k, (16, D_MODEL))
+    return {"x": x, "y": jnp.tanh(x @ W_T)}
+
+STEPS = 3
+baseline_bytes = {}
+for spec in sys.argv[1:]:
+    strat = Strategy.parse(spec, lr=0.01, bucket_mb=1e-3, backend="device")
+    engine = strat.build(model)
+    st = engine.init(params)
+    # one step to compile, then timed steps
+    st, _ = engine.inner.step(st, make_batch, 0)
+    t0 = time.perf_counter()
+    hist = []
+    for t in range(1, 1 + STEPS):
+        st, ev = engine.inner.step(st, make_batch, t)
+        hist.extend(ev)
+    step_us = (time.perf_counter() - t0) / STEPS * 1e6
+    mets = engine.metrics()
+    state = engine.inner.per_device_state_bytes(st)
+    mesh = strat.mesh_spec
+    key = (strat.optimizer, mesh.tensor, mesh.stage)
+    if strat.zero == 0:
+        baseline_bytes[key] = state["total"]
+    row = {
+        "bench": "hybrid",
+        "strategy": strat.spec(),
+        "mesh": mesh.spec(), "data": mesh.data, "tensor": mesh.tensor,
+        "stage": mesh.stage, "zero": strat.zero,
+        "optimizer": strat.optimizer,
+        "compression": strat.compressor.method,
+        "step_time_us": round(step_us, 1),
+        "wire_bytes_per_step": engine.inner.wire_bytes() // (STEPS + 1),
+        "modeled_data_bytes_per_dev": mets.get("modeled_data_bytes_per_dev"),
+        "modeled_pipeline_bytes_per_dev":
+            mets.get("modeled_pipeline_bytes_per_dev", 0),
+        "modeled_tensor_bytes_per_dev":
+            mets.get("modeled_tensor_bytes_per_dev", 0),
+        "state_bytes_per_dev": state["total"],
+        "state_param_bytes_per_dev": state["params"],
+        "state_opt_bytes_per_dev": state["opt"],
+        "loss_last": round(hist[-1]["loss"], 4),
+    }
+    base = baseline_bytes.get(key)
+    if strat.zero == 3 and base:
+        row["state_reduction_vs_z0"] = round(base / state["total"], 2)
+        # the ZeRO acceptance: ~data-axis-factor fewer persistent bytes
+        assert row["state_reduction_vs_z0"] >= 0.8 * mesh.data, row
+    print("ROW " + json.dumps(row))
+print("HYBRID-BENCH-OK")
+"""
+
+
+def main(specs=None):
+    specs = specs or DEFAULT_SPECS
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    res = subprocess.run([sys.executable, "-c", _CHILD] + list(specs),
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    if "HYBRID-BENCH-OK" not in res.stdout:
+        sys.stderr.write(res.stdout + "\n" + res.stderr[-3000:])
+        raise RuntimeError("hybrid bench child failed")
+    rows = [json.loads(line[4:]) for line in res.stdout.splitlines()
+            if line.startswith("ROW ")]
+    assert len(rows) == len(specs), (len(rows), len(specs))
+    emit_json(rows)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -20,6 +20,7 @@ BENCHES = [
     ("federated", "benchmarks.federated_bench"),        # §3.3.1(3)
     ("comm_schedule", "benchmarks.comm_schedule_bench"),  # §3.3.3(3)
     ("data_parallel", "benchmarks.data_parallel_bench"),  # §3.3 executable
+    ("hybrid", "benchmarks.hybrid_bench"),              # §3.2 mesh x ZeRO
     ("scheduler", "benchmarks.scheduler_bench"),        # §3.4.2
     ("elastic", "benchmarks.elastic_bench"),            # §3.2.3 / §3.4.2
     ("kernel", "benchmarks.kernel_bench"),              # §3.3.3 hot spots

@@ -15,6 +15,10 @@ The parallel-training strategy is one declarative spec string
   --strategy bsp/ps/dgc:0.05@8        centralized ZeRO-style PS arch
   --strategy ssp:3/allreduce/onebit@8 bounded-staleness on devices
                                       (Strategy engine path, SGD)
+  --strategy bsp/ps/none@4:d4.z3.adamw  ZeRO-3-sharded AdamW over the
+                                      data axis (hybrid engine; the
+                                      tensor/stage mesh axes need a
+                                      StagedModel — docs/hybrid.md)
 
 Multi-worker specs re-exec with that many virtual host devices.
 
@@ -38,8 +42,11 @@ import time
 
 def _spec_workers(spec: str) -> int:
     """Worker count from a strategy spec string, pre-jax-import (the full
-    parse lives in repro.train.strategy, which imports jax)."""
-    return int(spec.rsplit("@", 1)[1]) if "@" in spec else 1
+    parse lives in repro.train.strategy, which imports jax).  The worker
+    segment may carry a mesh suffix: ``@8:d2.t2.s2`` (docs/hybrid.md)."""
+    if "@" not in spec:
+        return 1
+    return int(spec.rsplit("@", 1)[1].split(":", 1)[0])
 
 
 def _maybe_reexec_with_devices():
@@ -149,7 +156,7 @@ def _fit_with_strategy_engine(strat, model, params, batches, args):
               f"{mets['executed_steps']} steps executed for "
               f"{args.steps} committed "
               f"(goodput {args.steps / mets['executed_steps']:.2f}), "
-              f"{mets['dropped_updates']} straggler pushes dropped")
+              f"{mets.get('dropped_updates', 0)} straggler pushes dropped")
     else:
         params, hist, mets = trainer.fit(grad_fn, params, batches,
                                          args.steps)
@@ -204,7 +211,8 @@ def main():
         params, hist = _fit_with_strategy_engine(strat, model, params,
                                                  batches, args)
         trainer_used, lr_used = "strategy-engine-elastic", args.engine_lr
-    elif strat.sync == "bsp" and strat.arch == "allreduce":
+    elif strat.sync == "bsp" and strat.arch == "allreduce" \
+            and not strat.is_hybrid:
         params, hist = _fit_with_optimizer(strat, model, params, batches,
                                            args)
         trainer_used, lr_used = "adamw+cosine", args.lr

@@ -111,6 +111,25 @@ def param_specs(params, multi_pod: bool = False, policy: str = "fsdp"):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+def model_axis_dim(path, ndim: int):
+    """Dimension index a leaf shards over the "model"/tensor mesh axis,
+    under the same role rules as ``param_specs`` — the bridge the hybrid
+    mesh planner (``repro.parallel``) uses to turn these PartitionSpecs
+    into explicit per-leaf tensor-axis shards.  Returns None for leaves
+    the role table replicates (biases, vectors, unknown 2D+ leaves).
+
+    ``path`` is a ``tree_flatten_with_path`` key path; ``ndim`` the leaf's
+    rank *excluding* any leading stacked-stage dimension (pass
+    ``leaf.ndim - 1`` for stage-stacked leaves and add 1 to the result)."""
+    names = _path_names(path)
+    trailing = _trailing_spec(names, ndim)
+    lead = ndim - len(trailing)
+    for i, ax in enumerate(trailing):
+        if ax == "model":
+            return lead + i
+    return None
+
+
 # ------------------------------------------------------- attention hints
 # Decode-attention guidance: with few KV heads (GQA), GSPMD's default is to
 # all-gather each layer's hd-sharded KV cache (GBs/token).  Constraining

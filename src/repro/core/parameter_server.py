@@ -90,6 +90,35 @@ def _shard_of(x, axis_name: str, n: int):
     return lax.dynamic_slice(flat, (me * m,), (m,))
 
 
+# ----------------------------------------------- flat-shard public surface
+# (the ZeRO optimizer-state sharding of repro.parallel routes through
+# these, so the PS path and the ZeRO path cannot diverge)
+def pad_to_multiple(x, n: int):
+    """Flatten ``x`` and zero-pad to a multiple of ``n``.  Returns
+    (padded_flat, original_flat_length)."""
+    return _pad_to(x, n)
+
+
+def shard_of_flat(x, axis_name: str):
+    """My rank's 1/n shard of ``x`` (flattened, zero-padded) over
+    ``axis_name`` — the PS "my parameters" view."""
+    return _shard_of(x, axis_name, axis_size(axis_name))
+
+
+def reduce_scatter_flat(flat, axis_name: str):
+    """Sum-reduce a (padded) flat vector over ``axis_name``, delivering
+    each rank its own contiguous shard — the PS push."""
+    n = axis_size(axis_name)
+    return lax.psum_scatter(flat.reshape(n, -1), axis_name,
+                            scatter_dimension=0, tiled=False)
+
+
+def all_gather_flat(shard, axis_name: str, length: int):
+    """Concatenate per-rank shards back into the first ``length`` elements
+    of the flat vector — the PS pull."""
+    return lax.all_gather(shard, axis_name).reshape(-1)[:length]
+
+
 def init_opt_shards(params, n: int, init_leaf: Callable):
     """Per-worker optimizer shard sizes (flat, padded length // n)."""
     def one(x):

@@ -65,6 +65,29 @@ def gpipe_forward(stage_fn: Callable, stage_params, x_micro, axis_name: str):
     return outputs
 
 
+def gpipe_ticks(n_stages: int, n_micro: int) -> int:
+    """Ticks the schedule runs for: the last micro-batch enters at tick
+    ``n_micro - 1`` and drains through ``n_stages - 1`` more hops.  Every
+    device executes exactly this many stage calls, so the tick count is
+    also the per-stage compute (and ppermute) multiplier the hybrid
+    engine's modeled accounting uses."""
+    return n_micro + n_stages - 1
+
+
 def bubble_fraction(n_stages: int, n_micro: int) -> float:
     """GPipe pipeline bubble: idle fraction of the schedule."""
-    return (n_stages - 1) / (n_micro + n_stages - 1)
+    return (n_stages - 1) / gpipe_ticks(n_stages, n_micro)
+
+
+def stacked_forward(stage_fn: Callable, stage_params, x_micro):
+    """Unpipelined single-device reference for ``gpipe_forward``: apply
+    the S stacked stages sequentially to every micro-batch.  The pipeline
+    loss/grad tests assert the scan+ppermute schedule reproduces this to
+    float tolerance — including micro-batch counts that do not divide the
+    stage count (the bubble just grows)."""
+    n_stages = jax.tree.leaves(stage_params)[0].shape[0]
+    y = x_micro
+    for s in range(n_stages):
+        sp = jax.tree.map(lambda leaf: leaf[s], stage_params)
+        y = jax.vmap(lambda mb: stage_fn(sp, mb))(y)
+    return y

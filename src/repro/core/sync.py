@@ -24,6 +24,7 @@ kept for existing call sites — construct engines via
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -32,6 +33,7 @@ import numpy as np
 
 from repro.core.compression import Compressor
 from repro.elastic.backup import drop_set
+from repro.elastic.detector import StepTimeEMA
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +47,9 @@ class SyncConfig:
     periods: Optional[Tuple[int, ...]] = None
     compressor: Compressor = Compressor("none")
     backup: int = 0              # BSP backup workers: drop the k slowest
+    # measured straggler detection: per-worker step-time EMA replaces the
+    # scheduled ranking in the backup drop set (elastic/detector.py)
+    detect: bool = False
     seed: int = 0
 
 
@@ -79,16 +84,21 @@ def firing_schedule(tick: int, periods: Tuple[int, ...],
 
 class ElasticWorkerSet:
     """The shared elastic worker-schedule surface of every engine
-    (simulated and device): straggler slowdowns over the base ``periods``
-    and the backup-drop accounting.  One implementation, inherited by
-    both backends, so the effective schedule — and therefore the async
-    firing order and the backup drop set — cannot desynchronize between
-    them.  Subclass ``__init__`` must set ``self.periods``,
-    ``self.slowdowns``, and ``self._dropped``."""
+    (simulated and device): straggler slowdowns over the base ``periods``,
+    the backup-drop accounting, and measured straggler detection.  One
+    implementation, inherited by both backends, so the effective schedule
+    — and therefore the async firing order and the backup drop set —
+    cannot desynchronize between them.  Subclass ``__init__`` must set
+    ``self.periods``, ``self.slowdowns``, ``self._dropped``, and call
+    ``_init_detector``."""
 
     periods: Tuple[int, ...]
     slowdowns: List[float]
     _dropped: int
+    detector: Optional[StepTimeEMA]
+
+    def _init_detector(self, detect: bool, num_workers: int):
+        self.detector = StepTimeEMA(num_workers) if detect else None
 
     def set_slowdown(self, worker: int, factor: float):
         """Apply a straggler event: worker's period scales by ``factor``
@@ -101,6 +111,14 @@ class ElasticWorkerSet:
         the schedule both the firing loop and the backup drop set use."""
         return tuple(max(1, int(round(p * s)))
                      for p, s in zip(self.periods, self.slowdowns))
+
+    def backup_drop(self, k: int):
+        """The round's backup drop set: the *measured* step-time ranking
+        once detection has warmed up, else the scheduled ranking
+        (elastic/backup.py) — the same rule on both backends."""
+        if self.detector is not None and self.detector.ready:
+            return self.detector.drop_set(k)
+        return drop_set(self.periods, k, self.slowdowns)
 
     def dropped_updates(self) -> int:
         """Gradient pushes discarded by the backup-worker policy."""
@@ -131,6 +149,7 @@ class SimSyncEngine(ElasticWorkerSet):
         # elastic straggler state: slow:wNxF events scale worker N's period
         self.slowdowns: List[float] = [1.0] * cfg.num_workers
         self._dropped = 0
+        self._init_detector(cfg.detect, cfg.num_workers)
         self._apply = jax.jit(
             lambda p, g, lr: jax.tree.map(lambda a, b: a - lr * b, p, g))
         self._avg = jax.jit(
@@ -180,15 +199,27 @@ class SimSyncEngine(ElasticWorkerSet):
         cfg = self.cfg
         K = cfg.num_workers
         params = st["params"]
-        # backup workers: the k slowest under the effective schedule never
-        # reach the server this round — their batch is discarded and their
-        # EF state is untouched (elastic/backup.py; same rule on devices)
-        drop = drop_set(self.periods, cfg.backup, self.slowdowns)
+        # backup workers: the k slowest — under the effective schedule, or
+        # the *measured* step-time ranking when detection is warmed up —
+        # never reach the server this round: their batch is discarded and
+        # their EF state is untouched (elastic/backup.py + detector.py;
+        # same rule on devices)
+        drop = self.backup_drop(cfg.backup)
         losses, grads = [], []
         for w in range(K):
             if w in drop:
+                if self.detector is not None:
+                    # a real straggler still runs — its push just never
+                    # reaches the server — so keep measuring it, or a
+                    # recovered worker could stay dropped forever
+                    t0 = time.perf_counter()
+                    self.grad_fn(params, batches(t, w))
+                    self.detector.observe(w, time.perf_counter() - t0)
                 continue
+            t0 = time.perf_counter()
             loss, g = self.grad_fn(params, batches(t, w))
+            if self.detector is not None:
+                self.detector.observe(w, time.perf_counter() - t0)
             if cfg.compressor.method != "none":
                 st["rng"], sub = jax.random.split(st["rng"])
                 g, st["comp_states"][w], wb = cfg.compressor.roundtrip(
@@ -318,6 +349,8 @@ class SimSyncEngine(ElasticWorkerSet):
             cfg, num_workers=new_workers, periods=periods)
         self.periods = periods
         self.slowdowns = [self.slowdowns[s] for s in slots] + [1.0] * grown
+        if self.detector is not None:
+            self.detector.reshard(slots, new_workers)
         params_like = (st["replicas"][0] if cfg.mode == "sma"
                        else st["params"])
         st["comp_states"] = (
@@ -346,7 +379,9 @@ class SimSyncEngine(ElasticWorkerSet):
         meta: Dict[str, Any] = dict(
             backend="sim", mode=cfg.mode, num_workers=cfg.num_workers,
             wire=int(st["wire"]), periods=list(self.periods),
-            slowdowns=list(self.slowdowns), dropped=self._dropped)
+            slowdowns=list(self.slowdowns), dropped=self._dropped,
+            detector=(self.detector.state() if self.detector is not None
+                      else None))
         if cfg.mode == "sma":
             arrays["replicas"] = st["replicas"]
         else:
@@ -375,6 +410,8 @@ class SimSyncEngine(ElasticWorkerSet):
         self.cfg = cfg = dataclasses.replace(cfg, periods=self.periods)
         self.slowdowns = [float(s) for s in meta["slowdowns"]]
         self._dropped = int(meta["dropped"])
+        if self.detector is not None:
+            self.detector.load_state(meta.get("detector"))
         st: Dict[str, Any] = dict(
             rng=jax.numpy.asarray(arrays["rng"]),
             comp_states=arrays["comp_states"], wire=int(meta["wire"]))

@@ -8,11 +8,14 @@ Makes every registered Strategy cell survivable and resizable:
                repro.checkpoint, crash rollback + reshard, live resize
   backup.py    bounded drop-slowest-k gradient aggregation (the survey's
                backup-worker straggler mitigation; ``bsp+backup:k``)
+  detector.py  measured straggler detection: per-worker step-time EMAs
+               feeding the backup drop set (``bsp+backup:k+detect``)
 
 See docs/elasticity.md for the grammar, recovery semantics, and the
 backup-worker accounting.
 """
 from repro.elastic.backup import drop_set, participation_weights
+from repro.elastic.detector import StepTimeEMA
 from repro.elastic.events import (ElasticEvent, EventPlan, FailurePlan,
                                   ResizePlan, StragglerPlan, merge_plans,
                                   plan_from_sched_trace)
@@ -25,5 +28,5 @@ __all__ = [
     "StragglerPlan", "merge_plans", "plan_from_sched_trace",
     "fit_elastic", "ElasticBatches", "save_engine_state",
     "restore_engine_state", "latest_checkpoint",
-    "drop_set", "participation_weights",
+    "drop_set", "participation_weights", "StepTimeEMA",
 ]

@@ -126,14 +126,23 @@ class PlanRun:
     """Consume-once cursor over a plan: ``take(t)`` returns the not-yet
     consumed events scheduled at or before step t.  After a crash rolls
     the run back, already-consumed events (including the crash itself)
-    stay consumed — a plan fires each event exactly once."""
+    stay consumed — a plan fires each event exactly once.
+
+    The cursor remembers what it consumed (``consumed_specs``) so the
+    elastic trainer can persist it in checkpoints: a preempted-and-
+    resumed run must not re-fire events its previous incarnation already
+    lived through, and "already fired" is NOT derivable from the resume
+    step alone (a crash rollback restores a checkpoint *earlier* than the
+    crash event it consumed)."""
 
     def __init__(self, plan: EventPlan):
         self._pending: List[ElasticEvent] = list(plan.events)
+        self._consumed: List[ElasticEvent] = []
 
     def take(self, step: int) -> List[ElasticEvent]:
         due = [e for e in self._pending if e.step <= step]
         self._pending = [e for e in self._pending if e.step > step]
+        self._consumed.extend(due)
         return due
 
     def take_one(self, step: int) -> "ElasticEvent | None":
@@ -141,8 +150,22 @@ class PlanRun:
         then leave the rest of the batch pending so nothing is lost."""
         for i, e in enumerate(self._pending):
             if e.step <= step:
+                self._consumed.append(e)
                 return self._pending.pop(i)
         return None
+
+    def consumed_specs(self) -> List[str]:
+        """Specs of every event fired so far, in firing order."""
+        return [e.spec() for e in self._consumed]
+
+    def mark_consumed(self, specs: Sequence[str]) -> None:
+        """Replay a previous incarnation's consumption record (from a
+        checkpoint): each spec removes one matching pending event."""
+        for spec in specs:
+            for i, e in enumerate(self._pending):
+                if e.spec() == spec:
+                    self._consumed.append(self._pending.pop(i))
+                    break
 
     @property
     def pending(self) -> Tuple[ElasticEvent, ...]:

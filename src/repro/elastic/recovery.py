@@ -32,6 +32,8 @@ mid-save leaves the previous checkpoint intact.
 from __future__ import annotations
 
 import os
+import signal
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -45,10 +47,14 @@ _CKPT_FMT = "step_{:06d}"
 
 # ------------------------------------------------------- engine snapshots
 def save_engine_state(path: str, engine, state, step: int,
-                      history_len: int = 0) -> None:
-    """Atomically snapshot an engine's full run-state at ``step``."""
+                      history_len: int = 0,
+                      extra: Optional[Dict[str, Any]] = None) -> None:
+    """Atomically snapshot an engine's full run-state at ``step``.
+    ``extra`` adds trainer-level bookkeeping (e.g. the consumed event
+    record) to the manifest next to the engine's own meta."""
     arrays, meta = engine.export_state(state)
-    meta = dict(meta, step=int(step), history_len=int(history_len))
+    meta = dict(meta, step=int(step), history_len=int(history_len),
+                **(extra or {}))
     save_checkpoint(path, arrays, step=int(step), extra=meta)
 
 
@@ -74,6 +80,15 @@ def restore_engine_state(path: str, engine, params_like
 def _engine_workers(engine) -> int:
     inner = getattr(engine, "inner", engine)
     return inner.cfg.num_workers
+
+
+def _engine_streams(engine) -> int:
+    """Batch streams the engine consumes: the data-parallel slot count.
+    For the flat engines that equals the worker count; a hybrid engine
+    spreads its workers over tensor/stage axes too and exposes the data
+    axis as ``data_streams``."""
+    inner = getattr(engine, "inner", engine)
+    return getattr(inner, "data_streams", inner.cfg.num_workers)
 
 
 def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
@@ -127,13 +142,25 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                 batches: Callable[[int, int], Any], steps: int, plan,
                 checkpoint_dir: Optional[str] = None,
                 checkpoint_every: int = 5,
-                devices=None):
+                devices=None, resume: bool = False,
+                preempt_signals: Optional[Tuple[int, ...]] = None):
     """Drive ``strategy``'s engine for ``steps`` global steps under an
     elastic event plan.  Returns (params, history, metrics) like
     ``Trainer.fit``; metrics additionally carry ``recoveries`` (one
     record per crash/restart), ``resizes``, ``executed_steps`` (includes
     work redone after rollbacks), ``final_workers`` and
-    ``dropped_updates``."""
+    ``dropped_updates``.
+
+    Real preemption: when a ``checkpoint_dir`` is given, a handler for
+    ``preempt_signals`` (default: SIGTERM, main thread only) is installed
+    for the duration of the run.  On delivery the loop finishes its
+    in-flight step, commits a snapshot, and returns cleanly with
+    ``metrics["preempted"] = True`` — the process exits 0 instead of
+    dying with work lost.  A follow-up invocation with ``resume=True``
+    restores the newest committed checkpoint in ``checkpoint_dir``
+    (reporting ``metrics["resumed_from"]``) and finishes the remaining
+    steps; plan events scheduled before the resume point are treated as
+    already fired."""
     if isinstance(plan, str):
         plan = EventPlan.parse(plan)
     elif not isinstance(plan, EventPlan):
@@ -145,7 +172,7 @@ def fit_elastic(strategy, grad_fn: Callable, params,
     if checkpoint_every < 1:
         raise ValueError("checkpoint_every must be >= 1")
     engine = strategy.build(grad_fn, devices)
-    eb = ElasticBatches(batches, n_streams=strategy.workers,
+    eb = ElasticBatches(batches, n_streams=_engine_streams(engine),
                         seed=strategy.seed)
     run = plan.start()
     st = engine.init(params)
@@ -159,86 +186,142 @@ def fit_elastic(strategy, grad_fn: Callable, params,
     executed = 0
     # recovery only ever restores checkpoints THIS run committed —
     # a reused checkpoint_dir with stale step_* dirs from an earlier
-    # run must not leak foreign state into this one
+    # run must not leak foreign state into this one (resume=True is the
+    # explicit opt-in for picking up a previous incarnation's snapshot)
     written: set = set()
 
     def commit(step: int, state, hist_len: int):
-        save_engine_state(ckpt(step), engine, state, step, hist_len)
+        # every snapshot records which plan events have already fired:
+        # "fired" is not derivable from the step alone (a crash rollback
+        # commits *earlier* than the crash it consumed), and a resumed
+        # incarnation must not re-fire any of them
+        save_engine_state(ckpt(step), engine, state, step, hist_len,
+                          extra={"consumed": run.consumed_specs()})
         written.add(step)
 
-    if ckpt:
-        commit(0, st, 0)
-
     t = 0
-    while t < steps:
-        rolled_back = False
-        # one event at a time: a crash rollback leaves the rest of the
-        # due batch pending, to fire when the run reaches them again
-        while (ev := run.take_one(t)) is not None:
-            if ev.kind == "slow":
-                engine.set_slowdown(ev.worker, ev.factor)
-                if ckpt:
-                    # commit so a later crash rollback (which restores
-                    # pre-event slowdowns and never re-fires consumed
-                    # events) cannot erase the straggler
-                    commit(t, st, len(history))
-            elif ev.kind == "resize":
-                st = engine.reshard(st, ev.workers, step=t)
-                eb.assign(ev.workers)
-                resizes += 1
-                if ckpt:
-                    # commit the post-reshard state so a later crash never
-                    # restores across the resize boundary
-                    commit(t, st, len(history))
-            elif ev.kind in ("crash", "restart"):
-                t0 = time.time()
-                if ev.kind == "restart":
-                    # scheduler suspend: snapshot the live state first
-                    commit(t, st, len(history))
-                if not written:
-                    raise RuntimeError(
-                        f"no checkpoint committed by this run in "
-                        f"{checkpoint_dir!r} to recover from at step {t}")
-                path = ckpt(max(written))
-                if not is_valid_checkpoint(path):
-                    raise RuntimeError(
-                        f"checkpoint {path!r} is gone or torn; cannot "
-                        f"recover at step {t}")
-                st, meta = restore_engine_state(path, engine, params)
-                rstep = int(meta["step"])
-                history = history[:int(meta["history_len"])]
-                # checkpoints from the abandoned timeline (steps beyond
-                # the restore point) must not satisfy a later recovery
-                written = {s for s in written if s <= rstep}
-                if ev.kind == "crash":
-                    survivors = _engine_workers(engine) - 1
-                    st = engine.reshard(st, survivors, step=rstep,
-                                        lost=(ev.worker,))
-                    eb.assign(survivors)
-                    commit(rstep, st, len(history))
-                recoveries.append(dict(
-                    kind=ev.kind, at=t, restored_step=rstep,
-                    lost_steps=t - rstep,
-                    lost_worker=ev.worker if ev.kind == "crash" else None,
-                    workers=_engine_workers(engine),
-                    wall_s=time.time() - t0))
-                t = rstep
-                rolled_back = True
+    resumed_from = None
+    if resume:
+        if not ckpt:
+            raise ValueError("resume=True needs a checkpoint_dir")
+        path = latest_checkpoint(checkpoint_dir)
+        if path is not None:
+            st, meta = restore_engine_state(path, engine, params)
+            t = resumed_from = int(meta["step"])
+            eb.assign(_engine_streams(engine))
+            # replay the previous incarnation's consumption record so
+            # nothing it lived through fires twice
+            run.mark_consumed(meta.get("consumed", ()))
+            # re-commit under THIS incarnation's frame: the restored
+            # checkpoint's history_len counts the previous incarnation's
+            # (unavailable) history, and a later rollback truncating our
+            # history with it would duplicate steps in the returned
+            # record
+            commit(t, st, 0)
+    if ckpt and not written:
+        commit(t, st, 0)
+
+    # SIGTERM-driven preemption snapshot: flag only in the handler, act
+    # at the loop boundary so the in-flight step completes first
+    preempted: List[int] = []
+    installed: List[Tuple[int, Any]] = []
+    if ckpt and threading.current_thread() is threading.main_thread():
+        sigs = ((signal.SIGTERM,) if preempt_signals is None
+                else preempt_signals)
+        for sig in sigs:
+            installed.append((sig, signal.signal(
+                sig, lambda signum, frame: preempted.append(signum))))
+
+    try:
+        while t < steps:
+            if preempted:
+                commit(t, st, len(history))
                 break
-        if rolled_back:
-            continue
-        if ckpt and t > 0 and t % checkpoint_every == 0:
-            commit(t, st, len(history))
-        st, evs = engine.step(st, eb, t)
-        history.extend(evs)
-        executed += 1
-        t += 1
-        if executed > steps * 10 + 100:
-            raise RuntimeError("elastic run not converging on its step "
-                               "target (runaway rollback loop?)")
+            rolled_back = False
+            # one event at a time: a crash rollback leaves the rest of the
+            # due batch pending, to fire when the run reaches them again
+            while (ev := run.take_one(t)) is not None:
+                if ev.kind == "slow":
+                    engine.set_slowdown(ev.worker, ev.factor)
+                    if ckpt:
+                        # commit so a later crash rollback (which restores
+                        # pre-event slowdowns and never re-fires consumed
+                        # events) cannot erase the straggler
+                        commit(t, st, len(history))
+                elif ev.kind == "resize":
+                    st = engine.reshard(st, ev.workers, step=t)
+                    eb.assign(_engine_streams(engine))
+                    resizes += 1
+                    if ckpt:
+                        # commit the post-reshard state so a later crash
+                        # never restores across the resize boundary
+                        commit(t, st, len(history))
+                elif ev.kind in ("crash", "restart"):
+                    t0 = time.time()
+                    if ev.kind == "restart":
+                        # scheduler suspend: snapshot the live state first
+                        commit(t, st, len(history))
+                    if not written:
+                        raise RuntimeError(
+                            f"no checkpoint committed by this run in "
+                            f"{checkpoint_dir!r} to recover from at step "
+                            f"{t}")
+                    path = ckpt(max(written))
+                    if not is_valid_checkpoint(path):
+                        raise RuntimeError(
+                            f"checkpoint {path!r} is gone or torn; cannot "
+                            f"recover at step {t}")
+                    st, meta = restore_engine_state(path, engine, params)
+                    rstep = int(meta["step"])
+                    history = history[:int(meta["history_len"])]
+                    # checkpoints from the abandoned timeline (steps
+                    # beyond the restore point) must not satisfy a later
+                    # recovery
+                    written = {s for s in written if s <= rstep}
+                    if ev.kind == "crash":
+                        # a flat engine loses one worker; a hybrid mesh
+                        # loses the dead device's whole tensor*stage
+                        # block (one data replica) — the engine knows
+                        inner = getattr(engine, "inner", engine)
+                        if hasattr(inner, "crash_plan"):
+                            survivors, lost = inner.crash_plan(ev.worker)
+                        else:
+                            survivors = _engine_workers(engine) - 1
+                            lost = (ev.worker,)
+                        st = engine.reshard(st, survivors, step=rstep,
+                                            lost=lost)
+                        eb.assign(_engine_streams(engine))
+                        commit(rstep, st, len(history))
+                    recoveries.append(dict(
+                        kind=ev.kind, at=t, restored_step=rstep,
+                        lost_steps=t - rstep,
+                        lost_worker=ev.worker if ev.kind == "crash"
+                        else None,
+                        workers=_engine_workers(engine),
+                        wall_s=time.time() - t0))
+                    t = rstep
+                    rolled_back = True
+                    break
+            if rolled_back:
+                continue
+            if ckpt and t > 0 and t % checkpoint_every == 0:
+                commit(t, st, len(history))
+            st, evs = engine.step(st, eb, t)
+            history.extend(evs)
+            executed += 1
+            t += 1
+            if executed > steps * 10 + 100:
+                raise RuntimeError("elastic run not converging on its "
+                                   "step target (runaway rollback loop?)")
+    finally:
+        for sig, old in installed:
+            signal.signal(sig, old)
 
     mets = engine.metrics()
     mets.update(recoveries=recoveries, resizes=resizes,
                 executed_steps=executed, wasted_steps=executed - steps,
-                final_workers=_engine_workers(engine))
+                final_workers=_engine_workers(engine),
+                preempted=bool(preempted), preempt_step=(t if preempted
+                                                         else None),
+                resumed_from=resumed_from)
     return engine.finalize(st), history, mets

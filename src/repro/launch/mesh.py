@@ -13,6 +13,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_hybrid_mesh(devices, data: int, tensor: int, stage: int,
+                     axes=("data", "tensor", "stage")):
+    """The hybrid-parallel training mesh (repro.parallel): ``data`` x
+    ``tensor`` x ``stage`` over an explicit device list — virtual host
+    devices in tests, real chips in production.  Device order is
+    data-major so a data-axis resize keeps (tensor, stage) blocks
+    contiguous."""
+    import numpy as np
+    n = data * tensor * stage
+    if len(devices) < n:
+        raise ValueError(f"mesh {data}x{tensor}x{stage} needs {n} devices, "
+                         f"have {len(devices)}")
+    from jax.sharding import Mesh
+    return Mesh(np.array(devices[:n]).reshape(data, tensor, stage), axes)
+
+
 def make_host_mesh(model_axis: int = 1):
     """Whatever this host actually has (smoke tests / examples)."""
     n = len(jax.devices())

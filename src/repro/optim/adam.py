@@ -14,6 +14,10 @@ class Adam:
     eps: float = 1e-8
     weight_decay: float = 0.0
 
+    # fp32 moment buffers per parameter — the quantity ZeRO-1/2 shard
+    # away (repro.parallel.zero's memory math keys on this)
+    moments_per_param = 2
+
     def init(self, params):
         z = lambda p: jnp.zeros_like(p, jnp.float32)
         return {"m": jax.tree.map(z, params),

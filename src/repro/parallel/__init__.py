@@ -1,0 +1,34 @@
+"""Hybrid-parallel subsystem (survey §3.2): multi-axis
+data × tensor × stage meshes with ZeRO optimizer-state sharding, as a
+declarative Strategy dimension.
+
+  mesh_plan.py  MeshSpec geometry + suffix grammar (``d2.t2.s2.z3.adamw``)
+                and MeshPlan — the composition plan (role-based tensor
+                shards, GPipe micro-batching, the shared data-axis bucket
+                plan, ZeRO shard sizes)
+  staged.py     StagedModel contract + Megatron collective helpers + the
+                tiny transformer-FFN reference model
+  zero.py       ZeRO-1/2/3 sharded update over the data axis through the
+                core/parameter_server.py reduce-scatter path (SGD + AdamW)
+  engine.py     HybridEngine — the single device-executed train step over
+                the 3-axis mesh, speaking the Engine/elastic protocol
+
+See docs/hybrid.md for the grammar, axis semantics, and memory math.
+"""
+from repro.parallel.engine import HybridConfig, HybridEngine
+from repro.parallel.mesh_plan import (AXES, MeshPlan, MeshSpec, parse_suffix,
+                                      plan_mesh, suffix_spec)
+from repro.parallel.staged import (StagedModel, is_staged_model,
+                                   make_tiny_transformer, stacked_grad_fn,
+                                   stacked_loss, tensor_copy)
+from repro.parallel.zero import (make_zero_bucket_update,
+                                 state_bytes_per_device,
+                                 wire_bytes_per_device)
+
+__all__ = [
+    "AXES", "MeshSpec", "MeshPlan", "parse_suffix", "suffix_spec",
+    "plan_mesh", "StagedModel", "is_staged_model", "make_tiny_transformer",
+    "stacked_grad_fn", "stacked_loss", "tensor_copy", "HybridConfig",
+    "HybridEngine", "make_zero_bucket_update", "state_bytes_per_device",
+    "wire_bytes_per_device",
+]

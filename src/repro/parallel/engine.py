@@ -1,0 +1,645 @@
+"""The hybrid-parallel engine: one device-executed train step over a
+data × tensor × stage mesh with ZeRO-sharded optimizer state.
+
+``HybridEngine`` composes the three parallelization methods of the
+survey's §3.2 — and the repo's three previously-disconnected modules —
+into a single jitted ``shard_map`` over a 3-axis mesh:
+
+  stage axis    ``core/pipeline.py``'s GPipe micro-batch schedule: each
+                stage device holds its stage's parameters, activations
+                flow through the ``lax.scan`` + ``ppermute`` loop forward
+                AND backward (ppermute's transpose runs the reverse
+                pipeline), micro-batch gradients accumulate in the scan.
+  tensor axis   ``core/parallelism.py``'s role-based PartitionSpecs made
+                explicit: each leaf is sharded on its role dimension
+                (column-parallel on the output dim, row-parallel on the
+                input dim) and the StagedModel places the two Megatron
+                collectives (see parallel/staged.py).
+  data axis     the existing bucketed / compressed / error-feedback
+                exchange of ``train/data_parallel.py`` — same bucket
+                planner, same compressor accounting — either as a
+                topology-explicit allreduce (z0) or through the
+                reduce-scatter/shard-update/all-gather ZeRO path of
+                ``core/parameter_server.py`` (z1-z3, parallel/zero.py).
+
+The engine speaks the same Engine/elastic protocol as the other two
+backends (init / step / finalize, export_state / import_state / reshard),
+so ``Trainer.fit(plan=...)`` checkpoint-recovers and resizes hybrid runs
+— resizing rebuilds the *data* axis (tensor × stage geometry is a model
+property and survives), and checkpoints carry the sharded optimizer
+state.  BSP only: asynchrony composes with the data axis, not with the
+pipeline schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import shard_map
+from repro.core.compression import Compressor, EF_METHODS
+from repro.core.pipeline import gpipe_forward, gpipe_ticks
+from repro.launch.mesh import make_hybrid_mesh
+from repro.parallel.mesh_plan import AXES, MeshPlan, MeshSpec, plan_mesh
+from repro.parallel.staged import (StagedModel, is_staged_model,
+                                   tensor_reduce)
+from repro.parallel.zero import (flatten_bucket, init_opt_state,
+                                 make_optimizer_step, make_zero_bucket_update,
+                                 state_bytes_per_device,
+                                 wire_bytes_per_device)
+from repro.train.data_parallel import (_scatter_flat, make_bucketed_allreduce)
+
+DATA, TENSOR, STAGE = AXES
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    mesh: MeshSpec = MeshSpec()
+    lr: float = 0.1
+    compressor: Compressor = Compressor("none")
+    zero: int = 0                    # ZeRO level 0-3 (data-axis sharding)
+    optimizer: str = "sgd"           # sgd | adamw
+    topology: str = "ring"           # z0 data-axis allreduce schedule
+    bucket_mb: float = 4.0
+    order: str = "tictac"
+    micro_batches: int = 0           # 0 = auto (2*stages when pipelined)
+    seed: int = 0
+
+    @property
+    def num_workers(self) -> int:
+        """Total devices — the elastic layer's worker count."""
+        return self.mesh.size
+
+
+class HybridEngine:
+    """BSP over a d×t×s mesh with ZeRO-0/1/2/3 state sharding.
+
+    The model is either a plain ``grad_fn(params, batch)`` (pure data
+    axis: mesh must be dK.t1.s1) or a ``StagedModel`` with stage-stacked
+    params (any mesh).  ``batches(t, w)`` is keyed by *data-parallel
+    slot* w in [0, mesh.data) — the tensor/stage axes replicate the
+    slot's batch."""
+
+    def __init__(self, cfg: HybridConfig, model, devices: Optional[Sequence] = None):
+        if cfg.zero not in (0, 1, 2, 3):
+            raise ValueError(f"zero={cfg.zero} (want 0..3)")
+        if cfg.optimizer not in ("sgd", "adamw"):
+            raise ValueError(f"optimizer={cfg.optimizer!r}")
+        self.staged = is_staged_model(model)
+        if not self.staged and not cfg.mesh.is_trivial:
+            raise ValueError(
+                f"mesh {cfg.mesh.spec()} has tensor/stage axes; pass a "
+                "repro.parallel.StagedModel (a bare grad_fn cannot be "
+                "pipelined or tensor-sharded)")
+        self.cfg = cfg
+        self.model: Optional[StagedModel] = model if self.staged else None
+        self.grad_fn: Optional[Callable] = None if self.staged else model
+        self._devs = list(devices or jax.devices())
+        if len(self._devs) < cfg.mesh.size:
+            raise ValueError(
+                f"mesh {cfg.mesh.spec()} needs {cfg.mesh.size} devices, "
+                f"have {len(self._devs)} (run under "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        self.mesh = make_hybrid_mesh(self._devs, cfg.mesh.data,
+                                     cfg.mesh.tensor, cfg.mesh.stage)
+        self.plan: Optional[MeshPlan] = None
+        self.slowdowns: List[float] = [1.0] * cfg.mesh.data
+        self._step_fn = None
+        self._wire_cell: List[int] = []
+        self._act_cell: List[int] = []
+        self._wire_total = 0
+        self._leaf_meta = None           # (treedef, [(local_shape, dtype)])
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def data_streams(self) -> int:
+        """Batch streams the engine consumes (the data axis size) — the
+        elastic layer keys ``ElasticBatches`` on this, not on the total
+        device count."""
+        return self.cfg.mesh.data
+
+    @property
+    def _ef_active(self) -> bool:
+        return self.cfg.compressor.method in EF_METHODS
+
+    def _ensure_plan(self, params):
+        if self.plan is None:
+            self.plan = plan_mesh(
+                params, self.cfg.mesh, staged=self.staged,
+                bucket_mb=self.cfg.bucket_mb, order=self.cfg.order,
+                micro_batches=self.cfg.micro_batches, seed=self.cfg.seed)
+            leaves = jax.tree.leaves(params)
+            locals_ = jax.tree.leaves(self.plan.local_example)
+            self._leaf_meta = (
+                jax.tree.structure(params),
+                [(tuple(lo.shape), le.dtype)
+                 for lo, le in zip(locals_, leaves)])
+        return self.plan
+
+    def _local_block(self, leaf, t_dim, s_idx: int, t_idx: int):
+        """Host-side (s, t) block of a stacked leaf — the array one mesh
+        coordinate holds: a contiguous chunk of layers along dim 0, a
+        role-dim slice along the tensor axis."""
+        x = np.asarray(leaf)
+        if self.staged:
+            chunk = x.shape[0] // self.cfg.mesh.stage
+            x = x[s_idx * chunk:(s_idx + 1) * chunk]
+        if self.cfg.mesh.tensor > 1 and t_dim is not None:
+            m = x.shape[t_dim] // self.cfg.mesh.tensor
+            x = np.take(x, range(t_idx * m, (t_idx + 1) * m), axis=t_dim)
+        return x
+
+    def _bucket_flat(self, params, b: int, s_idx: int, t_idx: int):
+        """Host-side flat (s, t)-local bucket vector, padded over data."""
+        plan = self.plan
+        leaves = jax.tree.leaves(params)
+        flat = np.concatenate(
+            [self._local_block(leaves[i], plan.tensor_dims[i], s_idx,
+                               t_idx).astype(np.float32).reshape(-1)
+             for i in plan.buckets[b]])
+        pad = plan.mesh.data * -(-flat.size // plan.mesh.data) - flat.size
+        return np.pad(flat, (0, pad))
+
+    def _shard_array(self, params, b: int) -> np.ndarray:
+        """[D, S, T, m] array of per-rank flat shards for bucket ``b``."""
+        cfg, plan = self.cfg, self.plan
+        d, t, s = cfg.mesh.data, cfg.mesh.tensor, cfg.mesh.stage
+        m = -(-plan.bucket_sizes[b] // d)
+        out = np.zeros((d, s, t, m), np.float32)
+        for si in range(s):
+            for ti in range(t):
+                out[:, si, ti, :] = self._bucket_flat(
+                    params, b, si, ti).reshape(d, m)
+        return out
+
+    def _materialize_params(self, pshard_arrays: List[np.ndarray]):
+        """Inverse of ``_shard_array``: rebuild the full stacked parameter
+        pytree from the per-bucket [D, S, T, m] shard arrays (host side —
+        checkpointing, finalize, reshard)."""
+        cfg, plan = self.cfg, self.plan
+        treedef, meta = self._leaf_meta
+        t_dims = plan.tensor_dims
+        s_ax, t_ax = cfg.mesh.stage, cfg.mesh.tensor
+        # allocate full stacked leaves
+        full = []
+        for i, (lshape, dtype) in enumerate(meta):
+            gshape = list(lshape)
+            td = t_dims[i]
+            if t_ax > 1 and td is not None:
+                gshape[td] *= t_ax
+            if self.staged:
+                gshape[0] *= s_ax
+            full.append(np.zeros(gshape, np.float32))
+        for arr, b in zip(pshard_arrays, plan.order):
+            n_b = plan.bucket_sizes[b]
+            for si in range(s_ax):
+                for ti in range(t_ax):
+                    flat = np.asarray(arr)[:, si, ti, :].reshape(-1)[:n_b]
+                    off = 0
+                    for i in plan.buckets[b]:
+                        lshape, dtype = meta[i]
+                        size = int(np.prod(lshape)) if lshape else 1
+                        block = flat[off:off + size].reshape(lshape)
+                        off += size
+                        td = t_dims[i]
+                        sl = [slice(None)] * block.ndim
+                        if self.staged:
+                            chunk = lshape[0]
+                            sl[0] = slice(si * chunk, (si + 1) * chunk)
+                        if t_ax > 1 and td is not None:
+                            m = block.shape[td]
+                            sl[td] = slice(ti * m, (ti + 1) * m)
+                        full[i][tuple(sl)] = block
+        full = [f.astype(meta[i][1]) for i, f in enumerate(full)]
+        return jax.tree.unflatten(treedef, full)
+
+    # -------------------------------------------------------------- specs
+    def _param_spec(self, t_dim, local_ndim: int):
+        """PartitionSpec of one stacked leaf: layer dim over the stage
+        axis + the role dim over the tensor axis, replicated over data
+        (local and global rank agree — stage/tensor divide dims)."""
+        if not self.staged:
+            return P()
+        axes: List[Optional[str]] = [None] * local_ndim
+        axes[0] = STAGE
+        if t_dim is not None and self.cfg.mesh.tensor > 1:
+            axes[t_dim] = TENSOR
+        return P(*axes)
+
+    def _state_specs(self):
+        plan, cfg = self.plan, self.cfg
+        t_dims = plan.tensor_dims
+        locals_ = jax.tree.leaves(plan.local_example)
+        treedef = self._leaf_meta[0]
+        p_specs = jax.tree.unflatten(
+            treedef, [self._param_spec(td, lo.ndim)
+                      for td, lo in zip(t_dims, locals_)])
+        shard_spec = [P(DATA, STAGE, TENSOR) for _ in plan.order]
+        if cfg.zero == 3:
+            params_spec: Any = shard_spec
+        else:
+            params_spec = p_specs
+        if cfg.optimizer == "adamw":
+            if cfg.zero == 0:
+                opt_spec: Any = {"m": p_specs, "v": p_specs, "t": P()}
+            else:
+                opt_spec = {"m": list(shard_spec), "v": list(shard_spec),
+                            "t": P()}
+        else:
+            opt_spec = P()      # None pytree: placeholder spec
+        ef_spec = (jax.tree.unflatten(
+            treedef, [P(DATA, STAGE, TENSOR) for _ in locals_])
+            if self._ef_active else P())
+        return params_spec, opt_spec, ef_spec
+
+    # ---------------------------------------------------------------- init
+    def init(self, params) -> Dict[str, Any]:
+        cfg = self.cfg
+        plan = self._ensure_plan(params)
+        st: Dict[str, Any] = dict(rng=jax.random.PRNGKey(cfg.seed), wire=0)
+        if cfg.zero == 3:
+            st["params"] = [jnp.asarray(self._shard_array(params, b))
+                            for b in plan.order]
+        else:
+            st["params"] = params
+        if cfg.optimizer == "adamw":
+            if cfg.zero == 0:
+                st["opt"] = init_opt_state("adamw", params)
+            else:
+                # one moment shard per bucket, in ISSUE order — aligned
+                # with the p/g bucket lists the step function builds
+                zeros = [jnp.zeros((cfg.mesh.data, cfg.mesh.stage,
+                                    cfg.mesh.tensor,
+                                    plan.shard_sizes[b]), jnp.float32)
+                         for b in plan.order]
+                st["opt"] = {"m": list(zeros),
+                             "v": [jnp.zeros_like(z) for z in zeros],
+                             "t": jnp.zeros((), jnp.int32)}
+        else:
+            st["opt"] = None
+        if self._ef_active:
+            d, t, s = cfg.mesh.data, cfg.mesh.tensor, cfg.mesh.stage
+            st["ef"] = jax.tree.map(
+                lambda lo: jnp.zeros((d, s, t) + lo.shape, jnp.float32),
+                plan.local_example)
+        else:
+            st["ef"] = None
+        return st
+
+    # ---------------------------------------------------------------- step
+    def _build_step(self):
+        cfg, plan = self.cfg, self.plan
+        model, grad_fn = self.model, self.grad_fn
+        comp = cfg.compressor
+        D, T, S = cfg.mesh.data, cfg.mesh.tensor, cfg.mesh.stage
+        micro = plan.micro
+        treedef, meta = self._leaf_meta
+        sizes = [plan.bucket_sizes[b] for b in plan.order]
+        reduce0 = (make_bucketed_allreduce(
+            plan.local_example, topology=cfg.topology,
+            bucket_mb=cfg.bucket_mb, order=cfg.order, seed=cfg.seed,
+            axis=DATA) if cfg.zero == 0 else None)
+        zero_update = (make_zero_bucket_update(
+            plan, cfg.zero, cfg.optimizer, cfg.lr, axis=DATA)
+            if cfg.zero else None)
+        opt_step0 = (make_optimizer_step(cfg.optimizer, cfg.lr)
+                     if cfg.zero == 0 else None)
+        tensor_axis = TENSOR if T > 1 else None
+        wire_cell: List[int] = []
+        act_cell: List[int] = []
+
+        def squeeze3(x):
+            return x[0, 0, 0]
+
+        def expand3(x):
+            return jnp.expand_dims(x, (0, 1, 2))
+
+        chunk = (jax.tree.leaves(plan.local_example)[0].shape[0]
+                 if self.staged else 0)
+
+        def local_params(pstate):
+            if cfg.zero == 3:
+                shards = [squeeze3(x) for x in pstate]
+                out: List[Any] = [None] * len(meta)
+                for shard, b, n_b in zip(shards, plan.order, sizes):
+                    full = lax.all_gather(shard, DATA).reshape(-1)[:n_b]
+                    _scatter_flat(full, plan.buckets[b],
+                                  meta, out)
+                return jax.tree.unflatten(treedef, out)
+            return pstate
+
+        def stage_call(sp, xx):
+            # one stage device holds a contiguous chunk of layers
+            for j in range(chunk):
+                xx = model.stage_fn(jax.tree.map(lambda l: l[j], sp), xx,
+                                    tensor_axis=tensor_axis)
+            return xx
+
+        def local_loss_and_grads(p_local, batch):
+            if not self.staged:
+                return grad_fn(p_local, batch)
+
+            def lloss(pl):
+                x = model.inputs(batch)
+                bsz = x.shape[0]
+                xm = x.reshape((micro, bsz // micro) + x.shape[1:])
+                if not act_cell:
+                    act_cell.append(int(np.prod(xm.shape[1:])) * 4)
+                outs = gpipe_forward(stage_call, pl, xm, STAGE)
+                y = outs.reshape((bsz,) + x.shape[1:])
+                loss = model.readout(y, batch)
+                # only the last stage holds real outputs; the reduce
+                # broadcasts its loss along the stage axis with identity
+                # transpose (each stage's masked loss gets the plain
+                # cotangent — the pipeline backward itself flows through
+                # the ppermute chain inside gpipe_forward)
+                loss = jnp.where(lax.axis_index(STAGE) == S - 1, loss, 0.0)
+                return tensor_reduce(STAGE)(loss)
+
+            return jax.value_and_grad(lloss)(p_local)
+
+        def body(pstate, opt, ef, batch, key0):
+            batch_l = jax.tree.map(lambda x: x[0], batch)
+            p_local = local_params(pstate)
+            loss, grads = local_loss_and_grads(p_local, batch_l)
+            key = key0
+            for ax in AXES:
+                key = jax.random.fold_in(key, lax.axis_index(ax))
+            if comp.method != "none":
+                ef_l = jax.tree.map(squeeze3, ef) if ef is not None else None
+                grads, ef_new, wb = comp.roundtrip(grads, ef_l, key)
+                ef_out = (jax.tree.map(expand3, ef_new)
+                          if ef_new is not None else ef)
+            else:
+                ef_out = ef
+                wb = sum(int(np.prod(s)) * 4 for s, _ in meta)
+            if not wire_cell:
+                wire_cell.append(int(wb))
+            if cfg.zero == 0:
+                avg = reduce0(grads)
+                p_out, opt_new = opt_step0(p_local, avg, opt)
+            else:
+                g_leaves = jax.tree.leaves(grads)
+                g_buckets = [flatten_bucket(g_leaves, plan.buckets[b])
+                             for b in plan.order]
+                if cfg.zero == 3:
+                    p_buckets = [squeeze3(x) for x in pstate]
+                else:
+                    p_leaves = jax.tree.leaves(p_local)
+                    p_buckets = [flatten_bucket(p_leaves, plan.buckets[b])
+                                 for b in plan.order]
+                opt_l = opt
+                if opt is not None:
+                    opt_l = {"m": [squeeze3(x) for x in opt["m"]],
+                             "v": [squeeze3(x) for x in opt["v"]],
+                             "t": opt["t"]}
+                new_buckets, opt_new = zero_update(p_buckets, g_buckets,
+                                                   opt_l)
+                if opt_new is not None:
+                    opt_new = {"m": [expand3(x) for x in opt_new["m"]],
+                               "v": [expand3(x) for x in opt_new["v"]],
+                               "t": opt_new["t"]}
+                if cfg.zero == 3:
+                    p_out = [expand3(x) for x in new_buckets]
+                else:
+                    out: List[Any] = [None] * len(meta)
+                    for flat, b in zip(new_buckets, plan.order):
+                        _scatter_flat(flat, plan.buckets[b], meta, out)
+                    p_out = jax.tree.unflatten(treedef, out)
+            return p_out, opt_new if opt is not None else opt, ef_out, \
+                loss[None]
+
+        params_spec, opt_spec, ef_spec = self._state_specs()
+        fn = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(params_spec, opt_spec, ef_spec, P(DATA), P()),
+            out_specs=(params_spec, opt_spec, ef_spec, P(DATA)),
+            check_vma=False)
+        return jax.jit(fn), wire_cell, act_cell
+
+    def step(self, st, batches: Callable[[int, int], Any], t: int):
+        cfg = self.cfg
+        if self._step_fn is None:
+            self._step_fn, self._wire_cell, self._act_cell = \
+                self._build_step()
+        D = cfg.mesh.data
+        per = [batches(t, w) for w in range(D)]
+        if self.staged and cfg.mesh.stage > 1:
+            bsz = int(np.shape(self.model.inputs(per[0]))[0])
+            if bsz % self.plan.micro:
+                raise ValueError(
+                    f"batch size {bsz} not divisible into "
+                    f"{self.plan.micro} micro-batches")
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        st["rng"], sub = jax.random.split(st["rng"])
+        params, opt, ef, losses = self._step_fn(st["params"], st["opt"],
+                                                st["ef"], batch, sub)
+        st.update(params=params, opt=opt, ef=ef)
+        st["wire"] += self._wire_cell[0] * cfg.mesh.size
+        self._wire_total = st["wire"]
+        ev = dict(step=t, loss=float(np.mean(np.asarray(losses))),
+                  max_staleness=0)
+        return st, [ev]
+
+    def finalize(self, st):
+        if self.cfg.zero == 3:
+            return self._materialize_params(
+                [np.asarray(x) for x in st["params"]])
+        return st["params"]
+
+    def wire_bytes(self) -> int:
+        return self._wire_total
+
+    # ------------------------------------------------------------- metrics
+    def per_device_state_bytes(self, st) -> Dict[str, int]:
+        """Measured persistent bytes per device, from the actual state
+        arrays divided by their sharding factor — what docs/hybrid.md's
+        memory math predicts and the ZeRO acceptance test asserts on."""
+        cfg = self.cfg
+        D, T, S = cfg.mesh.data, cfg.mesh.tensor, cfg.mesh.stage
+        stacked_div = (S * T) if self.staged else 1
+        shard_div = D * S * T
+        out = {"params": 0, "opt": 0, "ef": 0}
+        if cfg.zero == 3:
+            out["params"] = sum(np.asarray(x).nbytes // shard_div
+                                for x in st["params"])
+        else:
+            out["params"] = sum(np.asarray(x).nbytes // stacked_div
+                                for x in jax.tree.leaves(st["params"]))
+        if st["opt"] is not None:
+            for k in ("m", "v"):
+                leaves = jax.tree.leaves(st["opt"][k])
+                div = stacked_div if cfg.zero == 0 else shard_div
+                out["opt"] += sum(np.asarray(x).nbytes // div
+                                  for x in leaves)
+            out["opt"] += 4
+        if st["ef"] is not None:
+            out["ef"] = sum(np.asarray(x).nbytes // shard_div
+                            for x in jax.tree.leaves(st["ef"]))
+        out["total"] = out["params"] + out["opt"]
+        return out
+
+    def extra_metrics(self) -> Dict[str, Any]:
+        cfg, plan = self.cfg, self.plan
+        m: Dict[str, Any] = dict(
+            mesh=cfg.mesh.spec(), zero=cfg.zero, optimizer=cfg.optimizer)
+        if plan is not None:
+            wb = self._wire_cell[0] if self._wire_cell else None
+            m["modeled_data_bytes_per_dev"] = wire_bytes_per_device(
+                plan, cfg.zero, grad_bytes=wb)
+            m["analytic_state_bytes"] = state_bytes_per_device(
+                plan, cfg.zero, cfg.optimizer)
+            if self._act_cell and cfg.mesh.stage > 1:
+                ticks = gpipe_ticks(cfg.mesh.stage, plan.micro)
+                m["modeled_pipeline_bytes_per_dev"] = \
+                    self._act_cell[0] * ticks
+                if cfg.mesh.tensor > 1:
+                    t = cfg.mesh.tensor
+                    m["modeled_tensor_bytes_per_dev"] = int(
+                        self._act_cell[0] * ticks * 2 * (t - 1) / t)
+        return m
+
+    # --------------------------------------------------- elastic interface
+    def set_slowdown(self, worker: int, factor: float):
+        """Record a straggler event.  Plan worker ids are flat device
+        indices; a device's slowdown is recorded against its data slot
+        (devices are data-major, so slot = id // (t*s)).  The hybrid step
+        is a single fused BSP program — there is no backup-drop path to
+        feed — so the record only affects reshard bookkeeping."""
+        ts = self.cfg.mesh.tensor * self.cfg.mesh.stage
+        slot = worker // ts
+        if not 0 <= slot < self.cfg.mesh.data:
+            raise ValueError(f"worker {worker} out of range for mesh "
+                             f"{self.cfg.mesh.spec()}")
+        self.slowdowns[slot] = factor
+
+    def crash_plan(self, worker: int) -> Tuple[int, Tuple[int, ...]]:
+        """What losing device ``worker`` means for this mesh: its whole
+        tensor × stage block (the model-parallel replica of one data
+        slot) goes with it, so the run reshards to one fewer data
+        replica.  The elastic trainer consults this instead of assuming
+        flat worker = device - 1 semantics."""
+        cfg = self.cfg
+        if not 0 <= worker < cfg.mesh.size:
+            raise ValueError(f"worker {worker} out of range for mesh "
+                             f"{cfg.mesh.spec()}")
+        ts = cfg.mesh.tensor * cfg.mesh.stage
+        if cfg.mesh.data <= 1:
+            raise ValueError(
+                f"mesh {cfg.mesh.spec()} has a single data replica; "
+                "losing a device leaves nothing to reshard to")
+        return cfg.mesh.size - ts, (worker // ts,)
+
+    def reshard(self, st, new_workers: int, step: int = 0,
+                lost: Tuple[int, ...] = ()):
+        """Resize the mesh to ``new_workers`` total devices by rebuilding
+        the *data* axis (tensor × stage geometry is a property of the
+        model and survives).  ZeRO shards are re-cut over the new data
+        axis; survivor data slots keep their EF residuals."""
+        cfg, plan = self.cfg, self.plan
+        ts = cfg.mesh.tensor * cfg.mesh.stage
+        if new_workers < ts or new_workers % ts:
+            raise ValueError(
+                f"resize to {new_workers} devices does not factor over the "
+                f"tensor*stage block of {ts} (mesh {cfg.mesh.spec()}); "
+                "hybrid meshes resize along the data axis only")
+        new_d = new_workers // ts
+        if new_workers > len(self._devs):
+            raise ValueError(
+                f"resize to {new_workers} devices: have {len(self._devs)}")
+        bad = [w for w in lost if w < 0 or w >= cfg.mesh.data]
+        if bad:
+            raise ValueError(f"lost data slots {bad} out of range for "
+                             f"data axis {cfg.mesh.data}")
+        survivors = [w for w in range(cfg.mesh.data) if w not in set(lost)]
+        slots = survivors[:new_d]
+        grown = new_d - len(slots)
+        st = {k: (jax.device_get(v) if k not in ("wire",) else v)
+              for k, v in st.items()}
+        # re-cut the flat data-axis shards (params for z3, moments for z1+)
+        old_plan = plan
+
+        def recut(arrs: List[np.ndarray]) -> List[np.ndarray]:
+            out = []
+            for arr, b in zip(arrs, old_plan.order):
+                arr = np.asarray(arr)
+                n_b = old_plan.bucket_sizes[b]
+                m_new = -(-n_b // new_d)
+                _, S, T, _ = arr.shape
+                new = np.zeros((new_d, S, T, m_new), np.float32)
+                for si in range(S):
+                    for ti in range(T):
+                        flat = arr[:, si, ti, :].reshape(-1)[:n_b]
+                        new[:, si, ti, :] = np.pad(
+                            flat, (0, new_d * m_new - n_b)).reshape(
+                                new_d, m_new)
+                out.append(new)
+            return out
+
+        if cfg.zero == 3:
+            st["params"] = recut(st["params"])
+        if st["opt"] is not None and cfg.zero >= 1:
+            st["opt"] = {"m": recut(st["opt"]["m"]),
+                         "v": recut(st["opt"]["v"]), "t": st["opt"]["t"]}
+        if st["ef"] is not None:
+            def remap_rows(x):
+                x = np.asarray(x)
+                rows = ([x[s] for s in slots]
+                        + [np.zeros_like(x[0])] * grown)
+                return np.stack(rows)
+            st["ef"] = jax.tree.map(remap_rows, st["ef"])
+        new_mesh = MeshSpec(new_d, cfg.mesh.tensor, cfg.mesh.stage)
+        self.cfg = cfg = dataclasses.replace(cfg, mesh=new_mesh)
+        self.mesh = make_hybrid_mesh(self._devs, new_d, cfg.mesh.tensor,
+                                     cfg.mesh.stage)
+        self.slowdowns = [self.slowdowns[s] for s in slots] + [1.0] * grown
+        # the bucket identity is a function of the local block structure
+        # and survives; only the per-rank shard length changes
+        self.plan = dataclasses.replace(
+            old_plan, mesh=new_mesh,
+            shard_sizes=[-(-n // new_d) for n in old_plan.bucket_sizes])
+        self._step_fn = None
+        self._wire_cell, self._act_cell = [], []
+        return st
+
+    def export_state(self, st) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        cfg = self.cfg
+        arrays = {"params": st["params"], "opt": st["opt"], "ef": st["ef"],
+                  "rng": st["rng"]}
+        meta = dict(backend="hybrid", mesh=cfg.mesh.spec(), zero=cfg.zero,
+                    optimizer=cfg.optimizer, num_workers=cfg.mesh.size,
+                    wire=int(st["wire"]), slowdowns=list(self.slowdowns))
+        return arrays, meta
+
+    def import_state(self, arrays: Dict[str, Any], meta: Dict[str, Any]):
+        cfg = self.cfg
+        if meta["num_workers"] != cfg.mesh.size:
+            raise ValueError(
+                f"snapshot has {meta['num_workers']} devices, engine has "
+                f"{cfg.mesh.size}; reshard the engine first")
+        if meta["mesh"] != cfg.mesh.spec() or meta["zero"] != cfg.zero \
+                or meta["optimizer"] != cfg.optimizer:
+            raise ValueError(
+                f"snapshot geometry {meta['mesh']}/z{meta['zero']}/"
+                f"{meta['optimizer']} does not match engine "
+                f"{cfg.mesh.spec()}/z{cfg.zero}/{cfg.optimizer}")
+        self.slowdowns = [float(s) for s in meta["slowdowns"]]
+        st = dict(params=arrays["params"], opt=arrays["opt"],
+                  ef=arrays["ef"], rng=jnp.asarray(arrays["rng"]),
+                  wire=int(meta["wire"]))
+        self._wire_total = st["wire"]
+        return st
+
+    # ------------------------------------------------------------------ run
+    def run(self, params, batches: Callable[[int, int], Any], steps: int):
+        st = self.init(params)
+        hist: List[dict] = []
+        for t in range(steps):
+            st, ev = self.step(st, batches, t)
+            hist.extend(ev)
+        return self.finalize(st), hist, st["wire"]

@@ -1,0 +1,246 @@
+"""Multi-axis device meshes as a declarative Strategy dimension.
+
+The survey's §3.2 parallelization taxonomy — data-, model- (tensor-), and
+pipeline-parallelism — becomes a *mesh suffix* on the Strategy spec
+string::
+
+    bsp/ring/onebit@8:d2.t2.s2      8 devices as data=2 x tensor=2 x stage=2
+    bsp/ps/none@4:d4.z3.adamw       4-way data parallel, ZeRO-3 AdamW
+
+Suffix grammar (order-insensitive dot-separated tokens, ``parse_suffix``
+and ``suffix_spec`` are inverses)::
+
+    token := "d" N   data-parallel replicas        (default 1)
+           | "t" N   tensor-parallel shards        (default 1)
+           | "s" N   pipeline stages               (default 1)
+           | "z" L   ZeRO optimizer-state level    (0..3, default 0)
+           | "m" K   pipeline micro-batches        (default 2*stages)
+           | "sgd" | "adamw"                       (optimizer, default sgd)
+
+``MeshSpec`` is the axis geometry; ``MeshPlan`` (built by ``plan_mesh``)
+is the *composition plan* the hybrid engine executes: per-leaf tensor
+shard dimensions assigned by ``core/parallelism.py``'s role rules, the
+per-device local block shapes, the data-axis fused-bucket plan shared
+with ``core/comm_scheduler`` (the same plan the pure data-parallel engine
+executes), and the ZeRO shard sizes over the data axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.comm_scheduler import LayerCost
+from repro.core.parallelism import model_axis_dim
+
+AXES = ("data", "tensor", "stage")
+
+OPTIMIZERS = ("sgd", "adamw")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Axis geometry of a hybrid mesh: ``size == data * tensor * stage``."""
+    data: int = 1
+    tensor: int = 1
+    stage: int = 1
+
+    def __post_init__(self):
+        for name in ("data", "tensor", "stage"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"mesh {name} axis must be >= 1")
+
+    @property
+    def size(self) -> int:
+        return self.data * self.tensor * self.stage
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when the mesh is pure data parallelism (t == s == 1)."""
+        return self.tensor == 1 and self.stage == 1
+
+    def spec(self) -> str:
+        return f"d{self.data}.t{self.tensor}.s{self.stage}"
+
+    @classmethod
+    def parse(cls, text: str) -> "MeshSpec":
+        """Parse a pure axis spec (``d2.t2.s2``).  Non-geometry tokens
+        (z/m/sgd/adamw) are rejected — silently dropping a ZeRO level
+        from ``Strategy(mesh="d4.z3")`` would train un-sharded."""
+        fields, named = parse_suffix(text)
+        extras = [k for k in ("zero", "optimizer", "micro_batches")
+                  if named[k]]
+        if extras:
+            raise ValueError(
+                f"mesh spec {text!r} carries non-axis tokens ({extras}); "
+                "a mesh is dN.tN.sN only — pass zero/optimizer/"
+                "micro_batches as Strategy fields, or use the full spec "
+                "string suffix (Strategy.parse)")
+        return fields["mesh"]
+
+
+def parse_suffix(text: str) -> Tuple[Dict[str, Any], Dict[str, bool]]:
+    """Parse a mesh suffix into Strategy fields.
+
+    Returns ``(fields, named)``: ``fields`` has mesh/zero/optimizer/
+    micro_batches defaults filled in, ``named`` records which were
+    explicitly present (so Strategy keyword defaults do not clobber
+    spec-named values and vice versa)."""
+    axes = {"d": 1, "t": 1, "s": 1}
+    zero, optimizer, micro = 0, "sgd", 0
+    named = {"mesh": False, "zero": False, "optimizer": False,
+             "micro_batches": False}
+    seen = set()
+    for tok in text.split("."):
+        tok = tok.strip()
+        if not tok:
+            raise ValueError(f"bad mesh suffix {text!r}: empty token")
+        # all optimizer names share one slot — "sgd.adamw" is a
+        # contradiction, not a last-wins override
+        key = "optimizer" if tok in OPTIMIZERS else tok[0]
+        if key in seen:
+            raise ValueError(f"bad mesh suffix {text!r}: duplicate {key!r}")
+        if tok in OPTIMIZERS:
+            seen.add(key)
+            optimizer, named["optimizer"] = tok, True
+            continue
+        head, val = tok[0], tok[1:]
+        if head not in ("d", "t", "s", "z", "m") or not val.isdigit():
+            raise ValueError(
+                f"bad mesh suffix {text!r}: token {tok!r} (want dN/tN/sN/"
+                f"zL/mK/sgd/adamw)")
+        seen.add(head)
+        if head in axes:
+            axes[head], named["mesh"] = int(val), True
+        elif head == "z":
+            zero, named["zero"] = int(val), True
+        else:
+            micro, named["micro_batches"] = int(val), True
+    fields = dict(mesh=MeshSpec(axes["d"], axes["t"], axes["s"]),
+                  zero=zero, optimizer=optimizer, micro_batches=micro)
+    return fields, named
+
+
+def suffix_spec(mesh: MeshSpec, zero: int = 0, optimizer: str = "sgd",
+                micro_batches: int = 0) -> str:
+    """Canonical mesh suffix (inverse of ``parse_suffix``); empty string
+    when every dimension is at its default."""
+    parts: List[str] = []
+    if not mesh.is_trivial:
+        parts.append(mesh.spec())
+    if zero:
+        parts.append(f"z{zero}")
+    if micro_batches:
+        parts.append(f"m{micro_batches}")
+    if optimizer != "sgd":
+        parts.append(optimizer)
+    return ".".join(parts)
+
+
+# ------------------------------------------------------------------ planning
+@dataclasses.dataclass
+class MeshPlan:
+    """The executable composition plan for one mesh:
+
+    - ``tensor_dims``: per (stacked) leaf — a flat list aligned with
+      ``jax.tree.leaves`` order — the dimension index sharded over the
+      tensor axis (``core/parallelism.py`` role rules), or None.
+    - ``local_example``: per-device block shapes (stage-sliced,
+      tensor-sliced) — the structure gradients/EF state take on a device.
+    - ``buckets``/``order``/``fused``: the data-axis fused-bucket plan and
+      issue order (same planner as the pure data-parallel engine).
+    - ``bucket_sizes``/``shard_sizes``: per-bucket flat length and padded
+      per-data-rank ZeRO shard length.
+    - ``micro``: pipeline micro-batches per step.
+    """
+    mesh: MeshSpec
+    staged: bool
+    tensor_dims: List[Optional[int]]    # flat, tree_leaves order
+    local_example: Any                  # pytree of np zeros (block shapes)
+    buckets: List[List[int]]
+    order: List[int]
+    fused: List[LayerCost]
+    bucket_sizes: List[int]
+    shard_sizes: List[int]
+    micro: int
+
+    @property
+    def n_local_params(self) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(self.local_example))
+
+
+def _local_block_shape(shape: Tuple[int, ...], staged: bool,
+                       mesh: MeshSpec, t_dim: Optional[int],
+                       name: str) -> Tuple[int, ...]:
+    """Per-device block shape of one (stacked) leaf: the leading layer
+    dim is divided over the stage axis (each stage device holds a
+    contiguous chunk of layers), the tensor role dim over the tensor
+    axis."""
+    if staged:
+        if not shape or shape[0] < mesh.stage or shape[0] % mesh.stage:
+            raise ValueError(
+                f"staged leaf {name!r} has {shape[0] if shape else 0} "
+                f"stacked layers; the stage axis ({mesh.stage}) must "
+                f"divide the layer count")
+        shape = (shape[0] // mesh.stage,) + shape[1:]
+    if mesh.tensor > 1:
+        if t_dim is None:
+            raise ValueError(
+                f"leaf {name!r} has no model-parallel dimension under the "
+                f"role rules of core/parallelism.py; a tensor axis of "
+                f"{mesh.tensor} needs every leaf to be shardable")
+        if shape[t_dim] % mesh.tensor:
+            raise ValueError(
+                f"leaf {name!r} dim {t_dim} ({shape[t_dim]}) not divisible "
+                f"by tensor axis {mesh.tensor}")
+        shape = tuple(n // mesh.tensor if i == t_dim else n
+                      for i, n in enumerate(shape))
+    return shape
+
+
+def plan_mesh(params, mesh: MeshSpec, *, staged: bool,
+              bucket_mb: float = 4.0, order: str = "tictac",
+              micro_batches: int = 0, back_s_per_byte: float = 2e-12,
+              seed: int = 0) -> MeshPlan:
+    """Build the MeshPlan for ``params`` (stacked per-stage leaves when
+    ``staged``).  Pure planning — no device state is touched."""
+    # imported here: train.data_parallel imports nothing from this package,
+    # so the shared bucket planner stays the single source of truth
+    from repro.train.data_parallel import _plan_buckets
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+
+    def leaf_tensor_dim(path, leaf):
+        ndim = np.ndim(leaf)
+        if staged:       # classify without the leading stacked-stage dim
+            td = model_axis_dim(path, ndim - 1)
+            return None if td is None else td + 1
+        return model_axis_dim(path, ndim)
+
+    t_dims = [leaf_tensor_dim(path, leaf) for path, leaf in flat]
+    if staged:
+        heads = {int(np.shape(leaf)[0]) if np.shape(leaf) else 0
+                 for _, leaf in flat}
+        if len(heads) != 1:
+            raise ValueError(
+                f"staged leaves disagree on the stacked layer count "
+                f"({sorted(heads)}); every leaf needs the same leading "
+                "layer dim")
+    locals_ = [np.zeros(_local_block_shape(tuple(np.shape(leaf)), staged,
+                                           mesh, td, jax.tree_util.keystr(p)),
+                        np.float32)
+               for (p, leaf), td in zip(flat, t_dims)]
+    treedef = jax.tree.structure(params)
+    local_example = jax.tree.unflatten(treedef, locals_)
+    buckets, order_idx, fused = _plan_buckets(
+        local_example, bucket_mb, order, back_s_per_byte, seed)
+    sizes = [int(x.size) for x in locals_]
+    bucket_sizes = [sum(sizes[i] for i in b) for b in buckets]
+    shard_sizes = [-(-n // mesh.data) for n in bucket_sizes]
+    micro = micro_batches or (2 * mesh.stage if mesh.stage > 1 else 1)
+    return MeshPlan(mesh=mesh, staged=staged, tensor_dims=t_dims,
+                    local_example=local_example, buckets=buckets,
+                    order=order_idx, fused=fused, bucket_sizes=bucket_sizes,
+                    shard_sizes=shard_sizes, micro=micro)

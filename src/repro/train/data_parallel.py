@@ -42,6 +42,7 @@ contract, though it accepts the extended config); construct engines via
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -58,7 +59,7 @@ from repro.core.compression import Compressor, EF_METHODS
 from repro.core.parameter_server import make_ps_step, sgd_update_fn
 from repro.core.sync import (ElasticWorkerSet, default_periods,
                              firing_schedule, warn_deprecated)
-from repro.elastic.backup import drop_set, participation_weights
+from repro.elastic.backup import participation_weights
 
 AXIS = "workers"
 
@@ -78,6 +79,9 @@ class DataParallelConfig:
     topology: str = "ring"           # key into TOPOLOGIES
     compressor: Compressor = Compressor("none")
     backup: int = 0                  # BSP backup workers: drop the k slowest
+    # measured straggler detection: per-worker step-time EMA replaces the
+    # scheduled ranking in the backup drop set (elastic/detector.py)
+    detect: bool = False
     bucket_mb: float = 4.0           # gradient bucket fusion size
     order: str = "tictac"            # "tictac" | "random" | "layer"
     link: LinkModel = LinkModel()
@@ -264,6 +268,7 @@ class DeviceEngine(ElasticWorkerSet):
         assert len(self.periods) == cfg.num_workers
         self.slowdowns: List[float] = [1.0] * cfg.num_workers
         self._dropped = 0
+        self._init_detector(cfg.detect, cfg.num_workers)
         self._step_fn = None
         self._wire_cell: List[int] = []
         self._async_fns = None
@@ -370,11 +375,22 @@ class DeviceEngine(ElasticWorkerSet):
         K = self.cfg.num_workers
         if self._step_fn is None:
             self._step_fn, self._wire_cell = self._build_step(st["params"])
-        # backup workers: drop the k slowest under the same effective
-        # schedule the simulator ranks with (elastic/backup.py)
-        drop = drop_set(self.periods, self.cfg.backup, self.slowdowns)
+        # backup workers: drop the k slowest — scheduled ranking, or the
+        # measured step-time EMA once detection warms up (the same shared
+        # backup_drop rule the simulator applies)
+        drop = self.backup_drop(self.cfg.backup)
         weights = participation_weights(K, drop)
-        per_worker = [batches(t, w) for w in range(K)]
+        if self.detector is not None:
+            # per-worker batch fetch is the only per-worker host work in
+            # the fused device step — measure it (a straggling input
+            # pipeline is the detectable straggler here)
+            per_worker = []
+            for w in range(K):
+                t0 = time.perf_counter()
+                per_worker.append(batches(t, w))
+                self.detector.observe(w, time.perf_counter() - t0)
+        else:
+            per_worker = [batches(t, w) for w in range(K)]
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_worker)
         st["rng"], *subs = jax.random.split(st["rng"], K + 1)
         params, ef, losses = self._step_fn(
@@ -557,6 +573,19 @@ class DeviceEngine(ElasticWorkerSet):
     def wire_bytes(self) -> int:
         return self._wire_total
 
+    def per_device_state_bytes(self, st) -> Dict[str, int]:
+        """Measured persistent bytes per device — comparable with the
+        hybrid engine's accounting (benchmarks/hybrid_bench.py).  Plain
+        SGD carries no optimizer state; params are replicated, EF
+        residuals are per-worker."""
+        K = self.cfg.num_workers
+        params = sum(np.asarray(x).nbytes
+                     for x in jax.tree.leaves(st["params"]))
+        ef = (sum(np.asarray(x).nbytes
+                  for x in jax.tree.leaves(st["ef"])) // K
+              if st.get("ef") is not None else 0)
+        return {"params": params, "opt": 0, "ef": ef, "total": params}
+
     # --------------------------------------------------- elastic interface
     # (set_slowdown / effective_periods / dropped_updates come from the
     # shared ElasticWorkerSet, so the schedule rule cannot diverge from
@@ -597,6 +626,8 @@ class DeviceEngine(ElasticWorkerSet):
         self.mesh = Mesh(np.array(self._devs[:new_workers]), (AXIS,))
         self.periods = periods
         self.slowdowns = [self.slowdowns[s] for s in slots] + [1.0] * grown
+        if self.detector is not None:
+            self.detector.reshard(slots, new_workers)
         self._step_fn, self._wire_cell = None, []
         self._async_fns = None
         if st.get("ef") is not None:
@@ -633,7 +664,9 @@ class DeviceEngine(ElasticWorkerSet):
         meta: Dict[str, Any] = dict(
             backend="device", mode=cfg.sync, num_workers=cfg.num_workers,
             wire=int(st["wire"]), periods=list(self.periods),
-            slowdowns=list(self.slowdowns), dropped=self._dropped)
+            slowdowns=list(self.slowdowns), dropped=self._dropped,
+            detector=(self.detector.state() if self.detector is not None
+                      else None))
         if cfg.sync in ("ssp", "asp"):
             arrays["pulled"] = st["pulled"]
             meta.update(pulled_ver=list(st["pulled_ver"]),
@@ -658,6 +691,8 @@ class DeviceEngine(ElasticWorkerSet):
         self.cfg = cfg = dataclasses.replace(cfg, periods=self.periods)
         self.slowdowns = [float(s) for s in meta["slowdowns"]]
         self._dropped = int(meta["dropped"])
+        if self.detector is not None:
+            self.detector.load_state(meta.get("detector"))
         st: Dict[str, Any] = dict(
             params=arrays["params"], ef=arrays["ef"],
             rng=jnp.asarray(arrays["rng"]), wire=int(meta["wire"]))

@@ -12,6 +12,17 @@ or, equivalently, from a spec string (the examples' ``--strategy`` flag):
 
     Strategy.parse("ssp:3/ps/onebit@8")
 
+The device topology is a further declarative dimension (docs/hybrid.md):
+a mesh suffix after the worker count shapes the devices into a
+data × tensor × stage mesh with optional ZeRO state sharding —
+
+    Strategy.parse("bsp/ring/onebit@8:d2.t2.s2")   # 3D hybrid mesh
+    Strategy.parse("bsp/ps/none@4:d4.z3.adamw")    # ZeRO-3 sharded AdamW
+
+Hybrid cells execute on the ``HybridEngine`` of ``repro.parallel``; a
+trivial mesh (``dK.t1.s1``, z0, sgd) is *exactly* the data-parallel
+device engine (same object, bitwise).
+
 Backends (the ``BACKENDS`` registry):
 
   sim     ``SimSyncEngine`` — the deterministic discrete-event simulation
@@ -46,6 +57,8 @@ import jax
 from repro.core.allreduce import TOPOLOGIES
 from repro.core.compression import EF_METHODS, METHODS, Compressor
 from repro.core.sync import SimSyncEngine, SyncConfig
+from repro.parallel.mesh_plan import (MeshSpec, OPTIMIZERS, parse_suffix,
+                                      suffix_spec)
 from repro.train.data_parallel import (ARCHS, DEVICE_SYNCS,
                                        DataParallelConfig, DeviceEngine)
 from repro.train.train_loop import train_loop
@@ -116,6 +129,14 @@ class Strategy:
     sma_mu: float = 0.1              # SMA correction strength
     density: float = _DENSITY_DEFAULT   # dgc density (compression as str)
     seed: int = 0
+    # hybrid mesh dimensions (docs/hybrid.md): None mesh = pure data
+    # parallelism at `workers`; a non-trivial mesh, a ZeRO level, or a
+    # stateful optimizer routes the cell to repro.parallel.HybridEngine
+    mesh: Optional[Union[str, MeshSpec]] = None
+    zero: int = 0                    # ZeRO optimizer-state level 0-3
+    optimizer: str = "sgd"           # sgd | adamw
+    micro_batches: int = 0           # pipeline micro-batches (0 = auto)
+    detect: bool = False             # measured straggler detection (bsp)
 
     def __post_init__(self):
         if self.sync not in SYNCS:
@@ -155,8 +176,60 @@ class Strategy:
             raise ValueError(
                 "pass density inside the Compressor instance, not as a "
                 "separate Strategy field")
+        if isinstance(self.mesh, str):
+            object.__setattr__(self, "mesh", MeshSpec.parse(self.mesh))
+        if self.mesh is not None and self.mesh.size != self.workers:
+            raise ValueError(
+                f"mesh {self.mesh.spec()} has {self.mesh.size} devices but "
+                f"workers={self.workers}")
+        if self.mesh is not None and self.mesh.is_trivial:
+            # dK.t1.s1 IS plain data parallelism — normalize so equal
+            # strategies compare equal and the canonical spec is minimal
+            object.__setattr__(self, "mesh", None)
+        if self.zero not in (0, 1, 2, 3):
+            raise ValueError(f"zero={self.zero} (ZeRO levels are 0..3)")
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(f"optimizer={self.optimizer!r} not in "
+                             f"{OPTIMIZERS}")
+        if self.micro_batches < 0:
+            raise ValueError("micro_batches must be >= 0")
+        if self.zero and self.arch != "ps":
+            # ZeRO *is* the sharded-state (parameter-server) architecture;
+            # a decentralized-allreduce ZeRO spec would be an oxymoron
+            raise ValueError("zero > 0 requires arch='ps' (ZeRO shards "
+                             "state through the reduce-scatter PS path)")
+        if self.is_hybrid:
+            if self.sync != "bsp":
+                raise ValueError(
+                    "hybrid meshes / ZeRO / adamw execute BSP only "
+                    "(asynchrony composes with the data axis, not the "
+                    "pipeline schedule)")
+            if self.backup:
+                raise ValueError("backup workers do not compose with "
+                                 "hybrid meshes yet")
+            if self.detect:
+                # the hybrid step has no backup-drop path to feed —
+                # accepting the flag would silently measure nothing
+                raise ValueError("straggler detection does not compose "
+                                 "with hybrid meshes yet")
+        if self.detect and self.sync != "bsp":
+            raise ValueError("straggler detection feeds the bsp backup "
+                             "drop set; use sync='bsp'")
 
     # ------------------------------------------------------------ derived
+    @property
+    def mesh_spec(self) -> MeshSpec:
+        """The effective mesh: the declared one, or pure data parallelism
+        over all workers."""
+        return self.mesh if self.mesh is not None else MeshSpec(self.workers)
+
+    @property
+    def is_hybrid(self) -> bool:
+        """True when the cell needs the hybrid engine: a non-trivial
+        (tensor/stage) mesh, ZeRO sharding, or a stateful optimizer."""
+        return ((self.mesh is not None and not self.mesh.is_trivial)
+                or self.zero > 0 or self.optimizer != "sgd")
+
     @property
     def compressor(self) -> Compressor:
         if isinstance(self.compression, Compressor):
@@ -169,6 +242,8 @@ class Strategy:
                             else "")
         if self.backup:
             sync = f"bsp+backup:{self.backup}"
+        if self.detect:
+            sync += "+detect"
         comp = self.compressor.method
         if comp == "dgc":
             comp += f":{self.compressor.density:g}"
@@ -177,19 +252,32 @@ class Strategy:
         arch = self.arch
         if arch == "allreduce" and self.topology != "ring":
             arch = self.topology
-        return f"{sync}/{arch}/{comp}@{self.workers}"
+        suffix = suffix_spec(self.mesh_spec, self.zero, self.optimizer,
+                             self.micro_batches)
+        suffix = f":{suffix}" if suffix else ""
+        return f"{sync}/{arch}/{comp}@{self.workers}{suffix}"
 
     @classmethod
     def parse(cls, spec: str, **defaults) -> "Strategy":
-        """Parse ``sync[:staleness]/arch/comp[:density]@workers`` — every
-        segment after ``sync`` optional, e.g. ``"bsp"``, ``"ssp:2/ps"``,
-        ``"bsp/allreduce/onebit@8"``, ``"asp/ps/dgc:0.05@4"``.  Keyword
-        arguments are defaults for fields the spec string does not name;
-        named segments always win."""
+        """Parse ``sync[:staleness]/arch/comp[:density]@workers[:mesh]`` —
+        every segment after ``sync`` optional, e.g. ``"bsp"``,
+        ``"ssp:2/ps"``, ``"bsp/allreduce/onebit@8"``,
+        ``"asp/ps/dgc:0.05@4"``, ``"bsp/ring/onebit@8:d2.t2.s2"``,
+        ``"bsp/ps/none@4:d4.z3.adamw"``.  Keyword arguments are defaults
+        for fields the spec string does not name; named segments always
+        win."""
         fields = dict(defaults)
         s = spec.strip()
         if "@" in s:
             s, w = s.rsplit("@", 1)
+            if ":" in w:
+                # the mesh suffix (docs/hybrid.md): d/t/s axes + ZeRO
+                # level + optimizer + micro-batches as dot tokens
+                w, suffix = w.split(":", 1)
+                suffix_fields, named = parse_suffix(suffix)
+                for key, was_named in named.items():
+                    if was_named:
+                        fields[key] = suffix_fields[key]
             fields["workers"] = int(w)
         parts = s.split("/") if s else [""]
         if not parts[0]:
@@ -198,6 +286,11 @@ class Strategy:
             raise ValueError(
                 f"bad strategy spec {spec!r}: want sync[/arch[/comp]][@N]")
         sync = parts[0]
+        if sync.endswith("+detect"):
+            # measured straggler detection: per-worker step-time EMA
+            # feeds the backup drop set (docs/elasticity.md)
+            fields["detect"] = True
+            sync = sync[: -len("+detect")]
         val = None
         if ":" in sync:
             sync, val = sync.split(":", 1)
@@ -241,6 +334,14 @@ class Strategy:
 
     # ------------------------------------------------------------ backends
     def resolve_backend(self, devices: Optional[Sequence] = None) -> str:
+        if self.is_hybrid:
+            # tensor/stage axes and sharded state have no simulation —
+            # the mesh IS the execution plan
+            if self.backend == "sim":
+                raise ValueError(
+                    "hybrid cells (mesh/zero/adamw) are device-only; the "
+                    "simulator has no tensor/stage axes")
+            return "device"
         if self.backend == "sim":
             return "sim"
         if self.backend == "device":
@@ -301,6 +402,8 @@ class Engine:
                  wire_bytes=self.inner.wire_bytes())
         if hasattr(self.inner, "dropped_updates"):
             m["dropped_updates"] = self.inner.dropped_updates()
+        if hasattr(self.inner, "extra_metrics"):
+            m.update(self.inner.extra_metrics())
         return m
 
     # --------------------------------------------------- elastic interface
@@ -326,33 +429,59 @@ class Engine:
         return params, events, mets["wire_bytes"]
 
 
+def _as_grad_fn(model_or_grad_fn):
+    """A StagedModel handed to a non-hybrid backend runs as its stacked
+    (unpipelined, unsharded) reference — the same trajectory the hybrid
+    engine is validated against."""
+    from repro.parallel.staged import is_staged_model, stacked_grad_fn
+    if is_staged_model(model_or_grad_fn):
+        return stacked_grad_fn(model_or_grad_fn)
+    return model_or_grad_fn
+
+
 class SimBackend(Engine):
     """Wraps the deterministic event simulation (``SimSyncEngine``)."""
 
     backend = "sim"
 
     def _make_inner(self, s: Strategy, grad_fn, devices):
+        grad_fn = _as_grad_fn(grad_fn)
         return SimSyncEngine(
             SyncConfig(mode=s.sync, num_workers=s.workers,
                        staleness=s.staleness, lr=s.lr, sma_mu=s.sma_mu,
                        periods=s.periods, compressor=s.compressor,
-                       backup=s.backup, seed=s.seed),
+                       backup=s.backup, detect=s.detect, seed=s.seed),
             grad_fn)
 
 
 class DeviceBackend(Engine):
-    """Wraps the device-sharded engine (``DeviceEngine``)."""
+    """Wraps the device-sharded engines: ``DeviceEngine`` for pure data
+    parallelism, ``repro.parallel.HybridEngine`` for hybrid cells (a
+    non-trivial mesh, ZeRO level, or stateful optimizer).  A trivial
+    ``dK.t1.s1`` mesh is by construction the same ``DeviceEngine`` object
+    the mesh-less spec builds — bitwise-identical trajectories."""
 
     backend = "device"
 
     def _make_inner(self, s: Strategy, grad_fn, devices):
+        if s.is_hybrid:
+            from repro.parallel.engine import HybridConfig, HybridEngine
+            return HybridEngine(
+                HybridConfig(
+                    mesh=s.mesh_spec, lr=s.lr, compressor=s.compressor,
+                    zero=s.zero, optimizer=s.optimizer,
+                    topology=s.topology, bucket_mb=s.bucket_mb,
+                    order=s.order, micro_batches=s.micro_batches,
+                    seed=s.seed),
+                grad_fn, devices)
+        grad_fn = _as_grad_fn(grad_fn)
         return DeviceEngine(
             DataParallelConfig(
                 num_workers=s.workers, lr=s.lr, sync=s.sync, arch=s.arch,
                 staleness=s.staleness, periods=s.periods,
                 topology=s.topology, compressor=s.compressor,
                 backup=s.backup, bucket_mb=s.bucket_mb, order=s.order,
-                seed=s.seed),
+                detect=s.detect, seed=s.seed),
             grad_fn, devices)
 
 

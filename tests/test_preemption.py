@@ -1,0 +1,282 @@
+"""Preemption and straggler-detection satellites (ISSUE 4).
+
+SIGTERM-driven snapshot: a training subprocess receives SIGTERM mid-run,
+commits a checkpoint, and exits 0; a ``resume=True`` follow-up restores
+it and finishes the job.  Measured straggler detection: a worker whose
+*data source* is genuinely slow gets detected by the step-time EMA and
+dropped by ``bsp+backup:k`` — cross-validated against the equivalent
+plan-scheduled ``slow:wIxF@t`` run on both backends.
+"""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.elastic import StepTimeEMA, latest_checkpoint
+from repro.elastic.recovery import fit_elastic
+from repro.train import Strategy, Trainer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+
+
+def make_batches(slow_worker=None, delay=0.03):
+    def batches(t, w):
+        if slow_worker is not None and w == slow_worker:
+            time.sleep(delay)
+        k = jax.random.fold_in(KEY, t * 100 + w)
+        X = jax.random.normal(k, (16, 8))
+        return {"X": X, "y": X @ W_TRUE}
+    return batches
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+
+
+P0 = {"W": jnp.zeros((8, 1))}
+
+
+# --------------------------------------------------------- detector unit
+def test_step_time_ema_ranking_and_reshard():
+    d = StepTimeEMA(3, alpha=0.5, warmup=2)
+    assert not d.ready
+    for _ in range(2):
+        d.observe(0, 0.01)
+        d.observe(1, 0.10)
+        d.observe(2, 0.02)
+    assert d.ready
+    assert d.drop_set(1) == frozenset({1})
+    assert np.argmax(d.factors()) == 1
+
+
+def test_step_time_ema_discards_first_sample():
+    """A worker's first measurement absorbs one-time costs (JIT compile
+    of the shared step) — it must not rank a healthy worker slowest."""
+    d = StepTimeEMA(2, warmup=2)
+    d.observe(0, 5.0)            # compile hits whoever runs first
+    d.observe(1, 0.01)
+    d.observe(0, 0.01)
+    d.observe(1, 0.50)           # the real straggler
+    assert d.ready
+    assert d.drop_set(1) == frozenset({1})
+
+
+def test_step_time_ema_reshard_and_state():
+    d = StepTimeEMA(3, alpha=0.5, warmup=2)
+    for _ in range(2):
+        d.observe(0, 0.01)
+        d.observe(1, 0.10)
+        d.observe(2, 0.02)
+    d.reshard([0, 2], 3)                 # worker 1 leaves, a new slot joins
+    assert not d.ready                   # the grown slot must re-warm
+    assert d.ema[2] is None
+    st = d.state()
+    d2 = StepTimeEMA(3)
+    d2.load_state(st)
+    assert d2.ema == d.ema and d2.count == d.count
+
+
+# ------------------------------------------- measured vs scheduled (sim)
+def test_sim_detection_cross_validates_scheduled_plan():
+    # scheduled: slow:w1x10@0 makes worker 1 the ranked straggler
+    _, h_sched, m = Trainer(
+        Strategy(sync="bsp", backup=1, workers=4, lr=0.05, backend="sim")
+    ).fit(grad_fn, P0, make_batches(), 6, plan="slow:w1x10@0")
+    assert all(h["dropped"] == [1] for h in h_sched)
+
+    # measured: worker 1's data source is *actually* slow; after the
+    # 2-step warmup the EMA ranking takes over from the schedule
+    eng = Strategy(sync="bsp", backup=1, workers=4, lr=0.05, detect=True,
+                   backend="sim").build(grad_fn)
+    _, h_det, _ = eng.run(P0, make_batches(slow_worker=1), 6)
+    assert [h["dropped"] for h in h_det][:2] == [[3], [3]]   # warmup rank
+    assert all(h["dropped"] == [1] for h in h_det[2:])
+    # post-warmup the measured drop set equals the scheduled one, so the
+    # loss trajectories coincide too (same participants, same batches)
+    assert [h["dropped"] for h in h_det[2:]] == \
+        [h["dropped"] for h in h_sched[2:]]
+    assert np.argmax(eng.inner.detector.factors()) == 1
+    assert eng.metrics()["dropped_updates"] == 6
+
+
+def test_detect_spec_grammar():
+    s = Strategy.parse("bsp+backup:1+detect/ring/none@4")
+    assert (s.backup, s.detect) == (1, True)
+    assert Strategy.parse(s.spec()) == s
+    assert Strategy.parse("bsp+detect").detect
+    with pytest.raises(ValueError):
+        Strategy(sync="ssp", detect=True)
+
+
+# ------------------------------------------ measured detection on device
+SCRIPT_DEVICE_DETECT = r"""
+import time
+import numpy as np, jax, jax.numpy as jnp
+from repro.train import Strategy
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+def batches(t, w):
+    if w == 0:
+        time.sleep(0.05)
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+P0 = {"W": jnp.zeros((8, 1))}
+
+eng = Strategy.parse("bsp+backup:1+detect/ring/none@4", lr=0.05,
+                     bucket_mb=1e-4, backend="device").build(grad_fn)
+_, hist, _ = eng.run(P0, batches, 6)
+drops = [h["dropped"] for h in hist]
+assert drops[:2] == [[3], [3]], drops          # warmup: scheduled ranking
+assert all(d == [0] for d in drops[2:]), drops  # measured straggler w0
+# the measured drop set matches what a slow:w0 plan would schedule
+sched = Strategy.parse("bsp+backup:1/ring/none@4", lr=0.05, bucket_mb=1e-4,
+                       backend="device").build(grad_fn)
+sched.set_slowdown(0, 10.0)
+_, h2, _ = sched.run(P0, batches, 4)
+assert all(h["dropped"] == [0] for h in h2)
+print("DEVICE-DETECT-OK")
+"""
+
+
+def test_device_detection_4dev(multidevice):
+    out = multidevice(SCRIPT_DEVICE_DETECT, 4)
+    assert "DEVICE-DETECT-OK" in out
+
+
+# --------------------------------------------------- SIGTERM preemption
+CHILD = r"""
+import sys, time
+import jax, jax.numpy as jnp
+from repro.train import Strategy, Trainer
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+def batches(t, w):
+    time.sleep(0.15)
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+P0 = {"W": jnp.zeros((8, 1))}
+p, h, m = Trainer(Strategy(sync="bsp", workers=2, lr=0.05,
+                           backend="sim")).fit(
+    grad_fn, P0, batches, 200, plan="", checkpoint_dir=sys.argv[1],
+    checkpoint_every=1)
+print("PREEMPTED" if m["preempted"] else "FINISHED",
+      m["preempt_step"], flush=True)
+"""
+
+
+def test_sigterm_snapshot_and_resume(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen([sys.executable, "-c", CHILD, str(tmp_path)],
+                            env=env, stdout=subprocess.PIPE, text=True)
+    # wait until the child has committed at least one cadence checkpoint
+    deadline = time.time() + 60
+    while latest_checkpoint(str(tmp_path)) is None:
+        assert time.time() < deadline, "child never checkpointed"
+        assert proc.poll() is None, "child died early"
+        time.sleep(0.5)
+    time.sleep(2)
+    proc.send_signal(signal.SIGTERM)
+    out, _ = proc.communicate(timeout=120)
+    assert proc.returncode == 0, out
+    assert "PREEMPTED" in out
+
+    ck = latest_checkpoint(str(tmp_path))
+    assert ck is not None
+    preempt_step = int(ck.rsplit("_", 1)[1])
+    assert preempt_step > 0
+
+    # resume picks up the preemption snapshot and runs to completion
+    p, h, m = fit_elastic(
+        Strategy(sync="bsp", workers=2, lr=0.05, backend="sim"), grad_fn,
+        P0, make_batches(), preempt_step + 5, "",
+        checkpoint_dir=str(tmp_path), resume=True)
+    assert m["resumed_from"] == preempt_step
+    assert not m["preempted"]
+    assert len(h) == 5                   # only the remaining steps ran
+    assert all(np.isfinite(x["loss"]) for x in h)
+
+
+def test_resume_without_checkpoint_starts_fresh(tmp_path):
+    p, h, m = fit_elastic(
+        Strategy(sync="bsp", workers=2, lr=0.05, backend="sim"), grad_fn,
+        P0, make_batches(), 4, "", checkpoint_dir=str(tmp_path),
+        resume=True)
+    assert m["resumed_from"] is None and len(h) == 4
+
+
+def test_resume_does_not_refire_consumed_events(tmp_path):
+    """The crash at step 6 rolls back to the step-4 checkpoint, so the
+    newest snapshot a resumed incarnation sees is *earlier* than the
+    crash it already consumed — the consumed record in the checkpoint
+    (not the resume step) must prevent the crash firing twice."""
+    strat = Strategy(sync="bsp", workers=4, lr=0.05, backend="sim")
+    p, h, m = fit_elastic(strat, grad_fn, P0, make_batches(), 8,
+                          "crash:w1@6", checkpoint_dir=str(tmp_path),
+                          checkpoint_every=2)
+    assert len(m["recoveries"]) == 1 and m["final_workers"] == 3
+    # a new incarnation resumes the same dir with the same plan: the
+    # crash must NOT fire again (it would shrink to 2 workers)
+    p2, h2, m2 = fit_elastic(strat, grad_fn, P0, make_batches(), 10,
+                             "crash:w1@6", checkpoint_dir=str(tmp_path),
+                             checkpoint_every=2, resume=True)
+    assert m2["resumed_from"] is not None
+    assert m2["recoveries"] == []
+    assert m2["final_workers"] == 3
+
+
+def test_resume_then_rollback_does_not_duplicate_history(tmp_path):
+    """A rollback after resume must not truncate this incarnation's
+    history with the previous incarnation's history_len frame — the
+    restored checkpoint is re-committed at resume with history_len=0."""
+    strat = Strategy(sync="bsp", workers=4, lr=0.05, backend="sim")
+    # incarnation 1: plain run leaves cadence checkpoints (latest at 6)
+    fit_elastic(strat, grad_fn, P0, make_batches(), 7, "",
+                checkpoint_dir=str(tmp_path), checkpoint_every=3)
+    # incarnation 2 resumes at 6 and crashes at 8: rollback must land on
+    # the re-committed step-6 frame and yield exactly one event per step
+    p, h, m = fit_elastic(strat, grad_fn, P0, make_batches(), 10,
+                          "crash:w1@8", checkpoint_dir=str(tmp_path),
+                          checkpoint_every=100, resume=True)
+    assert m["resumed_from"] == 6
+    (r,) = m["recoveries"]
+    assert r["restored_step"] == 6
+    assert [e["step"] for e in h] == list(range(6, 10))   # no duplicates
+
+
+def test_plan_run_consumed_record_roundtrip():
+    from repro.elastic import EventPlan
+    run = EventPlan.parse("slow:w0x2@3,crash:w1@5").start()
+    run.take_one(5)
+    assert run.consumed_specs() == ["slow:w0x2@3"]
+    fresh = EventPlan.parse("slow:w0x2@3,crash:w1@5").start()
+    fresh.mark_consumed(run.consumed_specs())
+    assert [e.spec() for e in fresh.pending] == ["crash:w1@5"]
+    # unknown specs are ignored (a plan may change between incarnations)
+    fresh.mark_consumed(["resize:9@99"])
+    assert len(fresh.pending) == 1
