@@ -8,7 +8,7 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench strategies elastic hybrid
+.PHONY: smoke tier1 bench strategies elastic hybrid comm
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -37,10 +37,17 @@ elastic:
 hybrid:
 	$(PYTEST) $(SMOKE_TIMEOUT) python tools/hybrid_smoke.py
 
-# Full tier-1 verify (ROADMAP.md): the strategy-matrix, elasticity, and
-# hybrid-mesh gates plus everything in tests/, including the
-# 8-virtual-device subprocess tests and end-to-end training compositions.
-tier1: strategies elastic hybrid
+# Communication-plane gate: every topology x codec cell with encoded
+# payloads inside the schedule (wire=measured) on 4 virtual devices,
+# with the measured-vs-modeled byte assertion (see docs/comm.md).
+comm:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/comm_smoke.py
+
+# Full tier-1 verify (ROADMAP.md): the strategy-matrix, elasticity,
+# hybrid-mesh, and comm-plane gates plus everything in tests/, including
+# the 8-virtual-device subprocess tests and end-to-end training
+# compositions.
+tier1: strategies elastic hybrid comm
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

@@ -1,0 +1,97 @@
+"""Communication-plane benchmark: compressed payloads inside the
+collective schedule (docs/comm.md).
+
+One JSON row per (topology × codec) cell on 4 virtual host devices,
+training the tiny regression problem for a few BSP steps under both wire
+modes:
+
+  * ``modeled_wire`` — the compressor's analytic per-push accounting
+    (what the simulator reports; the ``wire="modeled"`` increment);
+  * ``measured_wire`` — bytes counted from the encoded planes actually
+    exchanged inside the schedule (``wire="measured"``), plus the static
+    per-worker/step tx and its ratio to the fp32 schedule;
+  * ``step_us`` — wall time per measured-mode step (jit-compiled).
+
+  PYTHONPATH=src python -m benchmarks.comm_plane_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit_json
+
+TOPOLOGIES = ("ring", "tree", "butterfly", "fully_connected")
+CODECS = ("none", "onebit", "terngrad", "qsgd", "dgc")
+
+_CHILD = r"""
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.train import Strategy
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (64, 1))
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 64))
+    return {"X": X, "y": X @ W_TRUE}
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+P0 = {"W": jnp.zeros((64, 1)), "b": jnp.zeros((4096,))}
+
+rows = []
+for topology in %(topologies)s:
+    for codec in %(codecs)s:
+        comp = "dgc:0.1" if codec == "dgc" else codec
+        spec = f"bsp/{topology}/{comp}@4"
+        row = {"bench": "comm_plane", "spec": spec,
+               "topology": topology, "codec": codec}
+        for wire in ("modeled", "measured"):
+            eng = Strategy.parse(spec, lr=0.05, backend="device",
+                                 wire=wire).build(grad_fn)
+            st = eng.init(P0)
+            st, _ = eng.step(st, make_batch, 0)      # compile
+            t0 = time.perf_counter()
+            for t in range(1, 4):
+                st, ev = eng.step(st, make_batch, t)
+            dt = (time.perf_counter() - t0) / 3 * 1e6
+            m = eng.metrics()
+            row[f"{wire}_wire"] = st["wire"]
+            if wire == "measured":
+                row["step_us"] = round(dt, 1)
+                row["tx_bytes_per_worker_step"] = m["measured_step_tx_bytes"]
+                row["fp32_tx_bytes_per_worker_step"] = m["fp32_step_tx_bytes"]
+                row["tx_ratio_vs_fp32"] = round(
+                    m["measured_step_tx_bytes"] / m["fp32_step_tx_bytes"], 4)
+                row["loss_final"] = float(ev[-1]["loss"])
+        rows.append(row)
+print("ROWS " + json.dumps(rows))
+"""
+
+
+def main() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    child = _CHILD % {"topologies": repr(list(TOPOLOGIES)),
+                      "codecs": repr(list(CODECS))}
+    res = subprocess.run([sys.executable, "-c", child], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        sys.stderr.write(res.stderr[-2000:])
+        raise RuntimeError("comm_plane_bench child failed")
+    for line in res.stdout.splitlines():
+        if line.startswith("ROWS "):
+            emit_json(json.loads(line[5:]))
+            return
+    raise RuntimeError("comm_plane_bench child produced no rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ BENCHES = [
     ("architecture", "benchmarks.architecture_bench"),  # §3.3.1(1) vs (2)
     ("federated", "benchmarks.federated_bench"),        # §3.3.1(3)
     ("comm_schedule", "benchmarks.comm_schedule_bench"),  # §3.3.3(3)
+    ("comm_plane", "benchmarks.comm_plane_bench"),  # codec-in-schedule
     ("data_parallel", "benchmarks.data_parallel_bench"),  # §3.3 executable
     ("hybrid", "benchmarks.hybrid_bench"),              # §3.2 mesh x ZeRO
     ("scheduler", "benchmarks.scheduler_bench"),        # §3.4.2

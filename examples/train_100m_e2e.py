@@ -185,12 +185,19 @@ def main():
                          " engine + elastic trainer)")
     ap.add_argument("--checkpoint-every", type=int, default=10,
                     help="elastic snapshot cadence (global steps)")
+    ap.add_argument("--wire", choices=("modeled", "measured"),
+                    default="modeled",
+                    help="wire accounting / exchange mode (docs/comm.md):"
+                         " 'measured' moves the encoded payloads inside"
+                         " the collective schedule and counts the planes"
+                         " actually exchanged (device cells only)")
     ap.add_argument("--out", default="results/train_100m")
     args = ap.parse_args()
     # workers default must agree with the pre-jax re-exec hook, which
     # reads only the "@N" suffix (no "@N" -> 1 worker, not Strategy's 4)
     strat = Strategy.parse(args.strategy,
-                           workers=_spec_workers(args.strategy))
+                           workers=_spec_workers(args.strategy),
+                           wire=args.wire)
 
     # ~100M-param member of the tinyllama (llama2) family
     cfg = dataclasses.replace(
@@ -212,7 +219,9 @@ def main():
                                                  batches, args)
         trainer_used, lr_used = "strategy-engine-elastic", args.engine_lr
     elif strat.sync == "bsp" and strat.arch == "allreduce" \
-            and not strat.is_hybrid:
+            and not strat.is_hybrid and strat.wire == "modeled":
+        # measured-wire cells route through the Strategy engine below —
+        # the in-schedule codec exchange lives in the engines
         params, hist = _fit_with_optimizer(strat, model, params, batches,
                                            args)
         trainer_used, lr_used = "adamw+cosine", args.lr

@@ -11,9 +11,20 @@ mid-save can never leave a torn checkpoint for recovery to load.  The
 manifest carries an optional ``extra`` JSON blob (``read_manifest``) —
 the elastic trainer stores engine bookkeeping (worker count, tick/update
 counters) there next to the array state.
-"""
+
+Incremental saves: pass ``incremental_from=<previous checkpoint dir>``
+and every shard whose leaf composition AND content hashes are unchanged
+since that checkpoint is *hard-linked* from it instead of re-serialized
+(falling back to a copy on filesystems without links).  The manifest
+records per-leaf sha256 content hashes (``hash``) and the count of
+linked shards (``linked_shards``); restores are byte-for-byte identical
+either way, and atomicity is unchanged — links are staged into the same
+temp directory.  The elastic trainer uses this for periodic cadence
+snapshots, keeping crash/preemption commits full (docs/comm.md §
+snapshots)."""
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -29,24 +40,73 @@ def _leaf_paths(tree):
                      for k in path) for path, _ in flat]
 
 
+def _leaf_hash(arr: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _prev_shard_map(prev_dir: Optional[str]) -> Dict[int, List[dict]]:
+    """shard index -> ordered leaf records of the previous manifest, or
+    {} when there is no usable previous checkpoint."""
+    if not prev_dir or not is_valid_checkpoint(prev_dir):
+        return {}
+    by_shard: Dict[int, List[dict]] = {}
+    for rec in read_manifest(prev_dir)["leaves"]:
+        by_shard.setdefault(rec["shard"], []).append(rec)
+    return by_shard
+
+
+def _link_or_copy(src: str, dst: str) -> None:
+    try:
+        os.link(src, dst)
+    except OSError:
+        shutil.copy2(src, dst)
+
+
 def _write_checkpoint(path: str, tree, step: int, shard_bytes: int,
-                      extra: Optional[Dict]) -> Dict:
+                      extra: Optional[Dict],
+                      prev_dir: Optional[str] = None,
+                      hash_leaves: bool = False) -> Dict:
     os.makedirs(path, exist_ok=True)
     leaves = jax.tree.leaves(tree)
     names = _leaf_paths(tree)
-    manifest: Dict[str, Any] = {"step": step, "leaves": [], "shards": 0}
+    prev_shards = _prev_shard_map(prev_dir)
+    manifest: Dict[str, Any] = {"step": step, "leaves": [], "shards": 0,
+                                "linked_shards": 0}
     if extra is not None:
         manifest["extra"] = extra
     shard: Dict[str, np.ndarray] = {}
+    shard_recs: List[dict] = []
     shard_size = 0
     shard_idx = 0
 
     def flush():
-        nonlocal shard, shard_size, shard_idx
-        if shard:
-            np.savez(os.path.join(path, f"shard_{shard_idx}.npz"), **shard)
-            shard_idx += 1
-            shard, shard_size = {}, 0
+        nonlocal shard, shard_recs, shard_size, shard_idx
+        if not shard:
+            return
+        # hash-skip: when this shard's composition (keys, shapes, dtypes,
+        # content hashes) matches the previous checkpoint's shard of the
+        # same index, link the old file instead of re-serializing it
+        prev = prev_shards.get(shard_idx)
+        same = (prev is not None and len(prev) == len(shard_recs)
+                and all(p.get("hash") and r.get("hash")
+                        and p["key"] == r["key"]
+                        and p["hash"] == r["hash"]
+                        and p["shape"] == r["shape"]
+                        and p["dtype"] == r["dtype"]
+                        for p, r in zip(prev, shard_recs)))
+        fname = f"shard_{shard_idx}.npz"
+        if same:
+            _link_or_copy(os.path.join(prev_dir, fname),
+                          os.path.join(path, fname))
+            manifest["linked_shards"] += 1
+        else:
+            np.savez(os.path.join(path, fname), **shard)
+        shard_idx += 1
+        shard, shard_recs, shard_size = {}, [], 0
 
     for name, leaf in zip(names, leaves):
         arr = np.asarray(leaf)
@@ -55,10 +115,12 @@ def _write_checkpoint(path: str, tree, step: int, shard_bytes: int,
             flush()
         shard[key] = arr
         shard_size += arr.nbytes
-        manifest["leaves"].append({"name": name, "key": key,
-                                   "shard": shard_idx,
-                                   "shape": list(arr.shape),
-                                   "dtype": str(arr.dtype)})
+        rec = {"name": name, "key": key, "shard": shard_idx,
+               "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        if hash_leaves:
+            rec["hash"] = _leaf_hash(arr)
+        shard_recs.append(rec)
+        manifest["leaves"].append(rec)
     flush()
     manifest["shards"] = shard_idx
     # manifest last: its presence is the per-directory commit marker
@@ -69,7 +131,9 @@ def _write_checkpoint(path: str, tree, step: int, shard_bytes: int,
 
 def save_checkpoint(path: str, tree, step: int = 0,
                     shard_bytes: int = 512 * 1024 * 1024,
-                    extra: Optional[Dict] = None) -> Dict:
+                    extra: Optional[Dict] = None,
+                    incremental_from: Optional[str] = None,
+                    hash_leaves: Optional[bool] = None) -> Dict:
     """Atomically write ``tree`` to the checkpoint directory ``path``.
 
     All files are staged into ``<path>.tmp.<pid>`` and swapped in with one
@@ -77,16 +141,33 @@ def save_checkpoint(path: str, tree, step: int = 0,
     checkpoint, or the complete new one, never a torn mix.  When
     overwriting, the existing checkpoint is renamed aside (not deleted)
     before the swap, so even a crash mid-swap leaves the old data
-    recoverable at ``<path>.old.<pid>``."""
+    recoverable at ``<path>.old.<pid>`` (a base being overwritten in
+    place stays linkable: renames preserve the inodes the staged links
+    point at).
+
+    ``incremental_from`` names a previously-committed checkpoint whose
+    unchanged shards are hard-linked instead of rewritten (see the module
+    docstring); restores are bitwise-identical either way.
+    ``hash_leaves`` opts a snapshot into per-leaf content hashes so a
+    *later* save can link against it — it defaults to on exactly when
+    ``incremental_from`` is given; pass ``hash_leaves=True`` on full
+    saves that should serve as future incremental bases (the elastic
+    trainer does), and leave plain saves unhashed (no sha256 cost)."""
     path = os.path.abspath(path)
     parent = os.path.dirname(path)
     if parent:
         os.makedirs(parent, exist_ok=True)
+    if incremental_from is not None:
+        incremental_from = os.path.abspath(incremental_from)
+    if hash_leaves is None:
+        hash_leaves = incremental_from is not None
     tmp = f"{path}.tmp.{os.getpid()}"
     old = f"{path}.old.{os.getpid()}"
     shutil.rmtree(tmp, ignore_errors=True)
     try:
-        manifest = _write_checkpoint(tmp, tree, step, shard_bytes, extra)
+        manifest = _write_checkpoint(tmp, tree, step, shard_bytes, extra,
+                                     prev_dir=incremental_from,
+                                     hash_leaves=hash_leaves)
         if os.path.isdir(path):
             shutil.rmtree(old, ignore_errors=True)
             os.rename(path, old)

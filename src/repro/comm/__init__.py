@@ -1,0 +1,32 @@
+"""The unified communication plane (survey §3.3.1–§3.3.3 co-design).
+
+One layer owns everything a gradient exchange needs:
+
+  ``codecs``     per-segment wire codecs — encode a flat fp32 segment into
+                 fixed-shape *planes* (bit-packed sign words, quantized
+                 bytes, side information) that travel through collective
+                 permutes, and decode them back.
+  ``transport``  topology schedule *generators* — ring / tree / butterfly /
+                 fully-connected schedules whose reduce-scatter and
+                 all-gather steps carry encoded planes (encode → ppermute
+                 the planes → decode-accumulate), with per-worker error
+                 feedback for the lossy hops.
+  ``plan``       ``CommPlan`` — the bucket fusion + TicTac issue order +
+                 codec + topology + wire-accounting plan every
+                 gradient-exchange call site executes (``DeviceEngine``,
+                 the hybrid mesh data axis, and the ZeRO z1–z3 paths).
+
+See docs/comm.md for the lifecycle and the modeled-vs-measured wire
+accounting semantics.
+"""
+from repro.comm.codecs import SegmentCodec, codec_for, make_codec
+from repro.comm.plan import CommPlan, plan_buckets
+from repro.comm.transport import (SCHEDULES, fp32_schedule_bytes,
+                                  model_error_factor, schedule_tx_bytes)
+
+__all__ = [
+    "SegmentCodec", "codec_for", "make_codec",
+    "CommPlan", "plan_buckets",
+    "SCHEDULES", "fp32_schedule_bytes", "model_error_factor",
+    "schedule_tx_bytes",
+]

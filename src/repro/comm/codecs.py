@@ -1,0 +1,270 @@
+"""Segment codecs: the on-the-wire encodings that travel *inside* the
+collective schedules of ``repro.comm.transport``.
+
+A codec maps a flat fp32 segment (one ring chunk, one tree payload) to a
+pytree of fixed-shape arrays — the *planes* — and back:
+
+    planes = codec.encode(seg, key)     # seg: [L] f32, any L
+    seg'   = codec.decode(planes)[:L]   # decode returns the row-padded
+                                        # length; schedules slice to L
+
+Planes are what ``lax.ppermute`` / ``lax.all_gather`` actually move, so
+the wire format is physical where jnp allows it: onebit signs are packed
+32 per uint32 word (``repro.kernels.onebit.pack_bits``), terngrad digits
+16 per word.  Segments are padded to whole ``LANE``-wide rows internally;
+all data-dependent statistics (dgc's quantile threshold, terngrad's
+clip/scale, onebit's bin means) are computed on the *unpadded* elements
+so pad zeros cannot bias them — the same fix ``core/compression.py``
+applies to the per-leaf roundtrip.
+
+``static_tx_bytes(L)`` is the host-side byte count of one encoded
+segment, counted over the *unpadded* payload (pad rows carry no
+information — a real wire format would not ship them; the row side
+information is still charged per padded row) — for ``dgc`` it covers only the shape-static part (the packed
+1-bit remainder plane); the value/index pairs of the sparse plane are
+counted per transmission from the traced ``sent_elems`` (8 bytes each:
+4 B value + 4 B index), which is how the measured accounting follows the
+threshold's step-to-step payload changes.
+
+The quantization math matches ``core/compression.py``'s per-worker
+roundtrip (same kernel oracles, same two-bin Seide reconstruction), but
+applied per *segment* rather than per parameter leaf — a reduce-scatter
+hop quantizes the partial sum it forwards, and the hop's error lands in
+the sender's error-feedback residual (see ``transport``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressor
+from repro.kernels import onebit as K1
+
+LANE = 256          # encode rows are [ceil(L / LANE), LANE]
+
+
+def _pad_rows(seg):
+    """[L] -> ([R, LANE] rows, valid mask or None, L)."""
+    L = seg.shape[0]
+    pad = (-L) % LANE
+    x = jnp.pad(seg.astype(jnp.float32), (0, pad)).reshape(-1, LANE)
+    valid = ((jnp.arange(L + pad) < L).reshape(-1, LANE) if pad else None)
+    return x, valid, L
+
+
+def _rows_of(length: int) -> int:
+    return -(-length // LANE)
+
+
+def _two_bin_means(signs, c, valid=None):
+    """Per-row positive/negative bin means of ``c`` under the transmitted
+    sign plane — the 8 B/row side information of the Seide wire format."""
+    pos = signs > 0
+    neg = ~pos
+    if valid is not None:
+        pos = pos & valid
+        neg = neg & valid
+    npos = jnp.maximum(jnp.sum(pos, axis=-1, keepdims=True), 1)
+    nneg = jnp.maximum(jnp.sum(neg, axis=-1, keepdims=True), 1)
+    sp = jnp.sum(jnp.where(pos, c, 0.0), axis=-1, keepdims=True) / npos
+    sn = jnp.sum(jnp.where(neg, -c, 0.0), axis=-1, keepdims=True) / nneg
+    return sp, sn
+
+
+class SegmentCodec:
+    """Stateless segment encoder/decoder.  ``exact`` codecs (``none``)
+    round-trip bit-identically, so the transport runs the legacy
+    full-precision schedule for them."""
+
+    name: str = "?"
+    exact: bool = False
+    lossy_ef: bool = False      # hop errors belong in an EF residual
+
+    def encode(self, seg, key=None) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def decode(self, planes: Dict[str, Any]):
+        raise NotImplementedError
+
+    def static_tx_bytes(self, length: int) -> int:
+        """Shape-static wire bytes of one encoded length-``length``
+        segment (excluding dgc's data-dependent value/index pairs)."""
+        raise NotImplementedError
+
+    def sent_elems(self, planes: Dict[str, Any]):
+        """Traced count of data-dependent value/index pairs in ``planes``
+        (0 for every shape-static codec)."""
+        return jnp.zeros((), jnp.int32)
+
+
+class NoneCodec(SegmentCodec):
+    name = "none"
+    exact = True
+
+    def encode(self, seg, key=None):
+        return {"x": seg}
+
+    def decode(self, planes):
+        return planes["x"]
+
+    def static_tx_bytes(self, length: int) -> int:
+        return 4 * length
+
+
+class OnebitCodec(SegmentCodec):
+    """1-bit signs (packed 32/word) + per-row two-bin means."""
+    name = "onebit"
+    lossy_ef = True
+
+    def encode(self, seg, key=None):
+        c, valid, _ = _pad_rows(seg)
+        signs = jnp.where(c >= 0, jnp.int8(1), jnp.int8(-1))
+        sp, sn = _two_bin_means(signs, c, valid)
+        return {"words": K1.pack_bits(signs), "sp": sp, "sn": sn}
+
+    def decode(self, planes):
+        signs = K1.unpack_bits(planes["words"], LANE)
+        return jnp.where(signs > 0, planes["sp"], -planes["sn"]).reshape(-1)
+
+    def static_tx_bytes(self, length: int) -> int:
+        return -(-length // 8) + 8 * _rows_of(length)
+
+
+class TerngradCodec(SegmentCodec):
+    """Stochastic ternary digits packed 16 per uint32 word + one scale."""
+    name = "terngrad"
+
+    def __init__(self, clip_sigma: float = 2.5):
+        self.clip_sigma = clip_sigma
+
+    def encode(self, seg, key=None):
+        g0 = seg.astype(jnp.float32)             # stats on unpadded data
+        if self.clip_sigma:
+            sigma = jnp.std(g0)
+            g0 = jnp.clip(g0, -self.clip_sigma * sigma,
+                          self.clip_sigma * sigma)
+        s = jnp.max(jnp.abs(g0))
+        c, _, _ = _pad_rows(g0)
+        p = jnp.abs(c) / jnp.maximum(s, 1e-30)
+        u = jax.random.uniform(key, c.shape)
+        b = (u < p).astype(jnp.int8)
+        tern = jnp.sign(c).astype(jnp.int8) * b
+        digits = (tern + 1).astype(jnp.uint32).reshape(-1, LANE // 16, 16)
+        shifts = 2 * jnp.arange(16, dtype=jnp.uint32)
+        words = jnp.sum(digits << shifts, axis=-1).astype(jnp.uint32)
+        return {"words": words, "s": s}
+
+    def decode(self, planes):
+        words = planes["words"]
+        shifts = 2 * jnp.arange(16, dtype=jnp.uint32)
+        digits = (words[..., None] >> shifts) & jnp.uint32(3)
+        tern = digits.astype(jnp.float32) - 1.0
+        return (tern.reshape(words.shape[0], -1) * planes["s"]).reshape(-1)
+
+    def static_tx_bytes(self, length: int) -> int:
+        return -(-length // 4) + 4
+
+
+class QsgdCodec(SegmentCodec):
+    """s-level stochastic quantization: int8 levels + one l2 norm."""
+    name = "qsgd"
+
+    def __init__(self, s_levels: int = 127):
+        self.s_levels = s_levels
+
+    def encode(self, seg, key=None):
+        g32, _, _ = _pad_rows(seg)               # pad zeros don't move l2
+        norm = jnp.sqrt(jnp.sum(jnp.square(g32)))
+        p = jnp.abs(g32) / jnp.maximum(norm, 1e-30) * self.s_levels
+        lo = jnp.floor(p)
+        u = jax.random.uniform(key, g32.shape)
+        lvl = jnp.clip(lo + (u < (p - lo)).astype(jnp.float32),
+                       0, self.s_levels)
+        return {"q": (jnp.sign(g32) * lvl).astype(jnp.int8), "norm": norm}
+
+    def decode(self, planes):
+        return (planes["q"].astype(jnp.float32)
+                * (planes["norm"] / self.s_levels)).reshape(-1)
+
+    def static_tx_bytes(self, length: int) -> int:
+        return length + 4
+
+
+class DgcCodec(SegmentCodec):
+    """Threshold-sparse values + a 1-bit plane for the remainder.
+
+    The values plane is a dense fp32 array (SPMD payloads are
+    fixed-shape) but its *wire* size is the sparse accounting — 8 bytes
+    per element above the threshold, counted per transmission from
+    ``sent_elems`` because the quantile threshold moves with the data
+    every step.  The untransmitted remainder rides the same packed 1-bit
+    plane as ``onebit`` (masked out of the bin means)."""
+    name = "dgc"
+    lossy_ef = True
+
+    def __init__(self, density: float = 0.01):
+        self.density = density
+
+    def encode(self, seg, key=None):
+        th = jnp.quantile(jnp.abs(seg.astype(jnp.float32)),
+                          1.0 - self.density)   # unpadded quantile
+        c, valid, _ = _pad_rows(seg)
+        # an exact zero never ships: the wire format is (index, value)
+        # pairs, and when the threshold degenerates to 0 (a mostly-zero
+        # segment) the zeros must not count as payload
+        mask = (jnp.abs(c) >= th) & (c != 0.0)
+        if valid is not None:
+            mask = mask & valid
+        kept = jnp.where(mask, c, 0.0)
+        rem = c - kept
+        signs = jnp.where(rem >= 0, jnp.int8(1), jnp.int8(-1))
+        unsent = ~mask if valid is None else (~mask & valid)
+        sp, sn = _two_bin_means(signs, rem, valid=unsent)
+        return {"kept": kept, "mask": mask,
+                "words": K1.pack_bits(signs), "sp": sp, "sn": sn}
+
+    def decode(self, planes):
+        signs = K1.unpack_bits(planes["words"], LANE)
+        rem = jnp.where(signs > 0, planes["sp"], -planes["sn"])
+        rem = jnp.where(planes["mask"], 0.0, rem)
+        return (planes["kept"] + rem).reshape(-1)
+
+    def static_tx_bytes(self, length: int) -> int:
+        # the packed remainder plane; kept values are counted per send
+        return -(-length // 8) + 8 * _rows_of(length)
+
+    def sent_elems(self, planes):
+        return jnp.sum(planes["mask"].astype(jnp.int32))
+
+
+# 4 B value + 4 B index per data-dependent sparse element on the wire
+SPARSE_ELEM_BYTES = 8
+
+
+def make_codec(method: str, **kw) -> SegmentCodec:
+    if method == "none":
+        return NoneCodec()
+    if method == "onebit":
+        return OnebitCodec()
+    if method == "terngrad":
+        return TerngradCodec(**kw)
+    if method == "qsgd":
+        return QsgdCodec(**kw)
+    if method == "dgc":
+        return DgcCodec(**kw)
+    raise ValueError(f"no segment codec for method {method!r}")
+
+
+def codec_for(compressor: Compressor) -> SegmentCodec:
+    """The segment codec matching a ``Compressor`` spec (same method and
+    quantization knobs; EF/reconstruction knobs live in the transport)."""
+    m = compressor.method
+    if m == "terngrad":
+        return TerngradCodec(clip_sigma=compressor.clip_sigma)
+    if m == "qsgd":
+        return QsgdCodec(s_levels=compressor.s_levels)
+    if m == "dgc":
+        return DgcCodec(density=compressor.density)
+    return make_codec(m)

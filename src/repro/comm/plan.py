@@ -1,0 +1,312 @@
+"""``CommPlan``: the one communication plan every gradient exchange in
+the repo executes.
+
+A plan is built once per (parameter structure × worker axis) and owns:
+
+  * the fused-bucket layout (backward-order fusion into ~``bucket_mb``
+    buckets) and the TicTac/random/layer transfer **issue order** — the
+    ``core/comm_scheduler`` logic, now behind one object shared by the
+    executed schedule and the analytic timeline so they cannot drift;
+  * the **topology** schedule (ring/tree/butterfly/…) each bucket is
+    reduced with, via ``repro.comm.transport``;
+  * the **codec** (``repro.comm.codecs``) and the ``wire`` mode:
+
+      wire="modeled"   compression happens per worker *before* the
+                       exchange (``Compressor.roundtrip``) and the
+                       schedule moves full-precision payloads; wire bytes
+                       are the compressor's analytic accounting (what the
+                       simulator reports — the two backends stay
+                       cross-validatable).
+      wire="measured"  the schedule itself carries encoded planes
+                       (encode → ppermute → decode-accumulate, per-worker
+                       EF for the lossy hops) and wire bytes are counted
+                       from those planes: shape-static parts at plan time
+                       (``measured_step_tx_bytes``), dgc's data-dependent
+                       sparse elements per step from the traced
+                       ``sent_elems`` the exchange returns.
+
+  ``bsp/*/none`` is identical under both modes: the exact codec routes
+  through the legacy full-precision schedules, bit-for-bit.
+
+``DeviceEngine`` (train/data_parallel.py) and the hybrid mesh's data axis
+(parallel/engine.py, z0–z3) both consume this object — one planner, one
+issue order, one accounting surface.  See docs/comm.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.codecs import SPARSE_ELEM_BYTES, SegmentCodec, codec_for
+from repro.comm.transport import (SCHEDULES, compressed_allreduce,
+                                  compressed_reduce_scatter,
+                                  fp32_schedule_bytes, pad_for_schedule,
+                                  schedule_tx_bytes)
+from repro.core.collectives import axis_size
+from repro.core.comm_scheduler import (LayerCost, LinkModel, bucketize,
+                                       random_order, schedule_no_overlap,
+                                       schedule_overlap, tictac_order)
+from repro.core.compression import Compressor
+from repro.core.parameter_server import all_gather_flat, shard_of_flat
+
+WIRE_MODES = ("modeled", "measured")
+
+
+def bucket_order(n: int, order: str, layers: Sequence[LayerCost],
+                 seed: int) -> List[int]:
+    if order == "tictac":
+        return tictac_order(layers)
+    if order == "random":
+        return random_order(layers, seed)
+    if order == "layer":
+        return list(range(n))
+    raise ValueError(order)
+
+
+def plan_buckets(params_example, bucket_mb: float, order: str,
+                 back_s_per_byte: float, seed: int
+                 ) -> Tuple[List[List[int]], List[int], List[LayerCost]]:
+    """Fuse gradient leaves (backward = reverse-pytree order) into buckets
+    of ~bucket_mb and choose the transfer issue order.  This single plan
+    is shared by the executed schedule (every architecture and mesh) and
+    the analytic timeline model."""
+    leaves = jax.tree.leaves(params_example)
+    layers = [LayerCost(f"g{i}", back_s_per_byte * x.size * 4, x.size * 4)
+              for i, x in enumerate(leaves)]
+    fused = bucketize(layers, bucket_mb * 1e6)
+    buckets = [[int(nm[1:]) for nm in b.name.split("+")] for b in fused]
+    order_idx = bucket_order(len(fused), order, fused, seed)
+    return buckets, order_idx, fused
+
+
+def modeled_event_bytes(compressor: Compressor, params_example) -> int:
+    """The compressor's analytic per-push accounting over
+    ``params_example`` (what the simulator reports) — the single
+    implementation every engine's modeled wire increment uses."""
+    zeros = jax.tree.map(lambda x: jnp.zeros(np.shape(x), jnp.float32),
+                         params_example)
+    state = compressor.init_state(zeros)
+    _, _, wb = compressor.roundtrip(zeros, state, jax.random.PRNGKey(0))
+    return int(wb)
+
+
+def scatter_flat(flat, idxs, leaf_shapes, out, dtype=None):
+    """Split a fused bucket vector back into its leaves (into ``out``)."""
+    off = 0
+    for i in idxs:
+        shape, leaf_dtype = leaf_shapes[i]
+        size = int(np.prod(shape)) if shape else 1
+        out[i] = flat[off:off + size].reshape(shape).astype(
+            dtype or leaf_dtype)
+        off += size
+    return out
+
+
+@dataclasses.dataclass
+class CommPlan:
+    """One executable exchange plan (see the module docstring)."""
+    axis: str
+    n: int                           # workers on the axis
+    topology: str
+    compressor: Compressor
+    wire: str                        # modeled | measured
+    buckets: List[List[int]]
+    order: List[int]                 # issue order over bucket indices
+    fused: List[LayerCost]
+    treedef: Any
+    leaf_shapes: List[Tuple[Tuple[int, ...], Any]]
+    link: LinkModel = LinkModel()
+
+    @classmethod
+    def plan(cls, params_example, *, axis: str, n: int,
+             topology: str = "ring",
+             compressor: Compressor = Compressor("none"),
+             wire: str = "modeled", bucket_mb: float = 4.0,
+             order: str = "tictac", back_s_per_byte: float = 2e-12,
+             seed: int = 0, link: LinkModel = LinkModel()) -> "CommPlan":
+        if wire not in WIRE_MODES:
+            raise ValueError(f"wire={wire!r} (want {WIRE_MODES})")
+        if topology not in SCHEDULES:
+            raise ValueError(f"unknown topology {topology!r}")
+        buckets, order_idx, fused = plan_buckets(
+            params_example, bucket_mb, order, back_s_per_byte, seed)
+        treedef = jax.tree.structure(params_example)
+        shapes = [(tuple(x.shape), x.dtype)
+                  for x in jax.tree.leaves(params_example)]
+        return cls(axis=axis, n=n, topology=topology, compressor=compressor,
+                   wire=wire, buckets=buckets, order=order_idx, fused=fused,
+                   treedef=treedef, leaf_shapes=shapes, link=link)
+
+    # ------------------------------------------------------------ derived
+    @property
+    def codec(self) -> SegmentCodec:
+        return codec_for(self.compressor)
+
+    @property
+    def in_schedule(self) -> bool:
+        """True when payloads are encoded inside the schedule (measured
+        wire mode with a lossy method)."""
+        return self.wire == "measured" and self.compressor.method != "none"
+
+    def bucket_len(self, b: int) -> int:
+        return sum(int(np.prod(s) or 1) for s, _ in
+                   ((self.leaf_shapes[i]) for i in self.buckets[b]))
+
+    def _cat(self, leaves, b: int):
+        return jnp.concatenate(
+            [leaves[i].astype(jnp.float32).reshape(-1)
+             for i in self.buckets[b]])
+
+    # ------------------------------------------------- exact (fp32) ops
+    def reduce_grads(self, grads):
+        """Full-precision bucketed mean-allreduce in plan issue order —
+        the legacy exact path, bit-identical to the pre-refactor
+        ``make_bucketed_allreduce``.  Call inside ``shard_map``."""
+        reduce_leaf = SCHEDULES[self.topology]
+        leaves = jax.tree.leaves(grads)
+        n = axis_size(self.axis)
+        out: List[Any] = [None] * len(leaves)
+        for b in self.order:                   # the executed schedule
+            flat = self._cat(leaves, b)
+            red = reduce_leaf(flat, self.axis) / n
+            scatter_flat(red, self.buckets[b], self.leaf_shapes, out)
+        return jax.tree.unflatten(self.treedef, out)
+
+    # ---------------------------------------- codec-in-schedule exchange
+    def exchange(self, grads, ef, key):
+        """Mean-allreduce with encoded payloads inside the topology
+        schedule.  ``ef`` is the worker's error-feedback pytree (None for
+        the stateless quantizers), ``key`` drives the stochastic codecs.
+        Returns ``(mean_grads, new_ef, sent_elems)`` — fold ``sent_elems``
+        (a traced int32) into the step outputs for dgc's measured bytes.
+        Call inside ``shard_map``."""
+        comp, codec = self.compressor, self.codec
+        gain = comp.ef_gain if comp.method == "onebit" else 1.0
+        leaves = jax.tree.leaves(grads)
+        ef_leaves = jax.tree.leaves(ef) if ef is not None else None
+        out: List[Any] = [None] * len(leaves)
+        new_ef: List[Any] = [None] * len(leaves)
+        sent = jnp.zeros((), jnp.int32)
+        for b in self.order:
+            L = self.bucket_len(b)
+            P = pad_for_schedule(L, self.n)
+            g_flat = self._cat(leaves, b)
+            if ef_leaves is not None:
+                e_flat = self._cat(ef_leaves, b)
+                cin = g_flat + gain * e_flat
+                ctrue = g_flat + e_flat
+            else:
+                cin = g_flat
+            key, sub = jax.random.split(key)
+            red, res, nz = compressed_allreduce(
+                jnp.pad(cin, (0, P - L)), self.axis, self.topology,
+                codec, sub)
+            sent = sent + nz
+            scatter_flat(red[:L] / self.n, self.buckets[b],
+                         self.leaf_shapes, out)
+            if ef_leaves is not None:
+                # telescoping EF: whatever this worker failed to put on
+                # the wire (hop residuals), measured against the true
+                # compensated gradient (over-relaxation safe)
+                scatter_flat(ctrue - cin + res[:L], self.buckets[b],
+                             self.leaf_shapes, new_ef, dtype=jnp.float32)
+        out_tree = jax.tree.unflatten(self.treedef, out)
+        ef_tree = (jax.tree.unflatten(self.treedef, new_ef)
+                   if ef_leaves is not None else None)
+        return out_tree, ef_tree, sent
+
+    def ps_exchange(self, params, grads, ef, key, lr: float):
+        """The centralized counterpart: compressed ring reduce-scatter of
+        each gradient bucket (the PS push), SGD on my 1/n shard (the
+        server work), full-precision all-gather of the updated shard (the
+        pull — parameters travel exact).  Returns ``(new_params, new_ef,
+        sent_elems)``.  Call inside ``shard_map``."""
+        comp, codec = self.compressor, self.codec
+        gain = comp.ef_gain if comp.method == "onebit" else 1.0
+        p_leaves = jax.tree.leaves(params)
+        g_leaves = jax.tree.leaves(grads)
+        ef_leaves = jax.tree.leaves(ef) if ef is not None else None
+        out: List[Any] = [None] * len(p_leaves)
+        new_ef: List[Any] = [None] * len(p_leaves)
+        sent = jnp.zeros((), jnp.int32)
+        for b in self.order:
+            L = self.bucket_len(b)
+            P = pad_for_schedule(L, self.n)
+            g_flat = self._cat(g_leaves, b)
+            if ef_leaves is not None:
+                e_flat = self._cat(ef_leaves, b)
+                cin = g_flat + gain * e_flat
+                ctrue = g_flat + e_flat
+            else:
+                cin = g_flat
+            key, sub = jax.random.split(key)
+            g_shard, res, nz = compressed_reduce_scatter(
+                jnp.pad(cin, (0, P - L)), self.axis, codec, sub)
+            sent = sent + nz
+            p_flat = jnp.pad(self._cat(p_leaves, b), (0, P - L))
+            p_shard = shard_of_flat(p_flat, self.axis)
+            new_shard = p_shard - lr * (g_shard / self.n)
+            full = all_gather_flat(new_shard, self.axis, L)
+            scatter_flat(full, self.buckets[b], self.leaf_shapes, out)
+            if ef_leaves is not None:
+                scatter_flat(ctrue - cin + res[:L], self.buckets[b],
+                             self.leaf_shapes, new_ef, dtype=jnp.float32)
+        out_tree = jax.tree.unflatten(self.treedef, out)
+        ef_tree = (jax.tree.unflatten(self.treedef, new_ef)
+                   if ef_leaves is not None else None)
+        return out_tree, ef_tree, sent
+
+    # --------------------------------------------------------- accounting
+    def modeled_timeline(self) -> Dict[str, float]:
+        """Iteration-time projections for the exact bucket plan this
+        engine executes — the no-overlap vs overlap comparison."""
+        return {
+            "no_overlap_s": schedule_no_overlap(self.fused, self.link),
+            "overlap_s": schedule_overlap(self.fused, self.link,
+                                          self.order),
+            "n_buckets": len(self.fused),
+        }
+
+    def measured_step_tx_bytes(self, arch: str = "allreduce") -> int:
+        """Shape-static measured bytes ONE worker puts on the wire per
+        BSP step — recomputed per bucket from the plan (never cached from
+        a step-0 trace).  For the exact codec this is the fp32 schedule;
+        for ``ps`` the gradient RS is encoded and the parameter AG is
+        fp32.  Add ``SPARSE_ELEM_BYTES * sent_elems`` for dgc."""
+        codec = self.codec if self.in_schedule else codec_for(
+            Compressor("none"))
+        total = 0.0
+        for b in range(len(self.buckets)):
+            L = self.bucket_len(b)
+            P = pad_for_schedule(L, self.n)
+            if arch == "ps":
+                m = P // self.n
+                rs = (self.n - 1) * codec.static_tx_bytes(m)
+                ag = (self.n - 1) * 4 * m          # params travel exact
+                total += rs + ag
+            else:
+                total += schedule_tx_bytes(self.topology, self.n, P, codec)
+        return int(total)
+
+    def measured_bytes(self, sent_elems: int) -> int:
+        """Data-dependent measured bytes for ``sent_elems`` sparse
+        elements (dgc's per-step payload)."""
+        return int(sent_elems) * SPARSE_ELEM_BYTES
+
+    def fp32_step_tx_bytes(self) -> int:
+        """The full-precision schedule's per-worker tx bytes per step —
+        the baseline compressed-payload ratios are quoted against."""
+        total = 0.0
+        for b in range(len(self.buckets)):
+            P = pad_for_schedule(self.bucket_len(b), self.n)
+            total += fp32_schedule_bytes(self.topology, self.n, P)
+        return int(total)
+
+    def modeled_event_bytes(self, params_example) -> int:
+        """The compressor's analytic per-push accounting (what the
+        simulator reports) — the ``wire="modeled"`` step increment."""
+        return modeled_event_bytes(self.compressor, params_example)

@@ -8,7 +8,13 @@ On a TPU torus the ICI *is* the topology, so these become collective
 native ``psum`` (which ring-schedules on the torus already) — quantifying
 when a hand-rolled schedule loses to the compiler's.
 
-All variants are numerically equal to ``psum`` (tested on 8 host devices).
+As of the communication-plane refactor the schedules live in
+``repro.comm.transport`` as *schedule generators*: the same topologies
+can carry **encoded segment payloads** (encode → ppermute the planes →
+decode-accumulate, per-worker error feedback) when a ``CommPlan`` runs
+with ``wire="measured"``.  This module re-exports the exact
+full-precision forms — unchanged, still numerically equal to ``psum``
+(tested on 8 host devices) — and the legacy analytic traffic model.
 
 Per-device bytes moved for an n-worker reduce of a size-S tensor:
   ring            2 (n-1)/n S        (bandwidth-optimal)
@@ -18,119 +24,19 @@ Per-device bytes moved for an n-worker reduce of a size-S tensor:
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-
 import jax
-import jax.numpy as jnp
-from jax import lax
 
+from repro.comm.transport import (SCHEDULES, butterfly_allreduce,
+                                  fully_connected_allreduce, per_device_bytes,
+                                  psum_allreduce, ring_allreduce,
+                                  tree_allreduce)
 from repro.core.collectives import axis_size
 
+TOPOLOGIES = SCHEDULES
 
-# ------------------------------------------------------------------ schedules
-def ring_allreduce(x, axis_name: str):
-    """Bandwidth-optimal ring: reduce-scatter then all-gather, 2(n-1) steps."""
-    n = axis_size(axis_name)
-    if n == 1:
-        return x
-    me = lax.axis_index(axis_name)
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % n
-    chunks = jnp.pad(flat, (0, pad)).reshape(n, -1)
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-
-    def rs_step(i, c):
-        send = c[(me - i) % n]
-        recv = lax.ppermute(send, axis_name, fwd)
-        return c.at[(me - i - 1) % n].add(recv)
-
-    chunks = lax.fori_loop(0, n - 1, rs_step, chunks)
-    # rank r now owns reduced chunk (r + 1) % n
-
-    def ag_step(i, c):
-        send = c[(me + 1 - i) % n]
-        recv = lax.ppermute(send, axis_name, fwd)
-        return c.at[(me - i) % n].set(recv)
-
-    chunks = lax.fori_loop(0, n - 1, ag_step, chunks)
-    return chunks.reshape(-1)[:flat.shape[0]].reshape(shape).astype(dtype)
-
-
-def butterfly_allreduce(x, axis_name: str):
-    """Recursive doubling: log2(n) exchange-and-add rounds (n power of 2)."""
-    n = axis_size(axis_name)
-    if n == 1:
-        return x
-    assert n & (n - 1) == 0, "butterfly requires power-of-two workers"
-    acc = x
-    for k in range(int(math.log2(n))):
-        d = 1 << k
-        perm = [(i, i ^ d) for i in range(n)]
-        acc = acc + lax.ppermute(acc, axis_name, perm)
-    return acc
-
-
-def tree_allreduce(x, axis_name: str):
-    """Binomial tree: reduce to rank 0, then broadcast back down."""
-    n = axis_size(axis_name)
-    if n == 1:
-        return x
-    me = lax.axis_index(axis_name)
-    levels = int(math.log2(n))
-    assert 1 << levels == n, "tree requires power-of-two workers"
-    acc = x
-    # reduce phase: at level k, ranks with me % 2^(k+1) == 2^k send down
-    for k in range(levels):
-        d = 1 << k
-        perm = [(i, i - d) for i in range(n) if i % (2 * d) == d]
-        recv = lax.ppermute(acc, axis_name, perm)
-        is_receiver = (me % (2 * d)) == 0
-        acc = jnp.where(is_receiver, acc + recv, acc)
-    # broadcast phase
-    for k in reversed(range(levels)):
-        d = 1 << k
-        perm = [(i, i + d) for i in range(n) if i % (2 * d) == 0]
-        recv = lax.ppermute(acc, axis_name, perm)
-        is_receiver = (me % (2 * d)) == d
-        acc = jnp.where(is_receiver, recv, acc)
-    return acc
-
-
-def fully_connected_allreduce(x, axis_name: str):
-    """Every worker sends its full tensor to every other (the O(n^2) traffic
-    case the survey warns about); numerically an all_gather + sum."""
-    g = lax.all_gather(x, axis_name)
-    return jnp.sum(g, axis=0).astype(x.dtype)
-
-
-def psum_allreduce(x, axis_name: str):
-    return lax.psum(x, axis_name)
-
-
-TOPOLOGIES = {
-    "ring": ring_allreduce,
-    "butterfly": butterfly_allreduce,
-    "tree": tree_allreduce,
-    "fully_connected": fully_connected_allreduce,
-    "psum": psum_allreduce,
-}
-
-
-def per_device_bytes(topology: str, n: int, size_bytes: int) -> float:
-    """Analytic per-device traffic for one allreduce (benchmark model)."""
-    if n == 1:
-        return 0.0
-    if topology in ("ring", "psum"):
-        return 2 * (n - 1) / n * size_bytes
-    if topology == "butterfly":
-        return math.log2(n) * size_bytes
-    if topology == "tree":
-        return 2 * math.log2(n) * size_bytes
-    if topology == "fully_connected":
-        return (n - 1) * size_bytes
-    raise ValueError(topology)
+__all__ = ["TOPOLOGIES", "ring_allreduce", "butterfly_allreduce",
+           "tree_allreduce", "fully_connected_allreduce", "psum_allreduce",
+           "per_device_bytes", "make_allreduce"]
 
 
 # ------------------------------------------------------------------- frontend

@@ -14,6 +14,12 @@ and the classic bucketing trade-off (latency alpha vs bandwidth beta).
 The projected timings feed benchmarks/comm_schedule_bench.py; the dominant
 `collective` roofline term of the dry-run is the same quantity measured
 from compiled HLO.
+
+These are the *primitives*.  The executable surface engines consume is
+``repro.comm.plan.CommPlan``, which owns the bucket fusion + issue order
+built from this module and binds them to a topology schedule and wire
+codec — the executed exchange and this timeline model read the same
+bucket list, so they cannot drift apart (docs/comm.md).
 """
 from __future__ import annotations
 

@@ -48,14 +48,23 @@ _CKPT_FMT = "step_{:06d}"
 # ------------------------------------------------------- engine snapshots
 def save_engine_state(path: str, engine, state, step: int,
                       history_len: int = 0,
-                      extra: Optional[Dict[str, Any]] = None) -> None:
+                      extra: Optional[Dict[str, Any]] = None,
+                      incremental_from: Optional[str] = None,
+                      shard_bytes: int = 512 * 1024 * 1024) -> None:
     """Atomically snapshot an engine's full run-state at ``step``.
     ``extra`` adds trainer-level bookkeeping (e.g. the consumed event
-    record) to the manifest next to the engine's own meta."""
+    record) to the manifest next to the engine's own meta.
+    ``incremental_from`` enables hash-skip shard linking against a
+    previous committed snapshot (checkpoint/store.py) — restores stay
+    bitwise-identical.  Engine snapshots always carry content hashes so
+    the *next* cadence save can link against this one even when this
+    save is full (crash/preemption commits)."""
     arrays, meta = engine.export_state(state)
     meta = dict(meta, step=int(step), history_len=int(history_len),
                 **(extra or {}))
-    save_checkpoint(path, arrays, step=int(step), extra=meta)
+    save_checkpoint(path, arrays, step=int(step), extra=meta,
+                    incremental_from=incremental_from,
+                    shard_bytes=shard_bytes, hash_leaves=True)
 
 
 def restore_engine_state(path: str, engine, params_like
@@ -190,13 +199,18 @@ def fit_elastic(strategy, grad_fn: Callable, params,
     # explicit opt-in for picking up a previous incarnation's snapshot)
     written: set = set()
 
-    def commit(step: int, state, hist_len: int):
+    def commit(step: int, state, hist_len: int, full: bool = False):
         # every snapshot records which plan events have already fired:
         # "fired" is not derivable from the step alone (a crash rollback
         # commits *earlier* than the crash it consumed), and a resumed
-        # incarnation must not re-fire any of them
+        # incarnation must not re-fire any of them.
+        # Periodic cadence saves are incremental (unchanged shards are
+        # hash-skipped against the newest committed snapshot); crash
+        # rollback and preemption commits stay full saves.
+        prev = ckpt(max(written)) if (written and not full) else None
         save_engine_state(ckpt(step), engine, state, step, hist_len,
-                          extra={"consumed": run.consumed_specs()})
+                          extra={"consumed": run.consumed_specs()},
+                          incremental_from=prev)
         written.add(step)
 
     t = 0
@@ -235,7 +249,7 @@ def fit_elastic(strategy, grad_fn: Callable, params,
     try:
         while t < steps:
             if preempted:
-                commit(t, st, len(history))
+                commit(t, st, len(history), full=True)
                 break
             rolled_back = False
             # one event at a time: a crash rollback leaves the rest of the
@@ -260,7 +274,8 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                     t0 = time.time()
                     if ev.kind == "restart":
                         # scheduler suspend: snapshot the live state first
-                        commit(t, st, len(history))
+                        # (full save — recovery must not depend on links)
+                        commit(t, st, len(history), full=True)
                     if not written:
                         raise RuntimeError(
                             f"no checkpoint committed by this run in "
@@ -291,7 +306,7 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                         st = engine.reshard(st, survivors, step=rstep,
                                             lost=lost)
                         eb.assign(_engine_streams(engine))
-                        commit(rstep, st, len(history))
+                        commit(rstep, st, len(history), full=True)
                     recoveries.append(dict(
                         kind=ev.kind, at=t, restored_step=rstep,
                         lost_steps=t - rstep,

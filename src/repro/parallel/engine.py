@@ -41,9 +41,16 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.codecs import SPARSE_ELEM_BYTES, codec_for, make_codec
+from repro.comm.plan import CommPlan, modeled_event_bytes
+from repro.comm.transport import (compressed_allreduce,
+                                  compressed_reduce_scatter,
+                                  schedule_tx_bytes)
 from repro.core.collectives import shard_map
 from repro.core.compression import Compressor, EF_METHODS
+from repro.core.parameter_server import shard_of_flat
 from repro.core.pipeline import gpipe_forward, gpipe_ticks
+from repro.core.sync import default_periods
 from repro.launch.mesh import make_hybrid_mesh
 from repro.parallel.mesh_plan import AXES, MeshPlan, MeshSpec, plan_mesh
 from repro.parallel.staged import (StagedModel, is_staged_model,
@@ -52,9 +59,11 @@ from repro.parallel.zero import (flatten_bucket, init_opt_state,
                                  make_optimizer_step, make_zero_bucket_update,
                                  state_bytes_per_device,
                                  wire_bytes_per_device)
-from repro.train.data_parallel import (_scatter_flat, make_bucketed_allreduce)
+from repro.train.data_parallel import _scatter_flat, async_replay_step
 
 DATA, TENSOR, STAGE = AXES
+
+ASYNC_SYNCS = ("ssp", "asp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +77,14 @@ class HybridConfig:
     bucket_mb: float = 4.0
     order: str = "tictac"
     micro_batches: int = 0           # 0 = auto (2*stages when pipelined)
+    # sync model over the DATA axis (docs/hybrid.md): bsp natively; ssp/
+    # asp replay the simulator's staleness schedule per data slot, sma
+    # keeps a replica per data slot — all three need stage=1, z0, sgd
+    sync: str = "bsp"
+    staleness: int = 3
+    periods: Optional[Tuple[int, ...]] = None   # per data-slot speeds
+    sma_mu: float = 0.1
+    wire: str = "modeled"            # modeled | measured (docs/comm.md)
     seed: int = 0
 
     @property
@@ -90,6 +107,15 @@ class HybridEngine:
             raise ValueError(f"zero={cfg.zero} (want 0..3)")
         if cfg.optimizer not in ("sgd", "adamw"):
             raise ValueError(f"optimizer={cfg.optimizer!r}")
+        if cfg.sync not in ("bsp",) + ASYNC_SYNCS + ("sma",):
+            raise ValueError(f"sync={cfg.sync!r}")
+        if cfg.wire not in ("modeled", "measured"):
+            raise ValueError(f"wire={cfg.wire!r}")
+        if cfg.sync != "bsp" and (cfg.mesh.stage != 1 or cfg.zero
+                                  or cfg.optimizer != "sgd"):
+            raise ValueError(
+                f"sync={cfg.sync!r} composes with the data axis only: "
+                "needs stage=1, zero=0, optimizer='sgd'")
         self.staged = is_staged_model(model)
         if not self.staged and not cfg.mesh.is_trivial:
             raise ValueError(
@@ -108,12 +134,20 @@ class HybridEngine:
         self.mesh = make_hybrid_mesh(self._devs, cfg.mesh.data,
                                      cfg.mesh.tensor, cfg.mesh.stage)
         self.plan: Optional[MeshPlan] = None
+        self.periods = cfg.periods or default_periods(cfg.mesh.data)
+        assert len(self.periods) == cfg.mesh.data
         self.slowdowns: List[float] = [1.0] * cfg.mesh.data
         self._step_fn = None
-        self._wire_cell: List[int] = []
+        self._async_fns = None
+        self._sma_fn = None
         self._act_cell: List[int] = []
+        self._dev_event_bytes: Optional[int] = None
+        self._measured_tx: Optional[int] = None
         self._wire_total = 0
         self._leaf_meta = None           # (treedef, [(local_shape, dtype)])
+        # same replicated apply as the flat engines (async data axis)
+        self._apply = jax.jit(
+            lambda p, g, lr: jax.tree.map(lambda a, b: a - lr * b, p, g))
 
     # ------------------------------------------------------------ helpers
     @property
@@ -262,6 +296,25 @@ class HybridEngine:
         cfg = self.cfg
         plan = self._ensure_plan(params)
         st: Dict[str, Any] = dict(rng=jax.random.PRNGKey(cfg.seed), wire=0)
+        D = cfg.mesh.data
+        if cfg.sync in ASYNC_SYNCS:
+            # async over the data axis: per-slot pulled copies of the
+            # FULL stacked params (reference rebinds, like the flat
+            # engines); EF state is per-slot over full leaves too, since
+            # a slot's push is its assembled full gradient
+            st.update(
+                params=params, opt=None,
+                ef=(jax.tree.map(
+                    lambda x: jnp.zeros((D,) + x.shape, jnp.float32),
+                    params) if self._ef_active else None),
+                pulled=[params] * D, pulled_ver=[0] * D, server_ver=0,
+                tick=0, updates=0, batch_idx=[0] * D,
+                batch_cache=[None] * D, updates_base=0, step_base=0)
+            return st
+        if cfg.sync == "sma":
+            st["replicas"] = jax.tree.map(
+                lambda x: jnp.stack([x] * D), params)
+            return st
         if cfg.zero == 3:
             st["params"] = [jnp.asarray(self._shard_array(params, b))
                             for b in plan.order]
@@ -292,6 +345,40 @@ class HybridEngine:
         return st
 
     # ---------------------------------------------------------------- step
+    def _comm_plan(self) -> CommPlan:
+        """The data-axis ``CommPlan`` over this device's local block
+        structure — the same plan object (bucket fusion, issue order,
+        codec, wire mode) the pure data-parallel engine executes."""
+        cfg = self.cfg
+        return CommPlan.plan(
+            self.plan.local_example, axis=DATA, n=cfg.mesh.data,
+            topology=cfg.topology, compressor=cfg.compressor,
+            wire=cfg.wire, bucket_mb=cfg.bucket_mb, order=cfg.order,
+            seed=cfg.seed)
+
+    def _measured_step_tx_bytes(self) -> int:
+        """Shape-static measured bytes ONE device puts on the data axis
+        per step, per bucket from the plan: z0 = the topology schedule;
+        z1 = ring-allreduce grads + fp32 param all-gather; z2/z3 = the
+        CommPlan ``ps`` accounting (RS grads + fp32 param all-gather)."""
+        cfg, plan = self.cfg, self.plan
+        d = cfg.mesh.data
+        if d == 1:
+            return 0
+        comm = self._comm_plan()
+        if cfg.zero == 0:
+            return comm.measured_step_tx_bytes("allreduce")
+        if cfg.zero >= 2:
+            return comm.measured_step_tx_bytes("ps")
+        # z1: compressed ring allreduce of grads + exact param all-gather
+        codec = comm.codec if comm.in_schedule else make_codec("none")
+        total = 0.0
+        for b in plan.order:
+            P = d * (-(-plan.bucket_sizes[b] // d))
+            total += schedule_tx_bytes("ring", d, P, codec)
+            total += (d - 1) * 4 * (P // d)       # params travel exact
+        return int(total)
+
     def _build_step(self):
         cfg, plan = self.cfg, self.plan
         model, grad_fn = self.model, self.grad_fn
@@ -300,17 +387,17 @@ class HybridEngine:
         micro = plan.micro
         treedef, meta = self._leaf_meta
         sizes = [plan.bucket_sizes[b] for b in plan.order]
-        reduce0 = (make_bucketed_allreduce(
-            plan.local_example, topology=cfg.topology,
-            bucket_mb=cfg.bucket_mb, order=cfg.order, seed=cfg.seed,
-            axis=DATA) if cfg.zero == 0 else None)
+        comm = self._comm_plan()
+        in_schedule = comm.in_schedule
+        codec = codec_for(comp)
+        gain = comp.ef_gain if comp.method == "onebit" else 1.0
+        reduce0 = comm.reduce_grads if cfg.zero == 0 else None
         zero_update = (make_zero_bucket_update(
             plan, cfg.zero, cfg.optimizer, cfg.lr, axis=DATA)
             if cfg.zero else None)
         opt_step0 = (make_optimizer_step(cfg.optimizer, cfg.lr)
                      if cfg.zero == 0 else None)
         tensor_axis = TENSOR if T > 1 else None
-        wire_cell: List[int] = []
         act_cell: List[int] = []
 
         def squeeze3(x):
@@ -363,6 +450,34 @@ class HybridEngine:
 
             return jax.value_and_grad(lloss)(p_local)
 
+        def zero_buckets(pstate, opt, p_local):
+            if cfg.zero == 3:
+                p_buckets = [squeeze3(x) for x in pstate]
+            else:
+                p_leaves = jax.tree.leaves(p_local)
+                p_buckets = [flatten_bucket(p_leaves, plan.buckets[b])
+                             for b in plan.order]
+            opt_l = opt
+            if opt is not None:
+                opt_l = {"m": [squeeze3(x) for x in opt["m"]],
+                         "v": [squeeze3(x) for x in opt["v"]],
+                         "t": opt["t"]}
+            return p_buckets, opt_l
+
+        def zero_unpack(new_buckets, opt_new, opt):
+            if opt_new is not None:
+                opt_new = {"m": [expand3(x) for x in opt_new["m"]],
+                           "v": [expand3(x) for x in opt_new["v"]],
+                           "t": opt_new["t"]}
+            if cfg.zero == 3:
+                p_out = [expand3(x) for x in new_buckets]
+            else:
+                out: List[Any] = [None] * len(meta)
+                for flat, b in zip(new_buckets, plan.order):
+                    _scatter_flat(flat, plan.buckets[b], meta, out)
+                p_out = jax.tree.unflatten(treedef, out)
+            return p_out, opt_new if opt is not None else opt
+
         def body(pstate, opt, ef, batch, key0):
             batch_l = jax.tree.map(lambda x: x[0], batch)
             p_local = local_params(pstate)
@@ -370,63 +485,107 @@ class HybridEngine:
             key = key0
             for ax in AXES:
                 key = jax.random.fold_in(key, lax.axis_index(ax))
-            if comp.method != "none":
-                ef_l = jax.tree.map(squeeze3, ef) if ef is not None else None
-                grads, ef_new, wb = comp.roundtrip(grads, ef_l, key)
-                ef_out = (jax.tree.map(expand3, ef_new)
-                          if ef_new is not None else ef)
-            else:
-                ef_out = ef
-                wb = sum(int(np.prod(s)) * 4 for s, _ in meta)
-            if not wire_cell:
-                wire_cell.append(int(wb))
-            if cfg.zero == 0:
-                avg = reduce0(grads)
-                p_out, opt_new = opt_step0(p_local, avg, opt)
-            else:
-                g_leaves = jax.tree.leaves(grads)
-                g_buckets = [flatten_bucket(g_leaves, plan.buckets[b])
-                             for b in plan.order]
-                if cfg.zero == 3:
-                    p_buckets = [squeeze3(x) for x in pstate]
+            sent = jnp.zeros((), jnp.int32)
+            ef_l = jax.tree.map(squeeze3, ef) if ef is not None else None
+            if in_schedule:
+                # compressed payloads ride inside the data-axis schedule:
+                # z0 through the CommPlan topology exchange, z1-z3 through
+                # the compressed ring AR/RS of the ZeRO bucket update;
+                # parameters always travel exact (docs/comm.md)
+                if cfg.zero == 0:
+                    avg, ef_new, sent = comm.exchange(grads, ef_l, key)
+                    p_out, opt_new = opt_step0(p_local, avg, opt)
+                    ef_out = (jax.tree.map(expand3, ef_new)
+                              if ef_new is not None else ef)
                 else:
-                    p_leaves = jax.tree.leaves(p_local)
-                    p_buckets = [flatten_bucket(p_leaves, plan.buckets[b])
+                    g_leaves = jax.tree.leaves(grads)
+                    if ef_l is not None:
+                        e_leaves = jax.tree.leaves(ef_l)
+                        cin = [g.astype(jnp.float32) + gain * e
+                               for g, e in zip(g_leaves, e_leaves)]
+                    else:
+                        cin = g_leaves
+                    g_buckets = [flatten_bucket(cin, plan.buckets[b])
                                  for b in plan.order]
-                opt_l = opt
-                if opt is not None:
-                    opt_l = {"m": [squeeze3(x) for x in opt["m"]],
-                             "v": [squeeze3(x) for x in opt["v"]],
-                             "t": opt["t"]}
-                new_buckets, opt_new = zero_update(p_buckets, g_buckets,
-                                                   opt_l)
-                if opt_new is not None:
-                    opt_new = {"m": [expand3(x) for x in opt_new["m"]],
-                               "v": [expand3(x) for x in opt_new["v"]],
-                               "t": opt_new["t"]}
-                if cfg.zero == 3:
-                    p_out = [expand3(x) for x in new_buckets]
+                    p_buckets, opt_l = zero_buckets(pstate, opt, p_local)
+                    resids: List[Any] = []
+                    nz_acc: List[Any] = []
+                    keybox = [key]
+
+                    def grad_reduce(padded, _j):
+                        keybox[0], sub = jax.random.split(keybox[0])
+                        if cfg.zero == 1:
+                            red, res, nz = compressed_allreduce(
+                                padded, DATA, "ring", codec, sub)
+                            shard = shard_of_flat(red, DATA)
+                        else:
+                            shard, res, nz = compressed_reduce_scatter(
+                                padded, DATA, codec, sub)
+                        resids.append(res)
+                        nz_acc.append(nz)
+                        return shard
+
+                    new_buckets, opt_new = zero_update(
+                        p_buckets, g_buckets, opt_l,
+                        grad_reduce=grad_reduce)
+                    sent = sum(nz_acc, sent)
+                    p_out, opt_new = zero_unpack(new_buckets, opt_new, opt)
+                    if ef_l is not None:
+                        res_list: List[Any] = [None] * len(meta)
+                        for res, b in zip(resids, plan.order):
+                            _scatter_flat(res[:plan.bucket_sizes[b]],
+                                          plan.buckets[b], meta, res_list)
+                        res_tree = jax.tree.unflatten(treedef, res_list)
+                        # telescoping EF: (g+e) - (g+gain*e) + hop residual
+                        ef_new = jax.tree.map(
+                            lambda e, r: (1.0 - gain) * e
+                            + r.astype(jnp.float32), ef_l, res_tree)
+                        ef_out = jax.tree.map(expand3, ef_new)
+                    else:
+                        ef_out = ef
+            else:
+                if comp.method != "none":
+                    grads, ef_new, _wb = comp.roundtrip(grads, ef_l, key)
+                    ef_out = (jax.tree.map(expand3, ef_new)
+                              if ef_new is not None else ef)
                 else:
-                    out: List[Any] = [None] * len(meta)
-                    for flat, b in zip(new_buckets, plan.order):
-                        _scatter_flat(flat, plan.buckets[b], meta, out)
-                    p_out = jax.tree.unflatten(treedef, out)
-            return p_out, opt_new if opt is not None else opt, ef_out, \
-                loss[None]
+                    ef_out = ef
+                if cfg.zero == 0:
+                    avg = reduce0(grads)
+                    p_out, opt_new = opt_step0(p_local, avg, opt)
+                else:
+                    g_leaves = jax.tree.leaves(grads)
+                    g_buckets = [flatten_bucket(g_leaves, plan.buckets[b])
+                                 for b in plan.order]
+                    p_buckets, opt_l = zero_buckets(pstate, opt, p_local)
+                    new_buckets, opt_new = zero_update(p_buckets, g_buckets,
+                                                       opt_l)
+                    p_out, opt_new = zero_unpack(new_buckets, opt_new, opt)
+            return p_out, opt_new, ef_out, loss[None], expand3(sent)
 
         params_spec, opt_spec, ef_spec = self._state_specs()
         fn = shard_map(
             body, mesh=self.mesh,
             in_specs=(params_spec, opt_spec, ef_spec, P(DATA), P()),
-            out_specs=(params_spec, opt_spec, ef_spec, P(DATA)),
+            out_specs=(params_spec, opt_spec, ef_spec, P(DATA),
+                       P(DATA, STAGE, TENSOR)),
             check_vma=False)
-        return jax.jit(fn), wire_cell, act_cell
+        return jax.jit(fn), act_cell
 
-    def step(self, st, batches: Callable[[int, int], Any], t: int):
+    def _modeled_event_bytes(self) -> int:
+        """The compressor's analytic per-device push accounting over the
+        local block structure — recomputed from the plan (host side),
+        never captured from a step-0 trace."""
+        if self._dev_event_bytes is None:
+            self._dev_event_bytes = modeled_event_bytes(
+                self.cfg.compressor, self.plan.local_example)
+        return self._dev_event_bytes
+
+    def _step_bsp(self, st, batches, t):
         cfg = self.cfg
         if self._step_fn is None:
-            self._step_fn, self._wire_cell, self._act_cell = \
-                self._build_step()
+            self._step_fn, self._act_cell = self._build_step()
+            self._measured_tx = self._measured_step_tx_bytes()
         D = cfg.mesh.data
         per = [batches(t, w) for w in range(D)]
         if self.staged and cfg.mesh.stage > 1:
@@ -437,16 +596,38 @@ class HybridEngine:
                     f"{self.plan.micro} micro-batches")
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
         st["rng"], sub = jax.random.split(st["rng"])
-        params, opt, ef, losses = self._step_fn(st["params"], st["opt"],
-                                                st["ef"], batch, sub)
+        params, opt, ef, losses, sent = self._step_fn(
+            st["params"], st["opt"], st["ef"], batch, sub)
         st.update(params=params, opt=opt, ef=ef)
-        st["wire"] += self._wire_cell[0] * cfg.mesh.size
-        self._wire_total = st["wire"]
+        if cfg.wire == "measured":
+            # per bucket from the plan, every step: static plane bytes of
+            # the data-axis schedule on every device + dgc's traced
+            # per-step sparse payload
+            st["wire"] += self._measured_tx * cfg.mesh.size \
+                + SPARSE_ELEM_BYTES * int(np.sum(np.asarray(sent)))
+        else:
+            st["wire"] += self._modeled_event_bytes() * cfg.mesh.size
         ev = dict(step=t, loss=float(np.mean(np.asarray(losses))),
                   max_staleness=0)
         return st, [ev]
 
+    def step(self, st, batches: Callable[[int, int], Any], t: int):
+        sync = self.cfg.sync
+        if sync == "bsp":
+            st, ev = self._step_bsp(st, batches, t)
+        elif sync == "ssp":
+            st, ev = self._step_async(st, batches, t, self.cfg.staleness)
+        elif sync == "asp":
+            st, ev = self._step_async(st, batches, t, None)
+        else:
+            st, ev = self._step_sma(st, batches, t)
+        self._wire_total = st["wire"]
+        return st, ev
+
     def finalize(self, st):
+        if self.cfg.sync == "sma":
+            return jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                                st["replicas"])
         if self.cfg.zero == 3:
             return self._materialize_params(
                 [np.asarray(x) for x in st["params"]])
@@ -454,6 +635,141 @@ class HybridEngine:
 
     def wire_bytes(self) -> int:
         return self._wire_total
+
+    # -------------------------------------- async / sma over the data axis
+    def effective_periods(self) -> Tuple[int, ...]:
+        """Per data-slot speed schedule with straggler slowdowns folded
+        in — the same rule as ``ElasticWorkerSet.effective_periods``."""
+        return tuple(max(1, int(round(p * s)))
+                     for p, s in zip(self.periods, self.slowdowns))
+
+    def _slice_blocks(self, pl, t_idx):
+        """This tensor rank's (stage=1) parameter blocks of the full
+        stacked leaves — dynamic role-dim slices per the mesh plan."""
+        plan, T = self.plan, self.cfg.mesh.tensor
+        leaves = jax.tree.leaves(pl)
+        locals_ = jax.tree.leaves(plan.local_example)
+        out = []
+        for leaf, t_dim, lo in zip(leaves, plan.tensor_dims, locals_):
+            if T > 1 and t_dim is not None:
+                m = lo.shape[t_dim]
+                starts = [0] * leaf.ndim
+                starts[t_dim] = t_idx * m
+                leaf = lax.dynamic_slice(leaf, starts, lo.shape)
+            out.append(leaf)
+        return jax.tree.unflatten(self._leaf_meta[0], out)
+
+    def _slot_loss_and_grads(self, pulled, batch):
+        """Per data-slot loss/grads of the staged model at stage=1:
+        tensor-sharded compute inside the slot, full gradients assembled
+        with a tensor-axis psum (outside AD)."""
+        model, T = self.model, self.cfg.mesh.tensor
+        t_idx = lax.axis_index(TENSOR)
+        chunk = jax.tree.leaves(self.plan.local_example)[0].shape[0]
+        tensor_axis = TENSOR if T > 1 else None
+
+        def lloss(pl):
+            blocks = self._slice_blocks(pl, t_idx)
+            xx = model.inputs(batch)
+            for j in range(chunk):
+                xx = model.stage_fn(
+                    jax.tree.map(lambda l: l[j], blocks), xx,
+                    tensor_axis=tensor_axis)
+            return model.readout(xx, batch)
+
+        loss, g = jax.value_and_grad(lloss)(pulled)
+        if T > 1:
+            # each rank's cotangent covers only its role-dim block; the
+            # psum assembles the full gradient, replicated over tensor
+            g = jax.tree.map(lambda x: lax.psum(x, TENSOR), g)
+        return loss, g
+
+    def _build_async_fns(self):
+        cfg = self.cfg
+        comp = cfg.compressor
+
+        def grad_body(pulled, ef, batch, key, fire):
+            pulled = jax.tree.map(lambda x: x[0], pulled)
+            batch = jax.tree.map(lambda x: x[0], batch)
+            key = key[0]
+            fire = fire[0]
+            loss, g = self._slot_loss_and_grads(pulled, batch)
+            if comp.method != "none":
+                ef_w = (jax.tree.map(lambda x: x[0], ef)
+                        if ef is not None else None)
+                g, ef_new, _wb = comp.roundtrip(g, ef_w, key)
+                if ef_new is not None:
+                    ef_out = jax.tree.map(
+                        lambda new, old: jnp.where(fire > 0, new, old),
+                        ef_new, ef_w)
+                    ef_out = jax.tree.map(lambda x: x[None], ef_out)
+                else:
+                    ef_out = ef
+            else:
+                ef_out = ef
+            g = jax.tree.map(lambda x: x[None], g)
+            return loss[None], g, ef_out
+
+        ef_spec = P(DATA) if self._ef_active else P()
+        return jax.jit(shard_map(
+            grad_body, mesh=self.mesh,
+            in_specs=(P(DATA), ef_spec, P(DATA), P(DATA), P(DATA)),
+            out_specs=(P(DATA), P(DATA), ef_spec),
+            check_vma=False))
+
+    def _full_param_event_bytes(self, params_like) -> int:
+        """Per-event modeled bytes of one slot's push: the compressor's
+        accounting over the FULL stacked leaves — exactly what the
+        simulator reports for the same spec, so async hybrid wire
+        accounting cross-validates."""
+        return modeled_event_bytes(self.cfg.compressor, params_like)
+
+    def _step_async(self, st, batches, t, bound: Optional[int]):
+        cfg = self.cfg
+        if self._async_fns is None:
+            self._async_fns = self._build_async_fns()
+            self._event_wire = self._full_param_event_bytes(st["params"])
+        return async_replay_step(
+            st, batches, t, bound, K=cfg.mesh.data,
+            compressor=cfg.compressor, grad_fn=self._async_fns,
+            apply_fn=self._apply, ps_apply=None, lr=cfg.lr,
+            event_wire=self._event_wire,
+            eff_periods=self.effective_periods())
+
+    def _build_sma(self):
+        cfg = self.cfg
+
+        def sma_body(replicas, batch):
+            r = jax.tree.map(lambda x: x[0], replicas)
+            batch = jax.tree.map(lambda x: x[0], batch)
+            loss, g = self._slot_loss_and_grads(r, batch)
+            center = jax.tree.map(lambda x: lax.pmean(x, DATA), r)
+            mu = cfg.sma_mu
+            new_r = jax.tree.map(
+                lambda rr, zz, gg: rr - cfg.lr * gg - mu * (rr - zz),
+                r, center, g)
+            return (jax.tree.map(lambda x: x[None], new_r), loss[None])
+
+        return jax.jit(shard_map(
+            sma_body, mesh=self.mesh,
+            in_specs=(P(DATA), P(DATA)),
+            out_specs=(P(DATA), P(DATA)),
+            check_vma=False))
+
+    def _step_sma(self, st, batches, t):
+        cfg = self.cfg
+        D = cfg.mesh.data
+        if self._sma_fn is None:
+            self._sma_fn = self._build_sma()
+            self._event_wire = self._full_param_event_bytes(
+                jax.tree.map(lambda x: x[0], st["replicas"]))
+        per = [batches(t, w) for w in range(D)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        st["replicas"], losses = self._sma_fn(st["replicas"], batch)
+        st["wire"] += self._event_wire * D
+        ev = dict(step=t, loss=float(np.mean(np.asarray(losses))),
+                  max_staleness=0)
+        return st, [ev]
 
     # ------------------------------------------------------------- metrics
     def per_device_state_bytes(self, st) -> Dict[str, int]:
@@ -465,6 +781,11 @@ class HybridEngine:
         stacked_div = (S * T) if self.staged else 1
         shard_div = D * S * T
         out = {"params": 0, "opt": 0, "ef": 0}
+        if cfg.sync == "sma":
+            out["params"] = sum(np.asarray(x).nbytes // (D * stacked_div)
+                                for x in jax.tree.leaves(st["replicas"]))
+            out["total"] = out["params"]
+            return out
         if cfg.zero == 3:
             out["params"] = sum(np.asarray(x).nbytes // shard_div
                                 for x in st["params"])
@@ -487,13 +808,15 @@ class HybridEngine:
     def extra_metrics(self) -> Dict[str, Any]:
         cfg, plan = self.cfg, self.plan
         m: Dict[str, Any] = dict(
-            mesh=cfg.mesh.spec(), zero=cfg.zero, optimizer=cfg.optimizer)
-        if plan is not None:
-            wb = self._wire_cell[0] if self._wire_cell else None
+            mesh=cfg.mesh.spec(), zero=cfg.zero, optimizer=cfg.optimizer,
+            wire_mode=cfg.wire)
+        if plan is not None and cfg.sync == "bsp":
             m["modeled_data_bytes_per_dev"] = wire_bytes_per_device(
-                plan, cfg.zero, grad_bytes=wb)
+                plan, cfg.zero, grad_bytes=self._modeled_event_bytes())
             m["analytic_state_bytes"] = state_bytes_per_device(
                 plan, cfg.zero, cfg.optimizer)
+            if self._measured_tx is not None:
+                m["measured_step_tx_bytes"] = self._measured_tx
             if self._act_cell and cfg.mesh.stage > 1:
                 ticks = gpipe_ticks(cfg.mesh.stage, plan.micro)
                 m["modeled_pipeline_bytes_per_dev"] = \
@@ -542,6 +865,10 @@ class HybridEngine:
         model and survives).  ZeRO shards are re-cut over the new data
         axis; survivor data slots keep their EF residuals."""
         cfg, plan = self.cfg, self.plan
+        if cfg.sync != "bsp":
+            raise ValueError(
+                f"sync={cfg.sync!r} hybrid cells do not reshard yet "
+                "(async/sma over a mesh is a fixed-geometry run)")
         ts = cfg.mesh.tensor * cfg.mesh.stage
         if new_workers < ts or new_workers % ts:
             raise ValueError(
@@ -603,12 +930,19 @@ class HybridEngine:
         self.plan = dataclasses.replace(
             old_plan, mesh=new_mesh,
             shard_sizes=[-(-n // new_d) for n in old_plan.bucket_sizes])
-        self._step_fn = None
-        self._wire_cell, self._act_cell = [], []
+        self.periods = tuple(default_periods(new_d))
+        self._step_fn, self._async_fns, self._sma_fn = None, None, None
+        self._act_cell = []
+        self._dev_event_bytes, self._measured_tx = None, None
         return st
 
     def export_state(self, st) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         cfg = self.cfg
+        if cfg.sync != "bsp":
+            raise ValueError(
+                f"sync={cfg.sync!r} hybrid cells do not snapshot yet; "
+                "use the flat DeviceEngine (trivial mesh) for elastic "
+                "async runs")
         arrays = {"params": st["params"], "opt": st["opt"], "ef": st["ef"],
                   "rng": st["rng"]}
         meta = dict(backend="hybrid", mesh=cfg.mesh.spec(), zero=cfg.zero,

@@ -75,25 +75,33 @@ def make_zero_bucket_update(plan: MeshPlan, zero: int, optimizer: str,
                             lr: float, axis: str = "data") -> Callable:
     """Build the per-step ZeRO-1/2/3 update over ``plan``'s buckets.
 
-    Returns ``update(p_buckets, g_buckets, opt) -> (new_p_buckets,
-    new_opt)`` where the bucket lists follow ``plan.order`` issue order;
-    for z1/z2 ``p_buckets`` are full flat buckets in and out, for z3 they
-    are per-rank shards in and out (the engine owns the gather-for-compute
-    side).  ``opt`` is the sharded optimizer state ({"m","v","t"} of
-    per-bucket shards for adamw, None for sgd).  Gradient buckets are
-    summed over ``axis`` and divided by the axis size (mean semantics,
-    matching the allreduce path)."""
+    Returns ``update(p_buckets, g_buckets, opt, grad_reduce=None) ->
+    (new_p_buckets, new_opt)`` where the bucket lists follow
+    ``plan.order`` issue order; for z1/z2 ``p_buckets`` are full flat
+    buckets in and out, for z3 they are per-rank shards in and out (the
+    engine owns the gather-for-compute side).  ``opt`` is the sharded
+    optimizer state ({"m","v","t"} of per-bucket shards for adamw, None
+    for sgd).  Gradient buckets are summed over ``axis`` and divided by
+    the axis size (mean semantics, matching the allreduce path).
+
+    ``grad_reduce(padded_flat, bucket_pos) -> my_shard_sum`` replaces the
+    default full-precision psum / reduce-scatter with a caller-supplied
+    exchange — the hook the hybrid engine uses to route the gradient push
+    through the compressed-payload schedules of ``repro.comm`` under
+    ``wire="measured"`` (parameters still travel exact)."""
     if zero not in (1, 2, 3):
         raise ValueError(f"zero={zero} (bucket update is for levels 1-3)")
     opt_step = make_optimizer_step(optimizer, lr)
     n_data = plan.mesh.data
     sizes = [plan.bucket_sizes[b] for b in plan.order]
 
-    def update(p_buckets, g_buckets, opt):
+    def update(p_buckets, g_buckets, opt, grad_reduce=None):
         g_shards = []
-        for g, n_b in zip(g_buckets, sizes):
+        for j, (g, n_b) in enumerate(zip(g_buckets, sizes)):
             padded, _ = pad_to_multiple(g, n_data)
-            if zero == 1:
+            if grad_reduce is not None:
+                g_shards.append(grad_reduce(padded, j))
+            elif zero == 1:
                 # full allreduce, then slice my shard (grads materialize
                 # everywhere — ZeRO-1 only shards the *optimizer* state)
                 g_shards.append(shard_of_flat(lax.psum(padded, axis), axis))

@@ -8,9 +8,9 @@ architecture cross-product of the survey's Table 1:
 
   sync=bsp        every step: per-worker gradients on the worker's batch
                   shard, compressed with per-worker error-feedback state,
-                  then reduced bucket-by-bucket in ``comm_scheduler``
-                  TicTac order — one plan shared by the executed schedule
-                  and the analytic timeline, so they cannot drift apart.
+                  exchanged bucket-by-bucket in ``CommPlan`` issue order —
+                  one plan shared by the executed schedule and the
+                  analytic timeline, so they cannot drift apart.
   sync=ssp | asp  the *simulator's own deterministic staleness schedule*
                   replayed on devices: each tick, every worker computes its
                   gradient against its stale pulled parameters in parallel
@@ -19,8 +19,12 @@ architecture cross-product of the survey's Table 1:
                   every periods[w] ticks; SSP blocks a worker more than
                   ``staleness`` clocks ahead).  Losses cross-validate
                   against ``SimSyncEngine`` on identical batch streams.
-  arch=allreduce  decentralized: bucketed topology-explicit allreduce
-                  (``core.allreduce.TOPOLOGIES``), update replicated.
+  sync=sma        CROSSBOW synchronous model averaging: per-worker
+                  replicas live sharded, the center is a ``CommPlan``
+                  exchange of the replicas themselves, and each replica
+                  is pulled toward it (cross-validated vs the simulator).
+  arch=allreduce  decentralized: bucketed topology-explicit exchange
+                  (``repro.comm``), update replicated.
   arch=ps         centralized: the ZeRO-style reduce-scatter / shard-update
                   / all-gather path of ``core.parameter_server`` — each
                   worker plays parameter server for its 1/n shard.  Under
@@ -29,11 +33,22 @@ architecture cross-product of the survey's Table 1:
                   push is a per-event reduce-scatter (no bucketing — one
                   gradient per event).
 
-Wire-byte accounting comes from the compressor's own ``roundtrip`` (what
-each worker would transmit per event) and is by construction identical for
-both architectures (RS + AG moves the same bytes as a ring allreduce);
-the modeled iteration timeline comes from ``comm_scheduler
-.schedule_overlap`` over the very bucket list executed on device.
+Wire accounting follows the config's ``wire`` mode (docs/comm.md):
+
+  wire=modeled    compression is a per-worker ``roundtrip`` before a
+                  full-precision exchange, and bytes are the compressor's
+                  analytic accounting — identical to the simulator's, so
+                  the two backends stay cross-validatable.
+  wire=measured   the ``CommPlan`` schedule itself carries the encoded
+                  segment payloads (encode → ppermute the planes →
+                  decode-accumulate, per-worker EF inside the schedule)
+                  and bytes are counted from those planes — recomputed
+                  per bucket per step, so dgc's moving threshold shows up
+                  in the accounting instead of a cached step-0 value.
+
+``bsp/*/none`` is bit-identical under both modes (nothing to encode).
+The modeled iteration timeline comes from the very bucket list executed
+on device (``CommPlan.modeled_timeline``).
 
 ``DataParallelEngine`` is the deprecated PR-1 alias (BSP/allreduce only by
 contract, though it accepts the extended config); construct engines via
@@ -50,11 +65,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.allreduce import TOPOLOGIES
+from repro.comm.codecs import SPARSE_ELEM_BYTES
+from repro.comm.plan import CommPlan, plan_buckets, scatter_flat
 from repro.core.collectives import axis_size, shard_map
-from repro.core.comm_scheduler import (LayerCost, LinkModel, bucketize,
-                                       random_order, schedule_no_overlap,
-                                       schedule_overlap, tictac_order)
+from repro.core.comm_scheduler import LayerCost, LinkModel
 from repro.core.compression import Compressor, EF_METHODS
 from repro.core.parameter_server import make_ps_step, sgd_update_fn
 from repro.core.sync import (ElasticWorkerSet, default_periods,
@@ -63,15 +77,20 @@ from repro.elastic.backup import participation_weights
 
 AXIS = "workers"
 
-DEVICE_SYNCS = ("bsp", "ssp", "asp")   # device-executable sync models
+DEVICE_SYNCS = ("bsp", "ssp", "asp", "sma")   # device-executable sync models
 ARCHS = ("allreduce", "ps")            # §3.3.1 architectures
+WIRE_MODES = ("modeled", "measured")   # wire-byte accounting (docs/comm.md)
+
+# the shared plan keyword set every engine forwards to CommPlan.plan
+_plan_buckets = plan_buckets           # back-compat alias (pre-refactor name)
+_scatter_flat = scatter_flat           # back-compat alias
 
 
 @dataclasses.dataclass(frozen=True)
 class DataParallelConfig:
     num_workers: int = 8
     lr: float = 0.1
-    sync: str = "bsp"                # bsp | ssp | asp (sma is sim-only)
+    sync: str = "bsp"                # bsp | ssp | asp | sma
     arch: str = "allreduce"          # allreduce | ps
     staleness: int = 3               # SSP bound s
     # deterministic worker speeds: worker i finishes every periods[i] ticks
@@ -87,50 +106,9 @@ class DataParallelConfig:
     link: LinkModel = LinkModel()
     # modeled backward-compute seconds per gradient byte (timeline model)
     back_s_per_byte: float = 2e-12
+    wire: str = "modeled"            # modeled | measured (docs/comm.md)
+    sma_mu: float = 0.1              # SMA correction strength
     seed: int = 0
-
-
-def _bucket_order(n: int, order: str, layers: Sequence[LayerCost],
-                  seed: int) -> List[int]:
-    if order == "tictac":
-        return tictac_order(layers)
-    if order == "random":
-        return random_order(layers, seed)
-    if order == "layer":
-        return list(range(n))
-    raise ValueError(order)
-
-
-def _plan_buckets(params_example, bucket_mb: float, order: str,
-                  back_s_per_byte: float, seed: int
-                  ) -> Tuple[List[List[int]], List[int], List[LayerCost]]:
-    """Fuse gradient leaves (backward = reverse-pytree order) into buckets
-    of ~bucket_mb and choose the transfer issue order.  This single plan is
-    shared by the executed schedule (both architectures) and the analytic
-    timeline model."""
-    leaves = jax.tree.leaves(params_example)
-    layers = [LayerCost(f"g{i}", back_s_per_byte * x.size * 4, x.size * 4)
-              for i, x in enumerate(leaves)]
-    fused = bucketize(layers, bucket_mb * 1e6)
-    buckets = [[int(nm[1:]) for nm in b.name.split("+")] for b in fused]
-    order_idx = _bucket_order(len(fused), order, fused, seed)
-    return buckets, order_idx, fused
-
-
-def _leaf_meta(params_example):
-    return (jax.tree.structure(params_example),
-            [(x.shape, x.dtype) for x in jax.tree.leaves(params_example)])
-
-
-def _scatter_flat(flat, idxs, leaf_shapes, out):
-    """Split a fused bucket vector back into its leaves (into ``out``)."""
-    off = 0
-    for i in idxs:
-        shape, dtype = leaf_shapes[i]
-        size = int(np.prod(shape)) if shape else 1
-        out[i] = flat[off:off + size].reshape(shape).astype(dtype)
-        off += size
-    return out
 
 
 def make_bucketed_allreduce(params_example, topology: str = "ring",
@@ -140,26 +118,18 @@ def make_bucketed_allreduce(params_example, topology: str = "ring",
     """Standalone grads->grads mean-allreduce for use inside ``shard_map``
     (e.g. as ``make_train_step(..., reduce_fn=...)``): leaves fused into
     ~bucket_mb buckets (backward order), issued in the chosen transfer
-    order, each reduced with the topology-explicit schedule."""
-    reduce_leaf = TOPOLOGIES[topology]
-    buckets, order_idx, fused = _plan_buckets(
-        params_example, bucket_mb, order, back_s_per_byte, seed)
-    treedef, leaf_shapes = _leaf_meta(params_example)
+    order, each reduced with the topology-explicit schedule.  Thin
+    wrapper over ``CommPlan`` (exact full-precision path)."""
+    plan = CommPlan.plan(params_example, axis=axis, n=1, topology=topology,
+                         bucket_mb=bucket_mb, order=order,
+                         back_s_per_byte=back_s_per_byte, seed=seed)
 
     def reduce_grads(grads):
-        leaves = jax.tree.leaves(grads)
-        n = axis_size(axis)
-        out: List[Any] = [None] * len(leaves)
-        for b in order_idx:                   # the executed schedule
-            idxs = buckets[b]
-            flat = jnp.concatenate(
-                [leaves[i].astype(jnp.float32).reshape(-1) for i in idxs])
-            red = reduce_leaf(flat, axis) / n
-            _scatter_flat(red, idxs, leaf_shapes, out)
-        return jax.tree.unflatten(treedef, out)
+        return plan.reduce_grads(grads)
 
-    reduce_grads.fused_layers = fused
-    reduce_grads.order = order_idx
+    reduce_grads.fused_layers = plan.fused
+    reduce_grads.order = plan.order
+    reduce_grads.plan = plan
     return reduce_grads
 
 
@@ -174,9 +144,11 @@ def make_bucketed_ps_update(params_example, lr: float,
     gradient, SGD-update only my 1/n shard (the "server" work, ZeRO-style),
     and all-gather the updated shard back.  Traffic per device equals the
     ring allreduce; update FLOPs drop by n."""
-    buckets, order_idx, fused = _plan_buckets(
+    buckets, order_idx, fused = plan_buckets(
         params_example, bucket_mb, order, back_s_per_byte, seed)
-    treedef, leaf_shapes = _leaf_meta(params_example)
+    treedef = jax.tree.structure(params_example)
+    leaf_shapes = [(tuple(x.shape), x.dtype)
+                   for x in jax.tree.leaves(params_example)]
 
     def ps_update(params, grads):
         n = axis_size(axis)
@@ -193,7 +165,7 @@ def make_bucketed_ps_update(params_example, lr: float,
         new_pb, _ = step(pb, gb, None)
         out: List[Any] = [None] * len(p_leaves)
         for flat, b in zip(new_pb, order_idx):
-            _scatter_flat(flat, buckets[b], leaf_shapes, out)
+            scatter_flat(flat, buckets[b], leaf_shapes, out)
         return jax.tree.unflatten(treedef, out)
 
     ps_update.fused_layers = fused
@@ -237,8 +209,71 @@ def make_sharded_train_step(train_step: Callable, mesh: Mesh,
     return jax.jit(fn)
 
 
+def async_replay_step(st, batches, t, bound: Optional[int], *, K: int,
+                      compressor: Compressor, grad_fn: Callable,
+                      apply_fn: Callable, ps_apply: Optional[Callable],
+                      lr: float, event_wire: int,
+                      eff_periods: Tuple[int, ...]):
+    """Replay the simulator's deterministic tick schedule on devices —
+    shared by ``DeviceEngine`` (flat worker axis) and ``HybridEngine``
+    (the data axis of a mesh).  Gradient compute for the whole worker set
+    runs data-parallel via ``grad_fn(pulled_stack, ef, batch, keys,
+    fire)``; the tick's firing events then apply in the simulator's
+    worker order (each pushing through the configured architecture)."""
+    events = []
+    while st["updates"] - st["updates_base"] < \
+            (t + 1 - st["step_base"]) * K:
+        st["tick"] += 1
+        # the same deterministic schedule the simulator executes
+        firing = firing_schedule(st["tick"], eff_periods,
+                                 st["batch_idx"], bound)
+        if not firing:
+            continue
+        fire = np.zeros((K,), np.float32)
+        fire[firing] = 1.0
+        # a worker's batch index only advances at its own events, so
+        # its batch is cached until it fires (invalidated below)
+        for w in range(K):
+            if st["batch_cache"][w] is None:
+                st["batch_cache"][w] = batches(st["batch_idx"][w], w)
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *st["batch_cache"])
+        # mirror the simulator's rng stream: one split per firing event
+        keys = [jax.random.PRNGKey(0)] * K
+        if compressor.method != "none":
+            for w in firing:
+                st["rng"], sub = jax.random.split(st["rng"])
+                keys[w] = sub
+        pulled_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *st["pulled"])
+        losses, grads, st["ef"] = grad_fn(
+            pulled_stack, st["ef"], batch, jnp.stack(keys),
+            jnp.asarray(fire))
+        for w in firing:
+            staleness = st["server_ver"] - st["pulled_ver"][w]
+            if ps_apply is not None:
+                onehot = np.zeros((K,), np.float32)
+                onehot[w] = 1.0
+                st["params"] = ps_apply(st["params"], grads,
+                                        jnp.asarray(onehot))
+            else:
+                g_w = jax.tree.map(lambda x: x[w], grads)
+                st["params"] = apply_fn(st["params"], g_w, lr)
+            st["server_ver"] += 1
+            st["updates"] += 1
+            st["pulled"][w] = st["params"]   # pull = reference rebind
+            st["pulled_ver"][w] = st["server_ver"]
+            st["batch_idx"][w] += 1
+            st["batch_cache"][w] = None
+            st["wire"] += event_wire
+            events.append(dict(step=st["updates"],
+                               loss=float(losses[w]),
+                               max_staleness=staleness, worker=w))
+    return st, events
+
+
 class DeviceEngine(ElasticWorkerSet):
-    """Executable {bsp,ssp,asp} × {allreduce,ps} over N host devices;
+    """Executable {bsp,ssp,asp,sma} × {allreduce,ps} over N host devices;
     drop-in comparable with ``SimSyncEngine``: ``init / step / finalize``
     plus a composed ``run`` with the same signature and the same
     ``(params, history, wire_bytes)`` triple."""
@@ -248,9 +283,18 @@ class DeviceEngine(ElasticWorkerSet):
         if cfg.sync not in DEVICE_SYNCS:
             raise ValueError(
                 f"sync={cfg.sync!r} is not device-executable "
-                f"(supported: {DEVICE_SYNCS}; sma is simulated-only)")
+                f"(supported: {DEVICE_SYNCS})")
         if cfg.arch not in ARCHS:
             raise ValueError(f"arch={cfg.arch!r} (supported: {ARCHS})")
+        if cfg.wire not in WIRE_MODES:
+            raise ValueError(f"wire={cfg.wire!r} (supported: {WIRE_MODES})")
+        if cfg.sync == "sma":
+            if cfg.compressor.method != "none":
+                raise ValueError("sma exchanges replicas, not gradients — "
+                                 "it has no compression path")
+            if cfg.arch != "allreduce":
+                raise ValueError("sma is a decentralized exchange; use "
+                                 "arch='allreduce'")
         if cfg.backup and cfg.sync != "bsp":
             raise ValueError("backup workers compose with bsp only "
                              "(async modes have no round to drop from)")
@@ -270,7 +314,9 @@ class DeviceEngine(ElasticWorkerSet):
         self._dropped = 0
         self._init_detector(cfg.detect, cfg.num_workers)
         self._step_fn = None
-        self._wire_cell: List[int] = []
+        self._sma_fn = None
+        self._plan: Optional[CommPlan] = None
+        self._event_wire_cache: Optional[int] = None
         self._async_fns = None
         self._wire_total = 0
         # same replicated apply as the simulator uses (allreduce arch)
@@ -282,52 +328,52 @@ class DeviceEngine(ElasticWorkerSet):
         return self.cfg.compressor.method in EF_METHODS
 
     # ------------------------------------------------------------- planning
+    def _ensure_plan(self, params_example) -> CommPlan:
+        """The engine's single ``CommPlan`` — built once per (params ×
+        worker-count) and shared by the executed schedule, the timeline
+        model, and both wire-accounting modes.  Invalidated on reshard."""
+        if self._plan is None:
+            cfg = self.cfg
+            self._plan = CommPlan.plan(
+                params_example, axis=AXIS, n=cfg.num_workers,
+                topology=cfg.topology, compressor=cfg.compressor,
+                wire=cfg.wire, bucket_mb=cfg.bucket_mb, order=cfg.order,
+                back_s_per_byte=cfg.back_s_per_byte, seed=cfg.seed,
+                link=cfg.link)
+        return self._plan
+
     def _bucket_plan(self, params) -> Tuple[List[List[int]], List[int],
                                             List[LayerCost]]:
-        return _plan_buckets(params, self.cfg.bucket_mb, self.cfg.order,
-                             self.cfg.back_s_per_byte, self.cfg.seed)
+        plan = self._ensure_plan(params)
+        return plan.buckets, plan.order, plan.fused
 
     def modeled_timeline(self, params) -> Dict[str, float]:
         """Iteration-time projections for the exact bucket plan this engine
         executes — the benchmark's no-overlap vs overlap comparison."""
-        _, order, fused = self._bucket_plan(params)
-        return {
-            "no_overlap_s": schedule_no_overlap(fused, self.cfg.link),
-            "overlap_s": schedule_overlap(fused, self.cfg.link, order),
-            "n_buckets": len(fused),
-        }
+        return self._ensure_plan(params).modeled_timeline()
 
     def per_event_wire_bytes(self, params) -> int:
-        """Bytes one worker puts on the wire per gradient push (compressor
-        accounting; shape-static).  Identical for both architectures."""
-        comp = self.cfg.compressor
-        state = comp.init_state(params)
-        zeros = jax.tree.map(jnp.zeros_like, params)
-        _, _, wb = comp.roundtrip(zeros, state, jax.random.PRNGKey(0))
-        return int(wb)
+        """Modeled bytes one worker puts on the wire per gradient push
+        (compressor accounting; shape-static).  Identical for both
+        architectures and to the simulator's accounting."""
+        return self._ensure_plan(params).modeled_event_bytes(params)
 
     def wire_bytes_per_step(self, params) -> int:
-        """Bytes per BSP step summed over workers, like the simulator."""
+        """Modeled bytes per BSP step summed over workers, like the
+        simulator."""
         return self.per_event_wire_bytes(params) * self.cfg.num_workers
 
     # --------------------------------------------------------- bsp stepping
     def _build_step(self, params_example):
         cfg = self.cfg
         comp = cfg.compressor
+        plan = self._ensure_plan(params_example)
+        in_schedule = plan.in_schedule
         bucketed_ps = (make_bucketed_ps_update(
             params_example, cfg.lr, bucket_mb=cfg.bucket_mb,
             order=cfg.order, back_s_per_byte=cfg.back_s_per_byte,
-            seed=cfg.seed) if cfg.arch == "ps" else None)
-        bucketed_allreduce = (make_bucketed_allreduce(
-            params_example, topology=cfg.topology, bucket_mb=cfg.bucket_mb,
-            order=cfg.order, back_s_per_byte=cfg.back_s_per_byte,
-            seed=cfg.seed) if cfg.arch != "ps" else None)
-        # compressor wire counts are shape-static Python ints at trace
-        # time; capture them host-side rather than threading them through
-        # the device as int32 (which overflows past 2 GiB/step); the entry
-        # is per worker-event — the host multiplies by the participant
-        # count (all K, or K-k under backup)
-        wire_cell: List[int] = []
+            seed=cfg.seed) if cfg.arch == "ps" and not in_schedule
+            else None)
 
         def sharded_step(params, ef, batch, rng, weight):
             # params replicated; ef/batch/rng/weight carry a worker axis.
@@ -341,20 +387,32 @@ class DeviceEngine(ElasticWorkerSet):
             rng = rng[0]
             wt = weight[0]
             loss, grads = self.grad_fn(params, batch)
-            if comp.method != "none":
-                grads, ef_new, wb = comp.roundtrip(grads, ef_in, rng)
+            sent = jnp.zeros((), jnp.int32)
+            if in_schedule:
+                # compressed payloads ride *inside* the schedule: the
+                # CommPlan encodes each bucket's compensated gradient,
+                # permutes the planes, and returns the per-worker hop
+                # residuals as the new EF contribution (docs/comm.md)
+                g_in = jax.tree.map(lambda x: x * wt, grads)
+                if cfg.arch == "ps":
+                    new_params, ef_new, sent = plan.ps_exchange(
+                        params, g_in, ef_in, rng, cfg.lr)
+                else:
+                    avg, ef_new, sent = plan.exchange(g_in, ef_in, rng)
+                    new_params = jax.tree.map(
+                        lambda p, g: p - cfg.lr * g, params, avg)
             else:
-                ef_new = ef_in
-                wb = sum(int(x.size) * 4 for x in jax.tree.leaves(grads))
-            if not wire_cell:
-                wire_cell.append(int(wb))
-            grads = jax.tree.map(lambda x: x * wt, grads)
-            if cfg.arch == "ps":
-                new_params = bucketed_ps(params, grads)
-            else:
-                avg = bucketed_allreduce(grads)
-                new_params = jax.tree.map(lambda p, g: p - cfg.lr * g,
-                                          params, avg)
+                if comp.method != "none":
+                    grads, ef_new, _wb = comp.roundtrip(grads, ef_in, rng)
+                else:
+                    ef_new = ef_in
+                grads = jax.tree.map(lambda x: x * wt, grads)
+                if cfg.arch == "ps":
+                    new_params = bucketed_ps(params, grads)
+                else:
+                    avg = plan.reduce_grads(grads)
+                    new_params = jax.tree.map(lambda p, g: p - cfg.lr * g,
+                                              params, avg)
             if ef_new is not None:
                 ef_out = jax.tree.map(
                     lambda new, old: jnp.where(wt > 0, new, old),
@@ -362,23 +420,30 @@ class DeviceEngine(ElasticWorkerSet):
                 ef_out = jax.tree.map(lambda x: x[None], ef_out)
             else:
                 ef_out = ef
-            return (new_params, ef_out, loss[None])
+            return (new_params, ef_out, loss[None], sent[None])
 
         ef_spec = P(AXIS) if self._ef_active else P()
         fn = shard_map(sharded_step, mesh=self.mesh,
                        in_specs=(P(), ef_spec, P(AXIS), P(AXIS), P(AXIS)),
-                       out_specs=(P(), ef_spec, P(AXIS)),
+                       out_specs=(P(), ef_spec, P(AXIS), P(AXIS)),
                        check_vma=False)
-        return jax.jit(fn), wire_cell
+        return jax.jit(fn)
+
+    def _event_wire_bytes(self, params) -> int:
+        if self._event_wire_cache is None:
+            self._event_wire_cache = self.per_event_wire_bytes(params)
+        return self._event_wire_cache
 
     def _step_bsp(self, st, batches, t):
-        K = self.cfg.num_workers
+        cfg = self.cfg
+        K = cfg.num_workers
         if self._step_fn is None:
-            self._step_fn, self._wire_cell = self._build_step(st["params"])
+            self._step_fn = self._build_step(st["params"])
+        plan = self._plan
         # backup workers: drop the k slowest — scheduled ranking, or the
         # measured step-time EMA once detection warms up (the same shared
         # backup_drop rule the simulator applies)
-        drop = self.backup_drop(self.cfg.backup)
+        drop = self.backup_drop(cfg.backup)
         weights = participation_weights(K, drop)
         if self.detector is not None:
             # per-worker batch fetch is the only per-worker host work in
@@ -393,17 +458,72 @@ class DeviceEngine(ElasticWorkerSet):
             per_worker = [batches(t, w) for w in range(K)]
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_worker)
         st["rng"], *subs = jax.random.split(st["rng"], K + 1)
-        params, ef, losses = self._step_fn(
+        params, ef, losses, sent = self._step_fn(
             st["params"], st["ef"], batch, jnp.stack(subs),
             jnp.asarray(weights))
         st.update(params=params, ef=ef)
-        st["wire"] += self._wire_cell[0] * (K - len(drop))
+        if cfg.wire == "measured":
+            # recomputed per bucket from the plan, every step: the
+            # shape-static plane bytes of the whole schedule plus dgc's
+            # per-step sparse payload (traced sent_elems, all workers)
+            st["wire"] += plan.measured_step_tx_bytes(cfg.arch) * K \
+                + SPARSE_ELEM_BYTES * int(np.sum(np.asarray(sent)))
+        else:
+            st["wire"] += self._event_wire_bytes(st["params"]) \
+                * (K - len(drop))
         self._dropped += len(drop)
         # participant-mean loss, float64 like the simulator's accounting
         part_losses = [float(losses[w]) for w in range(K) if w not in drop]
         ev = dict(step=t, loss=float(np.mean(part_losses)), max_staleness=0)
         if drop:
             ev["dropped"] = sorted(drop)
+        return st, [ev]
+
+    # ------------------------------------------------------------------ sma
+    def _build_sma(self, params_example):
+        cfg = self.cfg
+        plan = self._ensure_plan(params_example)
+
+        def sma_body(replicas, batch):
+            r = jax.tree.map(lambda x: x[0], replicas)
+            batch = jax.tree.map(lambda x: x[0], batch)
+            loss, g = self.grad_fn(r, batch)
+            # the center is a CommPlan exchange of the replicas themselves
+            # (same bucket fusion + issue order as the gradient paths)
+            center = plan.reduce_grads(r)
+            mu = cfg.sma_mu
+            new_r = jax.tree.map(
+                lambda rr, zz, gg: rr - cfg.lr * gg - mu * (rr - zz),
+                r, center, g)
+            return (jax.tree.map(lambda x: x[None], new_r), loss[None])
+
+        fn = shard_map(sma_body, mesh=self.mesh,
+                       in_specs=(P(AXIS), P(AXIS)),
+                       out_specs=(P(AXIS), P(AXIS)),
+                       check_vma=False)
+        return jax.jit(fn)
+
+    def _param_bytes(self, params_like) -> int:
+        return sum(int(np.prod(s) or 1) * 4
+                   for s, _ in self._ensure_plan(params_like).leaf_shapes)
+
+    def _step_sma(self, st, batches, t):
+        cfg = self.cfg
+        K = cfg.num_workers
+        if self._sma_fn is None:
+            self._sma_fn = self._build_sma(
+                jax.tree.map(lambda x: x[0], st["replicas"]))
+        per_worker = [batches(t, w) for w in range(K)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_worker)
+        st["replicas"], losses = self._sma_fn(st["replicas"], batch)
+        if cfg.wire == "measured":
+            st["wire"] += self._plan.measured_step_tx_bytes("allreduce") * K
+        else:
+            # the simulator's accounting: one replica-sized push per worker
+            st["wire"] += self._param_bytes(
+                jax.tree.map(lambda x: x[0], st["replicas"])) * K
+        ev = dict(step=t, loss=float(np.mean(np.asarray(losses))),
+                  max_staleness=0)
         return st, [ev]
 
     # --------------------------------------------------- ssp / asp stepping
@@ -466,68 +586,17 @@ class DeviceEngine(ElasticWorkerSet):
         return grad_fn, ps_apply
 
     def _step_async(self, st, batches, t, bound: Optional[int]):
-        """Replay the simulator's deterministic tick schedule: gradient
-        compute for the whole worker set runs data-parallel on devices;
-        the tick's firing events then apply in the simulator's worker
-        order (each pushing through the configured architecture)."""
         cfg = self.cfg
-        K = cfg.num_workers
-        comp = cfg.compressor
         if self._async_fns is None:
             self._async_fns = self._build_async_fns(st["params"])
             self._event_wire = self.per_event_wire_bytes(st["params"])
         grad_fn, ps_apply = self._async_fns
-        events = []
-        eff_periods = self.effective_periods()   # invariant within a step
-        while st["updates"] - st["updates_base"] < \
-                (t + 1 - st["step_base"]) * K:
-            st["tick"] += 1
-            # the same deterministic schedule the simulator executes
-            firing = firing_schedule(st["tick"], eff_periods,
-                                     st["batch_idx"], bound)
-            if not firing:
-                continue
-            fire = np.zeros((K,), np.float32)
-            fire[firing] = 1.0
-            # a worker's batch index only advances at its own events, so
-            # its batch is cached until it fires (invalidated below)
-            for w in range(K):
-                if st["batch_cache"][w] is None:
-                    st["batch_cache"][w] = batches(st["batch_idx"][w], w)
-            batch = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                 *st["batch_cache"])
-            # mirror the simulator's rng stream: one split per firing event
-            keys = [jax.random.PRNGKey(0)] * K
-            if comp.method != "none":
-                for w in firing:
-                    st["rng"], sub = jax.random.split(st["rng"])
-                    keys[w] = sub
-            pulled_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                        *st["pulled"])
-            losses, grads, st["ef"] = grad_fn(
-                pulled_stack, st["ef"], batch, jnp.stack(keys),
-                jnp.asarray(fire))
-            for w in firing:
-                staleness = st["server_ver"] - st["pulled_ver"][w]
-                if cfg.arch == "ps":
-                    onehot = np.zeros((K,), np.float32)
-                    onehot[w] = 1.0
-                    st["params"] = ps_apply(st["params"], grads,
-                                            jnp.asarray(onehot))
-                else:
-                    g_w = jax.tree.map(lambda x: x[w], grads)
-                    st["params"] = self._apply(st["params"], g_w, cfg.lr)
-                st["server_ver"] += 1
-                st["updates"] += 1
-                st["pulled"][w] = st["params"]   # pull = reference rebind
-                st["pulled_ver"][w] = st["server_ver"]
-                st["batch_idx"][w] += 1
-                st["batch_cache"][w] = None
-                st["wire"] += self._event_wire
-                events.append(dict(step=st["updates"],
-                                   loss=float(losses[w]),
-                                   max_staleness=staleness, worker=w))
-        return st, events
+        return async_replay_step(
+            st, batches, t, bound, K=cfg.num_workers,
+            compressor=cfg.compressor, grad_fn=grad_fn,
+            apply_fn=self._apply, ps_apply=ps_apply, lr=cfg.lr,
+            event_wire=self._event_wire,
+            eff_periods=self.effective_periods())
 
     # -------------------------------------------------- engine protocol
     def init(self, params) -> Dict[str, Any]:
@@ -554,6 +623,10 @@ class DeviceEngine(ElasticWorkerSet):
                 updates_base=0,
                 step_base=0,
             )
+        elif cfg.sync == "sma":
+            del st["params"]
+            st["replicas"] = jax.tree.map(
+                lambda x: jnp.stack([x] * K), params)
         return st
 
     def step(self, st, batches: Callable[[int, int], Any], t: int):
@@ -562,16 +635,30 @@ class DeviceEngine(ElasticWorkerSet):
             st, ev = self._step_bsp(st, batches, t)
         elif sync == "ssp":
             st, ev = self._step_async(st, batches, t, self.cfg.staleness)
+        elif sync == "sma":
+            st, ev = self._step_sma(st, batches, t)
         else:
             st, ev = self._step_async(st, batches, t, None)
         self._wire_total = st["wire"]
         return st, ev
 
     def finalize(self, st):
+        if self.cfg.sync == "sma":
+            # replica average, like the simulator
+            return jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                                st["replicas"])
         return st["params"]
 
     def wire_bytes(self) -> int:
         return self._wire_total
+
+    def extra_metrics(self) -> Dict[str, Any]:
+        m: Dict[str, Any] = {"wire_mode": self.cfg.wire}
+        if self._plan is not None:
+            m["measured_step_tx_bytes"] = \
+                self._plan.measured_step_tx_bytes(self.cfg.arch)
+            m["fp32_step_tx_bytes"] = self._plan.fp32_step_tx_bytes()
+        return m
 
     def per_device_state_bytes(self, st) -> Dict[str, int]:
         """Measured persistent bytes per device — comparable with the
@@ -579,8 +666,10 @@ class DeviceEngine(ElasticWorkerSet):
         SGD carries no optimizer state; params are replicated, EF
         residuals are per-worker."""
         K = self.cfg.num_workers
+        params_like = (jax.tree.map(lambda x: x[0], st["replicas"])
+                       if self.cfg.sync == "sma" else st["params"])
         params = sum(np.asarray(x).nbytes
-                     for x in jax.tree.leaves(st["params"]))
+                     for x in jax.tree.leaves(params_like))
         ef = (sum(np.asarray(x).nbytes
                   for x in jax.tree.leaves(st["ef"])) // K
               if st.get("ef") is not None else 0)
@@ -594,7 +683,7 @@ class DeviceEngine(ElasticWorkerSet):
                 lost: Tuple[int, ...] = ()):
         """Re-size the worker set N→M *in the same process*: rebuild the
         mesh over the first M live devices, invalidate the compiled step
-        functions (the bucket plan is re-planned for the new mesh on the
+        functions (the comm plan is re-planned for the new mesh on the
         next step), and remap per-worker state — survivors (old slots
         minus ``lost``, in order) keep their EF residuals and batch
         clocks, grown slots start with zero residuals at the batch
@@ -628,7 +717,8 @@ class DeviceEngine(ElasticWorkerSet):
         self.slowdowns = [self.slowdowns[s] for s in slots] + [1.0] * grown
         if self.detector is not None:
             self.detector.reshard(slots, new_workers)
-        self._step_fn, self._wire_cell = None, []
+        self._step_fn, self._sma_fn = None, None
+        self._plan, self._event_wire_cache = None, None
         self._async_fns = None
         if st.get("ef") is not None:
             def remap_rows(x):     # (K_old,)+s -> (M,)+s
@@ -645,10 +735,18 @@ class DeviceEngine(ElasticWorkerSet):
             st["batch_cache"] = [None] * new_workers
             st["updates_base"] = st["updates"]
             st["step_base"] = step
+        elif cfg.sync == "sma":
+            # survivors keep their replicas; grown slots start at the
+            # pre-reshard center, exactly like the simulator
+            def remap_replicas(x):
+                center = jnp.mean(x, axis=0)
+                rows = [x[s] for s in slots] + [center] * grown
+                return jnp.stack(rows)
+            st["replicas"] = jax.tree.map(remap_replicas, st["replicas"])
         # arrays committed to the old mesh's devices would clash with the
         # new mesh inside jit — pull them to host; the next step re-places
         # them on the resized mesh
-        for key in ("params", "ef", "pulled", "rng"):
+        for key in ("params", "ef", "pulled", "rng", "replicas"):
             if st.get(key) is not None:
                 st[key] = jax.device_get(st[key])
         return st
@@ -659,8 +757,11 @@ class DeviceEngine(ElasticWorkerSet):
         per-worker batch cache is dropped: batches are a pure function of
         (batch_idx, worker), so resume re-fetches identical tensors."""
         cfg = self.cfg
-        arrays: Dict[str, Any] = {"params": st["params"], "ef": st["ef"],
-                                  "rng": st["rng"]}
+        arrays: Dict[str, Any] = {"ef": st["ef"], "rng": st["rng"]}
+        if cfg.sync == "sma":
+            arrays["replicas"] = st["replicas"]
+        else:
+            arrays["params"] = st["params"]
         meta: Dict[str, Any] = dict(
             backend="device", mode=cfg.sync, num_workers=cfg.num_workers,
             wire=int(st["wire"]), periods=list(self.periods),
@@ -694,8 +795,12 @@ class DeviceEngine(ElasticWorkerSet):
         if self.detector is not None:
             self.detector.load_state(meta.get("detector"))
         st: Dict[str, Any] = dict(
-            params=arrays["params"], ef=arrays["ef"],
-            rng=jnp.asarray(arrays["rng"]), wire=int(meta["wire"]))
+            ef=arrays["ef"], rng=jnp.asarray(arrays["rng"]),
+            wire=int(meta["wire"]))
+        if cfg.sync == "sma":
+            st["replicas"] = arrays["replicas"]
+        else:
+            st["params"] = arrays["params"]
         if cfg.sync in ("ssp", "asp"):
             st.update(pulled=arrays["pulled"],
                       pulled_ver=list(meta["pulled_ver"]),

@@ -35,7 +35,13 @@ Backends (the ``BACKENDS`` registry):
           the simulator's deterministic staleness schedule with gradient
           compute data-parallel on devices; arch=ps routed through the
           reduce-scatter/all-gather ZeRO path of core/parameter_server.py
-          over the same bucket plan as allreduce.  SMA is simulated-only.
+          over the same bucket plan as allreduce; SMA with per-worker
+          replicas whose center is a CommPlan exchange.
+
+Every exchange executes a ``repro.comm.CommPlan``; the ``wire`` field
+selects modeled (per-worker roundtrip, analytic bytes — simulator
+cross-validatable) or measured (encoded payloads inside the collective
+schedule, bytes counted from the planes exchanged) — docs/comm.md.
 
 Every engine follows the ``Engine`` protocol (``init / step / finalize /
 metrics``) and is driven by the single ``Trainer.fit`` loop, which is the
@@ -64,8 +70,12 @@ from repro.train.data_parallel import (ARCHS, DEVICE_SYNCS,
 from repro.train.train_loop import train_loop
 
 SYNCS = ("bsp", "ssp", "asp", "sma")
+# the ISSUE-2 acceptance matrix rows (sma device support came later and
+# is registered separately, so the frozen acceptance set stays stable)
+MATRIX_SYNCS = ("bsp", "ssp", "asp")
 # the tested compression column set: the EF methods plus the baseline
 MATRIX_METHODS = ("none",) + EF_METHODS
+WIRE_MODES = ("modeled", "measured")
 _DENSITY_DEFAULT = 0.01
 
 
@@ -82,7 +92,7 @@ class Cell(NamedTuple):
 # tests/test_strategy.py both enforce this single set
 ACCEPTANCE_CELLS = frozenset(
     Cell(s, a, c, "device")
-    for s in DEVICE_SYNCS for a in ARCHS for c in MATRIX_METHODS)
+    for s in MATRIX_SYNCS for a in ARCHS for c in MATRIX_METHODS)
 
 
 def registered_cells() -> List[Cell]:
@@ -91,18 +101,20 @@ def registered_cells() -> List[Cell]:
     registry goes untested."""
     cells: List[Cell] = []
     # device: the full EF matrix, plus the stateless quantizers under BSP
-    for s in DEVICE_SYNCS:
+    for s in MATRIX_SYNCS:
         for a in ARCHS:
             for c in MATRIX_METHODS:
                 cells.append(Cell(s, a, c, "device"))
     for c in ("terngrad", "qsgd"):
         for a in ARCHS:
             cells.append(Cell("bsp", a, c, "device"))
-    # sim: staleness replay source of truth + the sim-only SMA model
-    for s in DEVICE_SYNCS:
+    # sim: staleness replay source of truth + the SMA model on both
+    # backends (device SMA exchanges replicas through the CommPlan)
+    for s in MATRIX_SYNCS:
         for c in MATRIX_METHODS:
             cells.append(Cell(s, "allreduce", c, "sim"))
     cells.append(Cell("sma", "allreduce", "none", "sim"))
+    cells.append(Cell("sma", "allreduce", "none", "device"))
     return cells
 
 
@@ -137,6 +149,11 @@ class Strategy:
     optimizer: str = "sgd"           # sgd | adamw
     micro_batches: int = 0           # pipeline micro-batches (0 = auto)
     detect: bool = False             # measured straggler detection (bsp)
+    # wire accounting / exchange mode (docs/comm.md): "modeled" keeps
+    # compression as a per-worker roundtrip with analytic byte accounting
+    # (simulator-matching); "measured" moves the encoded payloads inside
+    # the collective schedule and counts the planes actually exchanged
+    wire: str = "modeled"
 
     def __post_init__(self):
         if self.sync not in SYNCS:
@@ -169,6 +186,11 @@ class Strategy:
             # uncompressed (docs/strategies.md marks these cells "—")
             raise ValueError("sma does not compose with compression; "
                              "use compression='none'")
+        if self.sync == "sma" and self.arch != "allreduce":
+            raise ValueError("sma exchanges replicas decentralized; use "
+                             "arch='allreduce'")
+        if self.wire not in WIRE_MODES:
+            raise ValueError(f"wire={self.wire!r} not in {WIRE_MODES}")
         if isinstance(self.compression, Compressor) and \
                 self.density != _DENSITY_DEFAULT:
             # a full Compressor instance carries its own density — a
@@ -200,10 +222,21 @@ class Strategy:
                              "state through the reduce-scatter PS path)")
         if self.is_hybrid:
             if self.sync != "bsp":
-                raise ValueError(
-                    "hybrid meshes / ZeRO / adamw execute BSP only "
-                    "(asynchrony composes with the data axis, not the "
-                    "pipeline schedule)")
+                # async sync models (and SMA) compose with the *data
+                # axis* of a mesh: replicated pulls per data slot,
+                # tensor-sharded compute inside the slot.  They do not
+                # compose with a pipeline schedule, sharded state, or a
+                # stateful optimizer (docs/hybrid.md)
+                ok = (self.mesh_spec.stage == 1 and self.zero == 0
+                      and self.optimizer == "sgd"
+                      and self.arch == "allreduce")
+                if not ok:
+                    raise ValueError(
+                        f"sync={self.sync!r} on a hybrid mesh needs "
+                        "stage=1, zero=0, optimizer='sgd', and "
+                        "arch='allreduce' (asynchrony composes with the "
+                        "data axis, not the pipeline schedule or sharded "
+                        "state)")
             if self.backup:
                 raise ValueError("backup workers do not compose with "
                                  "hybrid meshes yet")
@@ -343,6 +376,12 @@ class Strategy:
                     "simulator has no tensor/stage axes")
             return "device"
         if self.backend == "sim":
+            if self.wire == "measured":
+                # the simulator has no payloads to count — measured wire
+                # accounting only exists where planes are exchanged
+                raise ValueError("wire='measured' is device-only; the "
+                                 "simulator models bytes, it does not "
+                                 "move them")
             return "sim"
         if self.backend == "device":
             if self.sync not in DEVICE_SYNCS:
@@ -355,7 +394,12 @@ class Strategy:
         if self.sync not in DEVICE_SYNCS:
             return "sim"
         n = len(devices) if devices is not None else len(jax.devices())
-        return "device" if n >= self.workers else "sim"
+        kind = "device" if n >= self.workers else "sim"
+        if kind == "sim" and self.wire == "measured":
+            raise ValueError(
+                f"wire='measured' needs the device backend but only "
+                f"{n} device(s) are available for workers={self.workers}")
+        return kind
 
     def build(self, grad_fn: Callable,
               devices: Optional[Sequence] = None) -> "Engine":
@@ -472,7 +516,8 @@ class DeviceBackend(Engine):
                     zero=s.zero, optimizer=s.optimizer,
                     topology=s.topology, bucket_mb=s.bucket_mb,
                     order=s.order, micro_batches=s.micro_batches,
-                    seed=s.seed),
+                    sync=s.sync, staleness=s.staleness, periods=s.periods,
+                    sma_mu=s.sma_mu, wire=s.wire, seed=s.seed),
                 grad_fn, devices)
         grad_fn = _as_grad_fn(grad_fn)
         return DeviceEngine(
@@ -481,7 +526,8 @@ class DeviceBackend(Engine):
                 staleness=s.staleness, periods=s.periods,
                 topology=s.topology, compressor=s.compressor,
                 backup=s.backup, bucket_mb=s.bucket_mb, order=s.order,
-                detect=s.detect, seed=s.seed),
+                detect=s.detect, wire=s.wire, sma_mu=s.sma_mu,
+                seed=s.seed),
             grad_fn, devices)
 
 

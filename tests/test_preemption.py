@@ -269,6 +269,87 @@ def test_resume_then_rollback_does_not_duplicate_history(tmp_path):
     assert [e["step"] for e in h] == list(range(6, 10))   # no duplicates
 
 
+# -------------------------------------------------- incremental snapshots
+def test_incremental_save_links_unchanged_shards_and_restores_bitwise(
+        tmp_path):
+    """Periodic saves hash-skip unchanged shards (hard-linked from the
+    previous snapshot); restore is bitwise either way."""
+    from repro.checkpoint.store import (load_checkpoint, read_manifest,
+                                        save_checkpoint)
+    tree = {"a": np.arange(64, dtype=np.float32),
+            "b": np.ones((32,), np.float32),
+            "c": np.full((16,), 7, np.int32)}
+    base = str(tmp_path / "step_000001")
+    # hash_leaves opts the base in as a linkable incremental anchor
+    # (engine snapshots always set it; plain saves skip the sha256 cost)
+    save_checkpoint(base, tree, step=1, shard_bytes=200, hash_leaves=True)
+    # change exactly one leaf; the others' shards must be linked
+    tree2 = dict(tree, a=tree["a"] + 1)
+    nxt = str(tmp_path / "step_000002")
+    m2 = save_checkpoint(nxt, tree2, step=2, shard_bytes=200,
+                         incremental_from=base)
+    assert m2["shards"] > 1
+    assert 1 <= m2["linked_shards"] < m2["shards"]
+    # linked files share an inode with the base checkpoint's
+    linked = [i for i in range(m2["shards"])
+              if all(r["shard"] != i or r["name"] != "a"
+                     for r in m2["leaves"])]
+    shared = sum(
+        os.stat(os.path.join(nxt, f"shard_{i}.npz")).st_ino
+        == os.stat(os.path.join(base, f"shard_{i}.npz")).st_ino
+        for i in linked)
+    assert shared >= 1
+    # restore is bitwise identical to what was saved
+    got, step = load_checkpoint(nxt, tree2)
+    assert step == 2
+    for k in tree2:
+        np.testing.assert_array_equal(got[k], tree2[k])
+    # deleting the base must not tear the incremental snapshot (hard
+    # links keep the inode alive)
+    import shutil
+    shutil.rmtree(base)
+    got2, _ = load_checkpoint(nxt, tree2)
+    for k in tree2:
+        np.testing.assert_array_equal(got2[k], tree2[k])
+    assert read_manifest(nxt)["linked_shards"] == m2["linked_shards"]
+
+
+def test_elastic_cadence_saves_are_incremental_and_bitwise(tmp_path):
+    """An SSP run's idle worker leaves its pulled copy unchanged between
+    cadence snapshots — that shard must hash-skip (hard-link) — and a
+    restore from an incremental snapshot is bitwise equal to the
+    exported state."""
+    from repro.checkpoint.store import read_manifest
+    from repro.elastic.recovery import (latest_checkpoint,
+                                        restore_engine_state,
+                                        save_engine_state)
+    # worker 3's period (97 ticks) guarantees it never fires within the
+    # run, so its pulled copy is a byte-identical leaf at every save
+    strat = Strategy(sync="ssp", staleness=5, workers=4, lr=0.05,
+                     periods=(1, 1, 1, 97), backend="sim")
+    eng = strat.build(grad_fn)
+    st = eng.init(P0)
+    paths = []
+    for t in range(3):
+        st, _ = eng.step(st, make_batches(), t)
+        p = str(tmp_path / f"step_{t:06d}")
+        # tiny shards: each leaf lands in its own shard, so the
+        # unchanged pulled copies are individually linkable
+        save_engine_state(p, eng, st, t, 0, shard_bytes=64,
+                          incremental_from=(paths[-1] if paths else None))
+        paths.append(p)
+    last = read_manifest(paths[-1])
+    assert last["linked_shards"] >= 1, last    # the idle worker's pull
+    # bitwise: restore the newest snapshot into a fresh engine
+    eng2 = strat.build(grad_fn)
+    assert latest_checkpoint(str(tmp_path)) == paths[-1]
+    st2, meta = restore_engine_state(paths[-1], eng2, P0)
+    a1, _ = eng.export_state(st)
+    a2, _ = eng2.export_state(st2)
+    for x, y in zip(jax.tree.leaves(a1), jax.tree.leaves(a2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 def test_plan_run_consumed_record_roundtrip():
     from repro.elastic import EventPlan
     run = EventPlan.parse("slow:w0x2@3,crash:w1@5").start()

@@ -82,10 +82,17 @@ def test_auto_backend_falls_back_to_sim_without_devices():
     assert s.build(grad_fn).backend == "sim"
 
 
-def test_sma_is_simulated_only():
+def test_sma_resolves_on_both_backends():
+    # device SMA shipped with the comm-plane refactor: auto falls back to
+    # sim on this single-device host, but backend="device" is legal now
     assert Strategy(sync="sma", workers=4).resolve_backend() == "sim"
-    with pytest.raises(ValueError):
-        Strategy(sync="sma", workers=4, backend="device").resolve_backend()
+    assert Strategy(sync="sma", workers=4,
+                    backend="device").resolve_backend() == "device"
+    # one replica on one device still runs end-to-end
+    eng = Strategy(sync="sma", workers=1, lr=0.05,
+                   backend="device").build(grad_fn)
+    _, hist, wire = eng.run(P0, make_batch, 3)
+    assert len(hist) == 3 and wire > 0
 
 
 def test_device_backend_requires_devices():
