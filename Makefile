@@ -8,7 +8,7 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench strategies elastic hybrid comm
+.PHONY: smoke tier1 bench strategies elastic hybrid comm kernels
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -43,11 +43,18 @@ hybrid:
 comm:
 	$(PYTEST) $(SMOKE_TIMEOUT) python tools/comm_smoke.py
 
+# Kernel-backend gate: every codec x backend cell on 4 virtual devices
+# (ref vs kernel: losses in band, wire bytes bitwise) plus one
+# flash-attention fwd/grad/decode cell, all in interpret mode
+# (see docs/kernels.md).
+kernels:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/kernel_smoke.py
+
 # Full tier-1 verify (ROADMAP.md): the strategy-matrix, elasticity,
-# hybrid-mesh, and comm-plane gates plus everything in tests/, including
-# the 8-virtual-device subprocess tests and end-to-end training
-# compositions.
-tier1: strategies elastic hybrid comm
+# hybrid-mesh, comm-plane, and kernel-backend gates plus everything in
+# tests/, including the 8-virtual-device subprocess tests and end-to-end
+# training compositions.
+tier1: strategies elastic hybrid comm kernels
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

@@ -1,15 +1,18 @@
 """Communication-plane benchmark: compressed payloads inside the
 collective schedule (docs/comm.md).
 
-One JSON row per (topology × codec) cell on 4 virtual host devices,
-training the tiny regression problem for a few BSP steps under both wire
-modes:
+One JSON row per (topology × codec × kernel_backend) cell on 4 virtual
+host devices, training the tiny regression problem for a few BSP steps:
 
   * ``modeled_wire`` — the compressor's analytic per-push accounting
-    (what the simulator reports; the ``wire="modeled"`` increment);
+    (what the simulator reports; the ``wire="modeled"`` increment),
+    measured once per cell (it is backend-independent by construction);
   * ``measured_wire`` — bytes counted from the encoded planes actually
     exchanged inside the schedule (``wire="measured"``), plus the static
-    per-worker/step tx and its ratio to the fp32 schedule;
+    per-worker/step tx and its ratio to the fp32 schedule.  Reported per
+    kernel backend (ref = jnp oracle, kernel = Pallas interpret mode on
+    CPU) — the bytes must agree bitwise across backends, the wall time
+    differs;
   * ``step_us`` — wall time per measured-mode step (jit-compiled).
 
   PYTHONPATH=src python -m benchmarks.comm_plane_bench
@@ -43,32 +46,41 @@ def grad_fn(params, batch):
     return jax.value_and_grad(loss)(params)
 P0 = {"W": jnp.zeros((64, 1)), "b": jnp.zeros((4096,))}
 
+def run(spec, wire, kb):
+    eng = Strategy.parse(spec, lr=0.05, backend="device", wire=wire,
+                         kernel_backend=kb).build(grad_fn)
+    st = eng.init(P0)
+    st, _ = eng.step(st, make_batch, 0)          # compile
+    t0 = time.perf_counter()
+    for t in range(1, 4):
+        st, ev = eng.step(st, make_batch, t)
+    dt = (time.perf_counter() - t0) / 3 * 1e6
+    return st, ev, eng.metrics(), dt
+
 rows = []
 for topology in %(topologies)s:
     for codec in %(codecs)s:
         comp = "dgc:0.1" if codec == "dgc" else codec
         spec = f"bsp/{topology}/{comp}@4"
-        row = {"bench": "comm_plane", "spec": spec,
-               "topology": topology, "codec": codec}
-        for wire in ("modeled", "measured"):
-            eng = Strategy.parse(spec, lr=0.05, backend="device",
-                                 wire=wire).build(grad_fn)
-            st = eng.init(P0)
-            st, _ = eng.step(st, make_batch, 0)      # compile
-            t0 = time.perf_counter()
-            for t in range(1, 4):
-                st, ev = eng.step(st, make_batch, t)
-            dt = (time.perf_counter() - t0) / 3 * 1e6
-            m = eng.metrics()
-            row[f"{wire}_wire"] = st["wire"]
-            if wire == "measured":
-                row["step_us"] = round(dt, 1)
-                row["tx_bytes_per_worker_step"] = m["measured_step_tx_bytes"]
-                row["fp32_tx_bytes_per_worker_step"] = m["fp32_step_tx_bytes"]
-                row["tx_ratio_vs_fp32"] = round(
-                    m["measured_step_tx_bytes"] / m["fp32_step_tx_bytes"], 4)
-                row["loss_final"] = float(ev[-1]["loss"])
-        rows.append(row)
+        st_m, _, _, _ = run(spec, "modeled", "ref")
+        for kb in ("ref", "kernel"):
+            st, ev, m, dt = run(spec, "measured", kb)
+            rows.append({
+                "bench": "comm_plane", "spec": spec,
+                "topology": topology, "codec": codec,
+                "kernel_backend": kb,
+                "modeled_wire": st_m["wire"],
+                "measured_wire": st["wire"],
+                "step_us": round(dt, 1),
+                "tx_bytes_per_worker_step": m["measured_step_tx_bytes"],
+                "fp32_tx_bytes_per_worker_step": m["fp32_step_tx_bytes"],
+                "tx_ratio_vs_fp32": round(
+                    m["measured_step_tx_bytes"] / m["fp32_step_tx_bytes"],
+                    4),
+                "loss_final": float(ev[-1]["loss"]),
+            })
+        a, b = rows[-2], rows[-1]
+        assert a["measured_wire"] == b["measured_wire"], (spec, a, b)
 print("ROWS " + json.dumps(rows))
 """
 

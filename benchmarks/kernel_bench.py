@@ -1,6 +1,16 @@
-"""Kernel microbench: interpret-mode wall time (CPU correctness vehicle) +
-the derived TPU-roofline time per call (bytes / HBM bw — these kernels are
-bandwidth-bound by construction)."""
+"""Kernel backend-seam microbench: one JSON row per kernel × backend ×
+size — interpret-mode wall time on CPU (the correctness vehicle; on TPU
+the kernel backend compiles) plus the derived TPU-roofline time per call
+(bytes / HBM bw — these kernels are bandwidth-bound by construction).
+
+The ``onebit_encode_ef`` rows are the fused encode+EF cell: one kernel
+pass reads the gradient bucket (g, e) once and emits the sign plane, bin
+means, reconstruction, and next residual (``bucket_passes=1``), where the
+unfused sequence the codecs used to run — encode, decode, subtract —
+reads the bucket twice (``bucket_passes=2``).  The roofline column prices
+exactly that: the fused cell moves 4 array-widths of HBM traffic, the
+unfused 7.
+"""
 from __future__ import annotations
 
 import jax
@@ -10,48 +20,97 @@ from repro.kernels import flash_attention as FA
 from repro.kernels import onebit, qsgd, terngrad, topk
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
-from benchmarks.common import emit, time_us
+from benchmarks.common import emit_json, time_us
 
-R, C = 512, 512      # a 1 MB gradient tile
+SIZES = [(256, 256), (512, 512)]     # 256 KB and 1 MB gradient tiles
+BACKENDS = ("ref", "kernel")
+
+
+def _roof(read_write_bytes, flops=0.0):
+    return round(max(read_write_bytes / HBM_BW,
+                     flops / PEAK_FLOPS_BF16) * 1e6, 3)
+
+
+def _row(kernel, backend, shape, us, roofline_us, **extra):
+    return dict(bench="kernel", kernel=kernel, backend=backend,
+                shape=f"{shape[0]}x{shape[1]}",
+                us_per_call_interp=round(us, 0),
+                tpu_roofline_us=roofline_us, **extra)
+
+
+def _unfused_onebit(g, e, backend):
+    signs, scale, _ = (onebit.compress(g, e) if backend == "kernel"
+                       else onebit.onebit_ref(g, e))
+    recon = signs.astype(jnp.float32) * scale      # decode pass
+    return (g + e) - recon                         # separate EF pass
+
+
+def _terngrad(g, u, backend):
+    if backend == "kernel":
+        return terngrad.compress(g, u)
+    return terngrad.terngrad_ref(g, u)
 
 
 def main():
     key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 3)
-    g = jax.random.normal(ks[0], (R, C))
-    e = jnp.zeros((R, C))
-    u = jax.random.uniform(ks[1], (R, C))
-    nbytes = R * C * 4
-    rows = [("kernel.name", "us_per_call_interp", "tpu_roofline_us")]
+    rows = []
+    for R, C in SIZES:
+        ks = jax.random.split(key, 3)
+        g = jax.random.normal(ks[0], (R, C))
+        e = jax.random.normal(ks[1], (R, C)) * 0.3
+        u = jax.random.uniform(ks[2], (R, C))
+        th = topk.threshold_for_density(g, e, 0.01)
+        nbytes = R * C * 4
 
-    def roof(read_write_bytes, flops=0.0):
-        return round(max(read_write_bytes / HBM_BW,
-                         flops / PEAK_FLOPS_BF16) * 1e6, 3)
-
-    rows.append(("kernel.onebit",
-                 round(time_us(lambda: onebit.compress(g, e)), 0),
-                 roof(3 * nbytes)))
-    rows.append(("kernel.terngrad",
-                 round(time_us(lambda: terngrad.compress(g, u)), 0),
-                 roof(2 * nbytes + R * C)))
-    rows.append(("kernel.qsgd",
-                 round(time_us(lambda: qsgd.compress(g, u)), 0),
-                 roof(2 * nbytes + R * C)))
-    th = topk.threshold_for_density(g, e, 0.01)
-    rows.append(("kernel.topk",
-                 round(time_us(lambda: topk.compress(g, e, th)), 0),
-                 roof(4 * nbytes)))
+        for b in BACKENDS:
+            # fused encode+EF: single pass over the bucket — read (g, e),
+            # write (recon, new_e) + the bit/scale planes
+            rows.append(_row(
+                "onebit_encode_ef", b, (R, C),
+                time_us(lambda b=b: onebit.encode_ef(g, e, backend=b)),
+                _roof(4 * nbytes), bucket_passes=1))
+            # the unfused sequence the fused kernel replaces (encode then
+            # a separate decode + EF residual pass) re-reads the bucket
+            rows.append(_row(
+                "onebit_encode_ef_unfused", b, (R, C),
+                time_us(lambda b=b: _unfused_onebit(g, e, b)),
+                _roof(7 * nbytes), bucket_passes=2))
+            rows.append(_row(
+                "terngrad", b, (R, C),
+                time_us(lambda b=b: _terngrad(g, u, b)),
+                _roof(2 * nbytes + R * C)))
+            rows.append(_row(
+                "qsgd", b, (R, C),
+                time_us(lambda b=b: qsgd.quantize(g, u, backend=b)),
+                _roof(2 * nbytes + R * C)))
+            rows.append(_row(
+                "topk", b, (R, C),
+                time_us(lambda b=b: topk.sparsify(g, e, th, backend=b)),
+                _roof(4 * nbytes)))
 
     B, S, H, KV, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
     fl = 4.0 * B * H * S * S * hd
-    rows.append(("kernel.flash_attention",
-                 round(time_us(lambda: FA.attention(
-                     q, k, v, block_q=128, block_k=128), iters=2), 0),
-                 roof(2 * (q.size + 2 * k.size) * 4, fl)))
-    emit(rows)
+    flash_roof = _roof(2 * (q.size + 2 * k.size) * 4, fl)
+    for b, fn in (("ref", lambda: FA.attention_ref(q, k, v)),
+                  ("kernel", lambda: FA.attention(q, k, v, block_q=128,
+                                                  block_k=128))):
+        rows.append(_row("flash_attention", b, (S, hd),
+                         time_us(fn, iters=2), flash_roof))
+
+    qd = jax.random.normal(ks[0], (B, 1, H, hd))
+    ck = jax.random.normal(ks[1], (B, S, KV, hd))
+    cv = jax.random.normal(ks[2], (B, S, KV, hd))
+    pos = jnp.int32(S - 1)
+    dec_roof = _roof(2 * ck.size * 4, 4.0 * B * H * S * hd)
+    for b, fn in (("ref", lambda: FA.decode_ref(qd, ck, cv, pos)),
+                  ("kernel", lambda: FA.decode(qd, ck, cv, pos))):
+        rows.append(_row("flash_decode", b, (S, hd),
+                         time_us(fn, iters=2), dec_roof))
+    emit_json(rows)
 
 
 if __name__ == "__main__":

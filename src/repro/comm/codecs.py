@@ -8,6 +8,12 @@ pytree of fixed-shape arrays — the *planes* — and back:
     seg'   = codec.decode(planes)[:L]   # decode returns the row-padded
                                         # length; schedules slice to L
 
+``encode_ef(seg, key)`` is the fused form every lossy transmission in the
+transport actually calls: one pass that returns the planes *and* the
+sender's error-feedback residual ``seg - decode(planes)[:L]``, so on the
+kernel backend each segment is read from HBM once instead of
+encode-then-decode-then-subtract.
+
 Planes are what ``lax.ppermute`` / ``lax.all_gather`` actually move, so
 the wire format is physical where jnp allows it: onebit signs are packed
 32 per uint32 word (``repro.kernels.onebit.pack_bits``), terngrad digits
@@ -16,6 +22,14 @@ all data-dependent statistics (dgc's quantile threshold, terngrad's
 clip/scale, onebit's bin means) are computed on the *unpadded* elements
 so pad zeros cannot bias them — the same fix ``core/compression.py``
 applies to the per-leaf roundtrip.
+
+Every codec carries a ``backend`` (resolved at construction by
+``repro.kernels.backend.resolve_backend``): ``kernel`` dispatches the
+quantization math to its ``repro.kernels.*`` Pallas implementation
+(interpret mode off-TPU), ``ref`` runs the original jnp expressions
+in-line.  The two backends are expression-identical, so the emitted
+planes — and therefore the measured wire bytes, including dgc's traced
+``sent_elems`` — are bitwise the same; tests assert it.
 
 ``static_tx_bytes(L)`` is the host-side byte count of one encoded
 segment, counted over the *unpadded* payload (pad rows carry no
@@ -34,13 +48,17 @@ the sender's error-feedback residual (see ``transport``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.compression import Compressor
 from repro.kernels import onebit as K1
+from repro.kernels import qsgd as KQ
+from repro.kernels import terngrad as KT
+from repro.kernels import topk as KK
+from repro.kernels.backend import resolve_backend
 
 LANE = 256          # encode rows are [ceil(L / LANE), LANE]
 
@@ -82,11 +100,23 @@ class SegmentCodec:
     exact: bool = False
     lossy_ef: bool = False      # hop errors belong in an EF residual
 
+    def __init__(self, backend: str = "auto"):
+        self.backend = resolve_backend(backend)
+
     def encode(self, seg, key=None) -> Dict[str, Any]:
         raise NotImplementedError
 
     def decode(self, planes: Dict[str, Any]):
         raise NotImplementedError
+
+    def encode_ef(self, seg, key=None) -> Tuple[Dict[str, Any], Any]:
+        """Encode + the sender's EF residual in one call:
+        ``(planes, seg - decode(planes)[:L])``.  Codecs with a fused
+        kernel override this so the kernel backend reads ``seg`` once;
+        the default is the unfused encode-decode-subtract (the ref
+        math, bit-identical to what the schedules previously inlined)."""
+        planes = self.encode(seg, key)
+        return planes, seg - self.decode(planes)[:seg.shape[0]]
 
     def static_tx_bytes(self, length: int) -> int:
         """Shape-static wire bytes of one encoded length-``length``
@@ -118,11 +148,28 @@ class OnebitCodec(SegmentCodec):
     name = "onebit"
     lossy_ef = True
 
-    def encode(self, seg, key=None):
-        c, valid, _ = _pad_rows(seg)
+    def _rows(self, seg):
+        """(signs, sp, sn, residual_rows, valid, L) via the fused kernel
+        or the in-line jnp oracle — identical planes either way."""
+        c, valid, L = _pad_rows(seg)
+        if self.backend == "kernel":
+            signs, sp, sn, _, new_e = K1.encode_ef(c, None, valid,
+                                                   backend="kernel")
+            return signs, sp, sn, new_e, L
         signs = jnp.where(c >= 0, jnp.int8(1), jnp.int8(-1))
         sp, sn = _two_bin_means(signs, c, valid)
+        recon = jnp.where(signs > 0, sp, -sn)
+        out = recon if valid is None else jnp.where(valid, recon, 0.0)
+        return signs, sp, sn, c - out, L
+
+    def encode(self, seg, key=None):
+        signs, sp, sn, _, _ = self._rows(seg)
         return {"words": K1.pack_bits(signs), "sp": sp, "sn": sn}
+
+    def encode_ef(self, seg, key=None):
+        signs, sp, sn, new_e, L = self._rows(seg)
+        planes = {"words": K1.pack_bits(signs), "sp": sp, "sn": sn}
+        return planes, new_e.reshape(-1)[:L]
 
     def decode(self, planes):
         signs = K1.unpack_bits(planes["words"], LANE)
@@ -136,7 +183,8 @@ class TerngradCodec(SegmentCodec):
     """Stochastic ternary digits packed 16 per uint32 word + one scale."""
     name = "terngrad"
 
-    def __init__(self, clip_sigma: float = 2.5):
+    def __init__(self, clip_sigma: float = 2.5, backend: str = "auto"):
+        super().__init__(backend)
         self.clip_sigma = clip_sigma
 
     def encode(self, seg, key=None):
@@ -147,10 +195,13 @@ class TerngradCodec(SegmentCodec):
                           self.clip_sigma * sigma)
         s = jnp.max(jnp.abs(g0))
         c, _, _ = _pad_rows(g0)
-        p = jnp.abs(c) / jnp.maximum(s, 1e-30)
         u = jax.random.uniform(key, c.shape)
-        b = (u < p).astype(jnp.int8)
-        tern = jnp.sign(c).astype(jnp.int8) * b
+        if self.backend == "kernel":
+            tern = KT.ternarize(c, u, s, backend="kernel")
+        else:
+            p = jnp.abs(c) / jnp.maximum(s, 1e-30)
+            b = (u < p).astype(jnp.int8)
+            tern = jnp.sign(c).astype(jnp.int8) * b
         digits = (tern + 1).astype(jnp.uint32).reshape(-1, LANE // 16, 16)
         shifts = 2 * jnp.arange(16, dtype=jnp.uint32)
         words = jnp.sum(digits << shifts, axis=-1).astype(jnp.uint32)
@@ -171,15 +222,20 @@ class QsgdCodec(SegmentCodec):
     """s-level stochastic quantization: int8 levels + one l2 norm."""
     name = "qsgd"
 
-    def __init__(self, s_levels: int = 127):
+    def __init__(self, s_levels: int = 127, backend: str = "auto"):
+        super().__init__(backend)
         self.s_levels = s_levels
 
     def encode(self, seg, key=None):
         g32, _, _ = _pad_rows(seg)               # pad zeros don't move l2
+        u = jax.random.uniform(key, g32.shape)
+        if self.backend == "kernel":
+            q, norm = KQ.quantize(g32, u, s_levels=self.s_levels,
+                                  backend="kernel")
+            return {"q": q, "norm": norm}
         norm = jnp.sqrt(jnp.sum(jnp.square(g32)))
         p = jnp.abs(g32) / jnp.maximum(norm, 1e-30) * self.s_levels
         lo = jnp.floor(p)
-        u = jax.random.uniform(key, g32.shape)
         lvl = jnp.clip(lo + (u < (p - lo)).astype(jnp.float32),
                        0, self.s_levels)
         return {"q": (jnp.sign(g32) * lvl).astype(jnp.int8), "norm": norm}
@@ -204,26 +260,54 @@ class DgcCodec(SegmentCodec):
     name = "dgc"
     lossy_ef = True
 
-    def __init__(self, density: float = 0.01):
+    def __init__(self, density: float = 0.01, backend: str = "auto"):
+        super().__init__(backend)
         self.density = density
 
-    def encode(self, seg, key=None):
-        th = jnp.quantile(jnp.abs(seg.astype(jnp.float32)),
-                          1.0 - self.density)   # unpadded quantile
-        c, valid, _ = _pad_rows(seg)
-        # an exact zero never ships: the wire format is (index, value)
-        # pairs, and when the threshold degenerates to 0 (a mostly-zero
-        # segment) the zeros must not count as payload
-        mask = (jnp.abs(c) >= th) & (c != 0.0)
+    def _planes(self, seg):
+        # quantile threshold on the unpadded payload (kernels/topk owns
+        # the selection rule; e=0 because segment EF lives in transport)
+        th = KK.threshold_for_density(seg, jnp.zeros_like(seg),
+                                      self.density)
+        c, valid, L = _pad_rows(seg)
+        if self.backend == "kernel":
+            # kept != 0 <=> (|c| >= th) & (c != 0): the kernel's fused
+            # select yields the same mask — and therefore the same traced
+            # sent_elems accounting — as the explicit jnp predicate
+            kept_raw, _ = KK.sparsify(c, jnp.zeros_like(c), th,
+                                      backend="kernel")
+            mask = kept_raw != 0.0
+        else:
+            # an exact zero never ships: the wire format is (index, value)
+            # pairs, and when the threshold degenerates to 0 (a mostly-zero
+            # segment) the zeros must not count as payload
+            mask = (jnp.abs(c) >= th) & (c != 0.0)
         if valid is not None:
             mask = mask & valid
         kept = jnp.where(mask, c, 0.0)
         rem = c - kept
-        signs = jnp.where(rem >= 0, jnp.int8(1), jnp.int8(-1))
         unsent = ~mask if valid is None else (~mask & valid)
-        sp, sn = _two_bin_means(signs, rem, valid=unsent)
-        return {"kept": kept, "mask": mask,
-                "words": K1.pack_bits(signs), "sp": sp, "sn": sn}
+        if self.backend == "kernel":
+            signs, sp, sn, rem_out, rem_e = K1.encode_ef(
+                rem, None, unsent, backend="kernel")
+        else:
+            signs = jnp.where(rem >= 0, jnp.int8(1), jnp.int8(-1))
+            sp, sn = _two_bin_means(signs, rem, valid=unsent)
+            recon = jnp.where(signs > 0, sp, -sn)
+            rem_out = jnp.where(unsent, recon, 0.0)
+            rem_e = rem - rem_out
+        planes = {"kept": kept, "mask": mask,
+                  "words": K1.pack_bits(signs), "sp": sp, "sn": sn}
+        return planes, rem_e, L
+
+    def encode(self, seg, key=None):
+        planes, _, _ = self._planes(seg)
+        return planes
+
+    def encode_ef(self, seg, key=None):
+        # residual = seg - decode = (c - kept) - rem_out = rem_e
+        planes, rem_e, L = self._planes(seg)
+        return planes, rem_e.reshape(-1)[:L]
 
     def decode(self, planes):
         signs = K1.unpack_bits(planes["words"], LANE)
@@ -243,28 +327,30 @@ class DgcCodec(SegmentCodec):
 SPARSE_ELEM_BYTES = 8
 
 
-def make_codec(method: str, **kw) -> SegmentCodec:
+def make_codec(method: str, backend: str = "auto", **kw) -> SegmentCodec:
     if method == "none":
-        return NoneCodec()
+        return NoneCodec(backend)
     if method == "onebit":
-        return OnebitCodec()
+        return OnebitCodec(backend)
     if method == "terngrad":
-        return TerngradCodec(**kw)
+        return TerngradCodec(backend=backend, **kw)
     if method == "qsgd":
-        return QsgdCodec(**kw)
+        return QsgdCodec(backend=backend, **kw)
     if method == "dgc":
-        return DgcCodec(**kw)
+        return DgcCodec(backend=backend, **kw)
     raise ValueError(f"no segment codec for method {method!r}")
 
 
 def codec_for(compressor: Compressor) -> SegmentCodec:
-    """The segment codec matching a ``Compressor`` spec (same method and
-    quantization knobs; EF/reconstruction knobs live in the transport)."""
+    """The segment codec matching a ``Compressor`` spec (same method,
+    same quantization knobs, same kernel backend; EF/reconstruction
+    knobs live in the transport)."""
     m = compressor.method
+    be = compressor.backend
     if m == "terngrad":
-        return TerngradCodec(clip_sigma=compressor.clip_sigma)
+        return TerngradCodec(clip_sigma=compressor.clip_sigma, backend=be)
     if m == "qsgd":
-        return QsgdCodec(s_levels=compressor.s_levels)
+        return QsgdCodec(s_levels=compressor.s_levels, backend=be)
     if m == "dgc":
-        return DgcCodec(density=compressor.density)
-    return make_codec(m)
+        return DgcCodec(density=compressor.density, backend=be)
+    return make_codec(m, backend=be)

@@ -43,7 +43,9 @@ import numpy as np
 
 from repro.comm.codecs import SPARSE_ELEM_BYTES, SegmentCodec, codec_for
 from repro.comm.transport import (SCHEDULES, compressed_allreduce,
+                                  compressed_allreduce_ef,
                                   compressed_reduce_scatter,
+                                  compressed_reduce_scatter_ef,
                                   fp32_schedule_bytes, pad_for_schedule,
                                   schedule_tx_bytes)
 from repro.core.collectives import axis_size
@@ -194,26 +196,24 @@ class CommPlan:
         for b in self.order:
             L = self.bucket_len(b)
             P = pad_for_schedule(L, self.n)
-            g_flat = self._cat(leaves, b)
-            if ef_leaves is not None:
-                e_flat = self._cat(ef_leaves, b)
-                cin = g_flat + gain * e_flat
-                ctrue = g_flat + e_flat
-            else:
-                cin = g_flat
+            g_flat = jnp.pad(self._cat(leaves, b), (0, P - L))
             key, sub = jax.random.split(key)
-            red, res, nz = compressed_allreduce(
-                jnp.pad(cin, (0, P - L)), self.axis, self.topology,
-                codec, sub)
+            if ef_leaves is not None:
+                # hand the residual bucket down: the transport applies the
+                # (over-relaxed) compensation, runs fused encode+EF hops,
+                # and returns the telescoped next-step residual
+                e_flat = jnp.pad(self._cat(ef_leaves, b), (0, P - L))
+                red, new_e, nz = compressed_allreduce_ef(
+                    g_flat, e_flat, self.axis, self.topology, codec, sub,
+                    gain=gain)
+                scatter_flat(new_e[:L], self.buckets[b],
+                             self.leaf_shapes, new_ef, dtype=jnp.float32)
+            else:
+                red, _, nz = compressed_allreduce(
+                    g_flat, self.axis, self.topology, codec, sub)
             sent = sent + nz
             scatter_flat(red[:L] / self.n, self.buckets[b],
                          self.leaf_shapes, out)
-            if ef_leaves is not None:
-                # telescoping EF: whatever this worker failed to put on
-                # the wire (hop residuals), measured against the true
-                # compensated gradient (over-relaxation safe)
-                scatter_flat(ctrue - cin + res[:L], self.buckets[b],
-                             self.leaf_shapes, new_ef, dtype=jnp.float32)
         out_tree = jax.tree.unflatten(self.treedef, out)
         ef_tree = (jax.tree.unflatten(self.treedef, new_ef)
                    if ef_leaves is not None else None)
@@ -236,25 +236,23 @@ class CommPlan:
         for b in self.order:
             L = self.bucket_len(b)
             P = pad_for_schedule(L, self.n)
-            g_flat = self._cat(g_leaves, b)
-            if ef_leaves is not None:
-                e_flat = self._cat(ef_leaves, b)
-                cin = g_flat + gain * e_flat
-                ctrue = g_flat + e_flat
-            else:
-                cin = g_flat
+            g_flat = jnp.pad(self._cat(g_leaves, b), (0, P - L))
             key, sub = jax.random.split(key)
-            g_shard, res, nz = compressed_reduce_scatter(
-                jnp.pad(cin, (0, P - L)), self.axis, codec, sub)
+            if ef_leaves is not None:
+                e_flat = jnp.pad(self._cat(ef_leaves, b), (0, P - L))
+                g_shard, new_e, nz = compressed_reduce_scatter_ef(
+                    g_flat, e_flat, self.axis, codec, sub, gain=gain)
+                scatter_flat(new_e[:L], self.buckets[b],
+                             self.leaf_shapes, new_ef, dtype=jnp.float32)
+            else:
+                g_shard, _, nz = compressed_reduce_scatter(
+                    g_flat, self.axis, codec, sub)
             sent = sent + nz
             p_flat = jnp.pad(self._cat(p_leaves, b), (0, P - L))
             p_shard = shard_of_flat(p_flat, self.axis)
             new_shard = p_shard - lr * (g_shard / self.n)
             full = all_gather_flat(new_shard, self.axis, L)
             scatter_flat(full, self.buckets[b], self.leaf_shapes, out)
-            if ef_leaves is not None:
-                scatter_flat(ctrue - cin + res[:L], self.buckets[b],
-                             self.leaf_shapes, new_ef, dtype=jnp.float32)
         out_tree = jax.tree.unflatten(self.treedef, out)
         ef_tree = (jax.tree.unflatten(self.treedef, new_ef)
                    if ef_leaves is not None else None)

@@ -175,9 +175,10 @@ def _ring_rs(flat, axis_name: str, codec: SegmentCodec, key, n: int):
         key, sub = jax.random.split(key)
         pos = (me - i - 1) % n
         send = c[pos]
-        planes = codec.encode(send, sub)
-        dec = codec.decode(planes)[:m]
-        res = res.at[pos].add(send - dec)
+        # fused encode + hop EF: one read of the chunk yields the planes
+        # and the quantization residual (send - decode) together
+        planes, r = codec.encode_ef(send, sub)
+        res = res.at[pos].add(r)
         sent = sent + codec.sent_elems(planes)
         planes = _permute(planes, axis_name, fwd)
         recv = codec.decode(planes)[:m]
@@ -239,10 +240,9 @@ def _butterfly_exchange(flat, axis_name: str, codec: SegmentCodec, key):
         send_start = base + jnp.where(has_upper, 0, d)
         send = lax.dynamic_slice(acc, (send_start, 0), (d, m))
         key, sub = jax.random.split(key)
-        planes = codec.encode(send.reshape(-1), sub)
-        dec = codec.decode(planes)[:d * m].reshape(d, m)
+        planes, r = codec.encode_ef(send.reshape(-1), sub)
         res_slice = lax.dynamic_slice(res, (send_start, 0), (d, m))
-        res = lax.dynamic_update_slice(res, res_slice + (send - dec),
+        res = lax.dynamic_update_slice(res, res_slice + r.reshape(d, m),
                                        (send_start, 0))
         sent = sent + codec.sent_elems(planes)
         planes = _permute(planes, axis_name, [(i, i ^ d) for i in range(n)])
@@ -272,9 +272,8 @@ def _tree_exchange(flat, axis_name: str, codec: SegmentCodec, key):
         is_sender = (me % (2 * d)) == d
         is_receiver = (me % (2 * d)) == 0
         key, sub = jax.random.split(key)
-        planes = codec.encode(acc, sub)
-        dec = codec.decode(planes)[:L]
-        res = res + jnp.where(is_sender, acc - dec, 0.0)
+        planes, r = codec.encode_ef(acc, sub)
+        res = res + jnp.where(is_sender, r, 0.0)
         sent = sent + jnp.where(is_sender, codec.sent_elems(planes), 0)
         perm = [(i, i - d) for i in range(n) if i % (2 * d) == d]
         recv = codec.decode(_permute(planes, axis_name, perm))[:L]
@@ -283,9 +282,8 @@ def _tree_exchange(flat, axis_name: str, codec: SegmentCodec, key):
     # (the broadcast loop counts each of the n-1 forwards — encoding
     # itself is not a transmission)
     key, sub = jax.random.split(key)
-    planes = codec.encode(acc, sub)
-    dec = codec.decode(planes)[:L]
-    res = res + jnp.where(me == 0, acc - dec, 0.0)
+    planes, r = codec.encode_ef(acc, sub)
+    res = res + jnp.where(me == 0, r, 0.0)
     for k in reversed(range(levels)):
         d = 1 << k
         is_sender = (me % (2 * d)) == 0
@@ -302,8 +300,7 @@ def _fully_connected_exchange(flat, axis_name: str, codec: SegmentCodec,
     n = axis_size(axis_name)
     L = flat.shape[0]
     key, sub = jax.random.split(key)
-    planes = codec.encode(flat, sub)
-    res = flat - codec.decode(planes)[:L]
+    planes, res = codec.encode_ef(flat, sub)
     sent = codec.sent_elems(planes) * (n - 1)
     gathered = jax.tree.map(lambda p: lax.all_gather(p, axis_name), planes)
     out = jnp.sum(jax.vmap(codec.decode)(gathered)[:, :L], axis=0)
@@ -340,6 +337,33 @@ def compressed_reduce_scatter(flat, axis_name: str, codec: SegmentCodec,
     me = lax.axis_index(axis_name)
     c, res, sent, _ = _ring_rs(flat, axis_name, codec, key, n)
     return c[me], res.reshape(-1), sent
+
+
+def compressed_allreduce_ef(flat, ef, axis_name: str, topology: str,
+                            codec: SegmentCodec, key, *, gain: float = 1.0
+                            ) -> Tuple[Any, Any, Any]:
+    """EF-compensated exchange: the transport owns the whole residual
+    lifecycle — compensate ``c_in = flat + gain*ef``, run the codec
+    schedule (every hop's encode is the fused ``encode_ef``), and fold
+    the hop residuals into the returned next-step EF vector, measured
+    against the true compensated gradient ``flat + ef`` so the
+    telescoping invariant holds for any over-relaxation gain.  Callers
+    (``CommPlan``) hand the residual down instead of applying EF as
+    separate jnp passes around the schedule.  Returns
+    ``(reduced_sum, new_ef, sent_elems)``."""
+    cin = flat + gain * ef
+    red, res, sent = _CODEC_EXCHANGES[topology](cin, axis_name, codec, key)
+    return red, (flat + ef) - cin + res, sent
+
+
+def compressed_reduce_scatter_ef(flat, ef, axis_name: str,
+                                 codec: SegmentCodec, key, *,
+                                 gain: float = 1.0) -> Tuple[Any, Any, Any]:
+    """EF-compensated ring reduce-scatter (see ``compressed_allreduce_ef``
+    — the PS/ZeRO gradient-push counterpart)."""
+    cin = flat + gain * ef
+    shard, res, sent = compressed_reduce_scatter(cin, axis_name, codec, key)
+    return shard, (flat + ef) - cin + res, sent
 
 
 def pad_for_schedule(length: int, n: int) -> int:

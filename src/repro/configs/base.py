@@ -54,6 +54,7 @@ class ModelConfig:
     encoder_layers: int = 0
     max_source_positions: int = 1500
     # ---- misc ----
+    attn_backend: str = "auto"       # kernel backend seam: auto|kernel|ref
     norm: str = "rmsnorm"            # rmsnorm | layernorm
     norm_eps: float = 1e-5
     use_bias: bool = False

@@ -1,9 +1,11 @@
 """Gradient-compression strategies from survey §3.3.3 / Table 2, unified
 behind one pytree-level interface with error-feedback state.
 
-Methods (each backed by a Pallas kernel package in ``repro.kernels`` whose
-jnp oracle is the math used here; ``use_kernel=True`` routes through the
-kernel, which is bit-identical — asserted by tests):
+Methods (each backed by a Pallas kernel package in ``repro.kernels``; the
+``backend`` field selects the implementation through the kernel backend
+seam — ``kernel`` runs the fused Pallas pass, ``ref`` the jnp oracle,
+``auto`` resolves per host (see ``repro.kernels.backend``).  The two are
+bit-identical — asserted by tests):
 
   none      : fp32 gradients as-is (the survey's baseline)
   onebit    : 1-bit SGD + error feedback        [Seide et al., 159]
@@ -54,6 +56,7 @@ from repro.kernels import onebit as K1
 from repro.kernels import qsgd as KQ
 from repro.kernels import terngrad as KT
 from repro.kernels import topk as KK
+from repro.kernels.backend import kernel_interpret, resolve_backend
 
 _LANE = 256
 # Default minimum trailing-axis length for per-channel two-bin
@@ -123,7 +126,7 @@ class Compressor:
     density: float = 0.01        # dgc
     s_levels: int = 127          # qsgd
     clip_sigma: float = 2.5      # terngrad
-    use_kernel: bool = False     # route through the Pallas kernel (interpret)
+    backend: str = "auto"        # kernel backend seam: auto | kernel | ref
     ef_gain: float = 2.0         # onebit EF over-relaxation (see above)
     min_channel: int = _MIN_CHANNEL   # channelwise-recon threshold (above)
 
@@ -166,47 +169,48 @@ class Compressor:
     # ------------------------------------------------------ onebit internals
     def _onebit_plane(self, m, valid=None):
         """1-bit compress a row-major [R, C] block: transmitted signs plus
-        the two-bin reconstruction.  Returns (recon [R, C], wire_bytes)."""
-        zero_e = jnp.zeros_like(m)
-        if self.use_kernel:
-            signs, _, _ = K1.compress(m, zero_e)
-        else:
-            signs, _, _ = K1.onebit_ref(m, zero_e)
-        recon = _two_bin_recon(signs, m, valid)
+        the two-bin reconstruction (masked to ``valid``).  Returns
+        (recon [R, C], wire_bytes).  One fused encode+EF kernel pass on
+        the kernel backend."""
+        valid_arr = None if valid is None else valid
+        _, _, _, out, _ = K1.encode_ef(m, None, valid_arr,
+                                       backend=self.backend)
         wb = -(-int(m.size) // 8) + 8 * int(m.shape[0])
-        return recon, wb
+        return out, wb
 
     def _leaf_onebit(self, g, e):
+        """One fused pass per leaf: the encode+EF kernel reads (g, e)
+        once and emits the sign plane, the bin means, the reconstruction,
+        and the next residual (``c_in = g + ef_gain*e`` with the residual
+        measured against ``c_true = g + e`` — the over-relaxation
+        telescoping from the module docstring, now inside the kernel)."""
         shape = g.shape
-        ctrue = g.astype(jnp.float32) + e.astype(jnp.float32)
-        cin = g.astype(jnp.float32) + self.ef_gain * e.astype(jnp.float32)
         chan = _channel_axis(shape, self.min_channel)
         if chan:
-            out, wb = self._onebit_plane(cin.reshape(-1, chan))
-            out = out.reshape(shape)
-        else:
-            c2, n = _to2d(cin)
-            zero_e = jnp.zeros_like(c2)
-            if self.use_kernel:
-                signs, scale, _ = K1.compress(c2, zero_e)
-            else:
-                signs, scale, _ = K1.onebit_ref(c2, zero_e)
-            out = _from2d(K1.decompress(signs, scale), n, shape)
-            wb = K1.wire_bytes(n)
-        new_e = ctrue - out
-        return out, new_e, wb
+            g2 = g.astype(jnp.float32).reshape(-1, chan)
+            e2 = e.astype(jnp.float32).reshape(-1, chan)
+            _, _, _, out, new_e = K1.encode_ef(g2, e2, gain=self.ef_gain,
+                                               backend=self.backend)
+            wb = -(-int(g.size) // 8) + 8 * int(g2.shape[0])
+            return out.reshape(shape), new_e.reshape(shape), wb
+        g2, n = _to2d(g)
+        e2, _ = _to2d(e)
+        # the flat fallback keeps the seed's symmetric sign*mean|c| plane
+        _, _, _, out, new_e = K1.encode_ef(g2, e2, gain=self.ef_gain,
+                                           symmetric=True,
+                                           backend=self.backend)
+        return (_from2d(out, n, shape), _from2d(new_e, n, shape),
+                K1.wire_bytes(n))
 
     def _leaf_dgc(self, g, e):
         shape = g.shape
         ctrue = g.astype(jnp.float32) + e.astype(jnp.float32)
         g2, n = _to2d(g)
         e2, _ = _to2d(e)
-        # quantile of the unpadded compensated gradient (pad zeros diluted it)
-        th = jnp.quantile(jnp.abs(ctrue).reshape(-1), 1.0 - self.density)
-        if self.use_kernel:
-            kept2, _ = KK.compress(g2, e2, th)
-        else:
-            kept2, _ = KK.topk_ref(g2, e2, th)
+        # quantile of the unpadded compensated gradient (pad zeros diluted
+        # it) — kernels/topk owns the selection rule
+        th = KK.threshold_for_density(g, e, self.density)
+        kept2, _ = KK.sparsify(g2, e2, th, backend=self.backend)
         kept = _from2d(kept2, n, shape)
         wb = KK.wire_bytes(n, self.density)
         chan = _channel_axis(shape, self.min_channel)
@@ -235,18 +239,17 @@ class Compressor:
         shape = g.shape
         if self.method == "terngrad":
             u = jax.random.uniform(r, g2.shape)
-            if self.use_kernel:
-                t, s = KT.compress(g2, u, clip_sigma=self.clip_sigma)
+            if resolve_backend(self.backend) == "kernel":
+                t, s = KT.compress(g2, u, clip_sigma=self.clip_sigma,
+                                   interpret=kernel_interpret())
             else:
                 t, s = KT.terngrad_ref(g2, u, self.clip_sigma)
             out = KT.decompress(t, s)
             return _from2d(out, n, shape), None, KT.wire_bytes(n)
         if self.method == "qsgd":
             u = jax.random.uniform(r, g2.shape)
-            if self.use_kernel:
-                q, nm = KQ.compress(g2, u, s_levels=self.s_levels)
-            else:
-                q, nm = KQ.qsgd_ref(g2, u, self.s_levels)
+            q, nm = KQ.quantize(g2, u, s_levels=self.s_levels,
+                                backend=self.backend)
             out = KQ.decompress(q, nm, s_levels=self.s_levels)
             return _from2d(out, n, shape), None, KQ.wire_bytes(n)
         raise ValueError(self.method)

@@ -1,4 +1,7 @@
-from repro.kernels.flash_attention.ops import (attention, attention_ref,
-                                               flash_attention)
+from repro.kernels.flash_attention.ops import (attention, attention_grad,
+                                               attention_ref, decode,
+                                               decode_ref, flash_attention,
+                                               flash_decode)
 
-__all__ = ["attention", "attention_ref", "flash_attention"]
+__all__ = ["attention", "attention_grad", "attention_ref", "decode",
+           "decode_ref", "flash_attention", "flash_decode"]

@@ -27,3 +27,27 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     s = jnp.where(mask[None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q, ck, cv, pos, *, window: int = 0):
+    """One-token decode oracle, repeat-free grouped einsum over the cache.
+
+    q [B, 1, H, hd]; ck, cv [B, L, KV, hd]; pos scalar int32 (traced).
+    Mirrors ``models.attention._gqa_decode_sdpa`` masking: ``window > 0``
+    treats the cache as a ring buffer and masks slots by age."""
+    B, _, H, hd = q.shape
+    L, KV = ck.shape[1], ck.shape[2]
+    G = H // KV
+    idx = jnp.arange(L)
+    if window:
+        age = (pos - idx) % window
+        mask1d = (pos - age) >= 0
+    else:
+        mask1d = idx <= pos
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bqkgd,blkd->bkgql", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    s = jnp.where(mask1d[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgql,blkd->bqkgd", p, cv.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

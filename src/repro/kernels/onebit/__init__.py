@@ -1,5 +1,6 @@
-from repro.kernels.onebit.ops import (compress, decompress, onebit_ref,
+from repro.kernels.onebit.ops import (compress, decompress, encode_ef,
+                                      onebit_encode_ef_ref, onebit_ref,
                                       pack_bits, unpack_bits, wire_bytes)
 
-__all__ = ["compress", "decompress", "onebit_ref", "pack_bits",
-           "unpack_bits", "wire_bytes"]
+__all__ = ["compress", "decompress", "encode_ef", "onebit_ref",
+           "onebit_encode_ef_ref", "pack_bits", "unpack_bits", "wire_bytes"]

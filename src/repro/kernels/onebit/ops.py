@@ -6,13 +6,32 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import kernel_interpret, resolve_backend
+from repro.kernels.onebit.fused import onebit_encode_ef
 from repro.kernels.onebit.onebit import onebit_compress
-from repro.kernels.onebit.ref import onebit_decompress_ref, onebit_ref
+from repro.kernels.onebit.ref import (onebit_decompress_ref,
+                                      onebit_encode_ef_ref, onebit_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
 def compress(g, e, *, block_r: int = 256, interpret: bool = True):
     return onebit_compress(g, e, block_r=block_r, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("gain", "symmetric", "block_r",
+                                             "backend"))
+def encode_ef(g, e=None, valid=None, *, gain: float = 1.0,
+              symmetric: bool = False, block_r: int = 256,
+              backend: str = "auto"):
+    """Fused 1-bit encode + EF residual (``fused.onebit_encode_ef``),
+    dispatched through the kernel backend seam: ``kernel`` runs the
+    single-pass Pallas kernel (interpret mode off-TPU), ``ref`` the
+    expression-identical jnp oracle."""
+    if resolve_backend(backend) == "kernel":
+        return onebit_encode_ef(g, e, valid, gain=gain, symmetric=symmetric,
+                                block_r=block_r,
+                                interpret=kernel_interpret())
+    return onebit_encode_ef_ref(g, e, valid, gain=gain, symmetric=symmetric)
 
 
 @jax.jit
@@ -46,5 +65,5 @@ def wire_bytes(numel: int) -> int:
     return numel // 8 + 4 * max(1, numel // 256)
 
 
-__all__ = ["compress", "decompress", "pack_bits", "unpack_bits", "onebit_ref",
-           "wire_bytes"]
+__all__ = ["compress", "decompress", "encode_ef", "pack_bits", "unpack_bits",
+           "onebit_ref", "onebit_encode_ef_ref", "wire_bytes"]

@@ -20,3 +20,34 @@ def onebit_ref(g, e):
 
 def onebit_decompress_ref(signs, scale):
     return signs.astype(jnp.float32) * scale
+
+
+def onebit_encode_ef_ref(g, e=None, valid=None, *, gain: float = 1.0,
+                         symmetric: bool = False):
+    """Oracle for the fused encode+EF kernel (``fused.onebit_encode_ef``):
+    same signature, same five outputs, expression-identical math."""
+    g = g.astype(jnp.float32)
+    if e is not None:
+        e = e.astype(jnp.float32)
+        cin = g + gain * e
+        ctrue = g + e
+    else:
+        cin = ctrue = g
+    signs = jnp.where(cin >= 0, jnp.int8(1), jnp.int8(-1))
+    if valid is not None:
+        valid = valid != 0
+    if symmetric:
+        sp = sn = jnp.mean(jnp.abs(cin), axis=-1, keepdims=True)
+    else:
+        pos = signs > 0
+        neg = ~pos
+        if valid is not None:
+            pos = pos & valid
+            neg = neg & valid
+        npos = jnp.maximum(jnp.sum(pos, axis=-1, keepdims=True), 1)
+        nneg = jnp.maximum(jnp.sum(neg, axis=-1, keepdims=True), 1)
+        sp = jnp.sum(jnp.where(pos, cin, 0.0), axis=-1, keepdims=True) / npos
+        sn = jnp.sum(jnp.where(neg, -cin, 0.0), axis=-1, keepdims=True) / nneg
+    recon = jnp.where(signs > 0, sp, -sn)
+    out = recon if valid is None else jnp.where(valid, recon, 0.0)
+    return signs, sp, sn, out, ctrue - out

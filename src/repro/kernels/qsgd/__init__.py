@@ -1,3 +1,4 @@
-from repro.kernels.qsgd.ops import compress, decompress, qsgd_ref, wire_bytes
+from repro.kernels.qsgd.ops import (compress, decompress, qsgd_ref, quantize,
+                                    wire_bytes)
 
-__all__ = ["compress", "decompress", "qsgd_ref", "wire_bytes"]
+__all__ = ["compress", "decompress", "quantize", "qsgd_ref", "wire_bytes"]

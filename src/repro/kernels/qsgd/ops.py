@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from repro.kernels.backend import kernel_interpret, resolve_backend
 from repro.kernels.qsgd.qsgd import qsgd_compress
 from repro.kernels.qsgd.ref import qsgd_decompress_ref, qsgd_ref
 
@@ -17,6 +18,18 @@ def compress(g, u, *, s_levels: int = 127, block_r: int = 256,
                          interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("s_levels", "block_r",
+                                             "backend"))
+def quantize(g, u, *, s_levels: int = 127, block_r: int = 256,
+             backend: str = "auto"):
+    """s-level stochastic quantize, dispatched through the kernel backend
+    seam.  Returns (levels int8 [R, C], norm scalar f32)."""
+    if resolve_backend(backend) == "kernel":
+        return qsgd_compress(g, u, s_levels=s_levels, block_r=block_r,
+                             interpret=kernel_interpret())
+    return qsgd_ref(g, u, s_levels)
+
+
 @functools.partial(jax.jit, static_argnames=("s_levels",))
 def decompress(q, norm, *, s_levels: int = 127):
     return qsgd_decompress_ref(q, norm, s_levels)
@@ -27,4 +40,4 @@ def wire_bytes(numel: int, s_levels: int = 127) -> int:
     return numel + 4
 
 
-__all__ = ["compress", "decompress", "qsgd_ref", "wire_bytes"]
+__all__ = ["compress", "decompress", "quantize", "qsgd_ref", "wire_bytes"]

@@ -1,4 +1,5 @@
-from repro.kernels.terngrad.ops import (compress, decompress, terngrad_ref,
-                                        wire_bytes)
+from repro.kernels.terngrad.ops import (compress, decompress, ternarize,
+                                        terngrad_ref, wire_bytes)
 
-__all__ = ["compress", "decompress", "terngrad_ref", "wire_bytes"]
+__all__ = ["compress", "decompress", "ternarize", "terngrad_ref",
+           "wire_bytes"]

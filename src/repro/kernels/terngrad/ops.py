@@ -6,8 +6,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.terngrad.ref import terngrad_decompress_ref, terngrad_ref
-from repro.kernels.terngrad.terngrad import terngrad_compress
+from repro.kernels.backend import kernel_interpret, resolve_backend
+from repro.kernels.terngrad.ref import (ternarize_ref,
+                                        terngrad_decompress_ref,
+                                        terngrad_ref)
+from repro.kernels.terngrad.terngrad import (terngrad_compress,
+                                             terngrad_ternarize)
 
 
 @functools.partial(jax.jit, static_argnames=("clip_sigma", "interpret",
@@ -16,6 +20,17 @@ def compress(g, u, *, clip_sigma: float = 2.5, block_r: int = 256,
              interpret: bool = True):
     return terngrad_compress(g, u, clip_sigma=clip_sigma, block_r=block_r,
                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "backend"))
+def ternarize(gc, u, s, *, block_r: int = 256, backend: str = "auto"):
+    """Stochastic ternarize of pre-clipped rows with an external scale,
+    dispatched through the kernel backend seam (the segment-codec entry:
+    statistics come from the unpadded payload)."""
+    if resolve_backend(backend) == "kernel":
+        return terngrad_ternarize(gc, u, s, block_r=block_r,
+                                  interpret=kernel_interpret())
+    return ternarize_ref(gc, u, s)
 
 
 @jax.jit
@@ -28,4 +43,5 @@ def wire_bytes(numel: int) -> int:
     return numel // 4 + 4
 
 
-__all__ = ["compress", "decompress", "terngrad_ref", "wire_bytes"]
+__all__ = ["compress", "decompress", "ternarize", "terngrad_ref",
+           "wire_bytes"]

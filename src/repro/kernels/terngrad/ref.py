@@ -22,5 +22,14 @@ def terngrad_ref(g, u, clip_sigma: float = 2.5):
     return tern, s
 
 
+def ternarize_ref(gc, u, s):
+    """Oracle for ``terngrad_ternarize``: pre-clipped rows, external scale
+    (the segment-codec math in ``comm/codecs.py``)."""
+    gc = gc.astype(jnp.float32)
+    p = jnp.abs(gc) / jnp.maximum(s, 1e-30)
+    b = (u < p).astype(jnp.int8)
+    return jnp.sign(gc).astype(jnp.int8) * b
+
+
 def terngrad_decompress_ref(tern, s):
     return tern.astype(jnp.float32) * s

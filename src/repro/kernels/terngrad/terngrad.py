@@ -24,6 +24,34 @@ def _kernel(g_ref, u_ref, stats_ref, t_ref):
     t_ref[...] = jnp.sign(g).astype(jnp.int8) * b
 
 
+def terngrad_ternarize(gc, u, s, *, block_r: int = 256,
+                       interpret: bool = True):
+    """Ternarize pre-clipped rows against a precomputed scale ``s``.
+
+    The segment codec computes its statistics on the *unpadded* payload
+    before row-padding, so the kernel cannot re-derive them from the rows
+    it sees; passing ``stats = [0, s]`` skips the in-kernel clip branch
+    and reuses the same fused elementwise pass.  gc, u [R, C] -> int8."""
+    stats = jnp.stack([jnp.float32(0.0), jnp.asarray(s, jnp.float32)]
+                      ).reshape(1, 2)
+    R, C = gc.shape
+    br = min(block_r, R)
+    r_pad = (R + br - 1) // br * br
+    gp = jnp.pad(gc.astype(jnp.float32), ((0, r_pad - R), (0, 0)))
+    up = jnp.pad(u, ((0, r_pad - R), (0, 0)), constant_values=1.0)
+    tern = pl.pallas_call(
+        _kernel,
+        grid=(r_pad // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, C), jnp.int8),
+        interpret=interpret,
+    )(gp, up, stats)
+    return tern[:R]
+
+
 def terngrad_compress(g, u, *, clip_sigma: float = 2.5, block_r: int = 256,
                       interpret: bool = True):
     """g, u [R, C] -> (tern int8 [R, C], scale scalar f32)."""

@@ -1,4 +1,5 @@
-from repro.kernels.topk.ops import (compress, threshold_for_density, topk_ref,
-                                    wire_bytes)
+from repro.kernels.topk.ops import (compress, sparsify, threshold_for_density,
+                                    topk_ref, wire_bytes)
 
-__all__ = ["compress", "threshold_for_density", "topk_ref", "wire_bytes"]
+__all__ = ["compress", "sparsify", "threshold_for_density", "topk_ref",
+           "wire_bytes"]

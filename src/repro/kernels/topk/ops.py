@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import kernel_interpret, resolve_backend
 from repro.kernels.topk.ref import threshold_for_density, topk_ref
 from repro.kernels.topk.topk import topk_compress
 
@@ -16,9 +17,20 @@ def compress(g, e, threshold, *, block_r: int = 256, interpret: bool = True):
                          interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("block_r", "backend"))
+def sparsify(g, e, threshold, *, block_r: int = 256, backend: str = "auto"):
+    """Fused threshold-sparsify + error accumulation, dispatched through
+    the kernel backend seam.  Returns (kept f32 [R, C], new_e f32)."""
+    if resolve_backend(backend) == "kernel":
+        return topk_compress(g, e, threshold, block_r=block_r,
+                             interpret=kernel_interpret())
+    return topk_ref(g, e, threshold)
+
+
 def wire_bytes(numel: int, density: float) -> int:
     """(4B index + 4B value) per surviving element."""
     return int(numel * density) * 8
 
 
-__all__ = ["compress", "topk_ref", "threshold_for_density", "wire_bytes"]
+__all__ = ["compress", "sparsify", "topk_ref", "threshold_for_density",
+           "wire_bytes"]

@@ -1,8 +1,15 @@
 """GQA / MQA / MHA attention with full, sliding-window, and cross variants.
 
-Pure-jnp reference math (the dry-run path); the Pallas flash-attention kernel
-in ``repro.kernels.flash_attention`` is an optional drop-in for the training
-forward (validated against this math in interpret mode).
+Pure-jnp reference math is the oracle; the Pallas kernels in
+``repro.kernels.flash_attention`` are routed in through the kernel backend
+seam.  ``attention_forward`` / ``attention_decode`` take a ``backend``
+argument (default: the model config's ``attn_backend`` field, ``"auto"``)
+resolved by ``repro.kernels.backend.resolve_backend`` — ``kernel`` runs the
+flash forward (with a reference-math VJP for training) and the streaming
+decode kernel; ``ref`` keeps the jnp expressions below bit-for-bit.
+Cross-attention (``kv_x`` / ``cross_kv``) always uses the reference path:
+its keys come from a different sequence length and carry the decode
+sharding hints the kernel does not model.
 
 Cache layouts
 -------------
@@ -14,6 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import flash_attention as FA
+from repro.kernels.backend import kernel_interpret, resolve_backend
 from repro.models.common import dense, dense_init, apply_rope, apply_mrope
 
 NEG_INF = -1e9
@@ -70,13 +79,18 @@ def _window_mask(sq, sk, window, offset=0):
 
 
 def attention_forward(p, x, positions, cfg, *, causal=True, window=0,
-                      kv_x=None, use_rope=True):
+                      kv_x=None, use_rope=True, backend=None):
     """Training / prefill / encoder forward.
 
     kv_x: if given, cross-attention keys/values come from kv_x (no rope).
+    backend: kernel backend ("auto" | "kernel" | "ref"); None reads the
+    config's ``attn_backend``.  The kernel path feeds the *unrepeated* k/v
+    straight to the flash kernel (GQA folds in the BlockSpec index map).
     Returns (out, cache) where cache has the full k/v (for prefill reuse).
     """
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if backend is None:
+        backend = getattr(cfg, "attn_backend", "auto")
     src = x if kv_x is None else kv_x
     q = _split_heads(dense(p["wq"], x), H, hd)
     k = _split_heads(dense(p["wk"], src), KV, hd)
@@ -88,18 +102,23 @@ def attention_forward(p, x, positions, cfg, *, causal=True, window=0,
         else:
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
-    kr = _repeat_kv(k, H // KV)
-    vr = _repeat_kv(v, H // KV)
-    sq, sk = q.shape[1], kr.shape[1]
-    if kv_x is not None:
-        mask = jnp.ones((1, 1, sq, sk), dtype=bool)
-    elif not causal:
-        mask = jnp.ones((1, 1, sq, sk), dtype=bool)
-    elif window:
-        mask = _window_mask(sq, sk, window)
+    if kv_x is None and resolve_backend(backend) == "kernel":
+        out = FA.attention_grad(q, k, v, causal=causal,
+                                window=window if causal else 0,
+                                interpret=kernel_interpret())
     else:
-        mask = _causal_mask(sq, sk)
-    out = _sdpa(q, kr, vr, mask)
+        kr = _repeat_kv(k, H // KV)
+        vr = _repeat_kv(v, H // KV)
+        sq, sk = q.shape[1], kr.shape[1]
+        if kv_x is not None:
+            mask = jnp.ones((1, 1, sq, sk), dtype=bool)
+        elif not causal:
+            mask = jnp.ones((1, 1, sq, sk), dtype=bool)
+        elif window:
+            mask = _window_mask(sq, sk, window)
+        else:
+            mask = _causal_mask(sq, sk)
+        out = _sdpa(q, kr, vr, mask)
     out = dense(p["wo"], out.reshape(out.shape[:2] + (H * hd,)))
     return out, {"k": k, "v": v}
 
@@ -112,14 +131,18 @@ def init_cache(cfg, batch: int, max_len: int, dtype, window: int = 0):
 
 
 def attention_decode(p, x, pos, cache, cfg, *, window=0, cross_kv=None,
-                     use_rope=True):
+                     use_rope=True, backend=None):
     """One-token decode step.  x [B,1,d]; pos scalar int32 (same for batch).
 
     window > 0 -> ring-buffer cache of that length (sub-quadratic decode).
     cross_kv -> (k, v) precomputed encoder keys/values; cache unused.
+    backend: kernel backend seam (None reads the config's ``attn_backend``);
+    the kernel path streams the cache through ``flash_decode``.
     Returns (out [B,1,d], new_cache).
     """
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if backend is None:
+        backend = getattr(cfg, "attn_backend", "auto")
     B = x.shape[0]
     q = _split_heads(dense(p["wq"], x), H, hd)
     if cross_kv is not None:
@@ -154,15 +177,19 @@ def attention_decode(p, x, pos, cache, cfg, *, window=0, cross_kv=None,
                                       (0, slot, 0, 0))
     ck = attn_decode_constraint(ck, "cache4d")
     cv = attn_decode_constraint(cv, "cache4d")
-    idx = jnp.arange(L)
-    if window:
-        # slot j holds global position p_j with p_j % W == j and p_j <= pos;
-        # valid iff pos - p_j < W  <=>  p_j > pos - W, and p_j >= 0.
-        age = (pos - idx) % window            # steps since slot was written
-        mask1d = (pos - age) >= 0
+    if resolve_backend(backend) == "kernel":
+        out = FA.decode(q, ck, cv, jnp.asarray(pos, jnp.int32),
+                        window=window, interpret=kernel_interpret())
     else:
-        mask1d = idx <= pos
-    out = _gqa_decode_sdpa(q, ck, cv, mask1d)
+        idx = jnp.arange(L)
+        if window:
+            # slot j holds global position p_j with p_j % W == j and
+            # p_j <= pos; valid iff pos - p_j < W <=> p_j > pos - W, >= 0.
+            age = (pos - idx) % window        # steps since slot was written
+            mask1d = (pos - age) >= 0
+        else:
+            mask1d = idx <= pos
+        out = _gqa_decode_sdpa(q, ck, cv, mask1d)
     out = dense(p["wo"], out.reshape(B, 1, H * hd))
     return out, {"k": ck, "v": cv}
 

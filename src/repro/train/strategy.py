@@ -62,6 +62,7 @@ import jax
 
 from repro.core.allreduce import TOPOLOGIES
 from repro.core.compression import EF_METHODS, METHODS, Compressor
+from repro.kernels.backend import KERNEL_BACKENDS
 from repro.core.sync import SimSyncEngine, SyncConfig
 from repro.parallel.mesh_plan import (MeshSpec, OPTIMIZERS, parse_suffix,
                                       suffix_spec)
@@ -131,6 +132,13 @@ class Strategy:
     compression: Union[str, Compressor] = "none"
     workers: int = 4
     backend: str = "auto"            # auto | sim | device
+    # kernel backend seam (docs/kernels.md): which implementation the
+    # codec math runs on — "kernel" the Pallas kernels, "ref" the jnp
+    # oracles, "auto" resolved per host (TPU -> kernel, else ref; the
+    # REPRO_KERNEL_BACKEND env var overrides "auto").  Applies when
+    # ``compression`` is a method name or a Compressor left at
+    # backend="auto"; a Compressor with an explicit backend wins.
+    kernel_backend: str = "auto"     # auto | kernel | ref
     staleness: int = 3               # SSP bound s
     backup: int = 0                  # BSP backup workers: drop the k slowest
     lr: float = 0.1
@@ -167,6 +175,9 @@ class Strategy:
             raise ValueError(f"compression={method!r} not in {METHODS}")
         if self.backend not in ("auto", "sim", "device"):
             raise ValueError(f"backend={self.backend!r}")
+        if self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(f"kernel_backend={self.kernel_backend!r} not "
+                             f"in {KERNEL_BACKENDS}")
         if self.workers < 1:
             raise ValueError("workers must be >= 1")
         if self.staleness < 0:
@@ -266,8 +277,13 @@ class Strategy:
     @property
     def compressor(self) -> Compressor:
         if isinstance(self.compression, Compressor):
-            return self.compression
-        return Compressor(self.compression, density=self.density)
+            comp = self.compression
+            if self.kernel_backend != "auto" and comp.backend == "auto":
+                comp = dataclasses.replace(comp,
+                                           backend=self.kernel_backend)
+            return comp
+        return Compressor(self.compression, density=self.density,
+                          backend=self.kernel_backend)
 
     def spec(self) -> str:
         """Canonical spec string (inverse of ``parse``)."""

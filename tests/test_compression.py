@@ -67,8 +67,8 @@ def test_error_feedback_telescopes_across_steps(method):
 def test_kernel_path_matches_ref_path(method):
     g = _grads()
     rng = jax.random.PRNGKey(3)
-    c_ref = Compressor(method, use_kernel=False)
-    c_ker = Compressor(method, use_kernel=True)
+    c_ref = Compressor(method, backend="ref")
+    c_ker = Compressor(method, backend="kernel")
     o1, s1, w1 = c_ref.roundtrip(g, c_ref.init_state(g), rng)
     o2, s2, w2 = c_ker.roundtrip(g, c_ker.init_state(g), rng)
     assert w1 == w2

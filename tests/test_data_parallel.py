@@ -122,17 +122,17 @@ print("ENGINE-MATCHES-SIM")
 
 # --- compressed path: Pallas kernel vs jnp oracle, bit-identical losses ---
 losses = {}
-for use_kernel in (False, True):
+for backend in ("ref", "kernel"):
     eng = DataParallelEngine(
         DataParallelConfig(num_workers=K, lr=0.01, topology="butterfly",
                            compressor=Compressor("onebit",
-                                                 use_kernel=use_kernel)),
+                                                 backend=backend)),
         grad_fn)
     _, h, w = eng.run(params, batches, 2)
-    losses[use_kernel] = [x["loss"] for x in h]
+    losses[backend] = [x["loss"] for x in h]
     assert w == eng.wire_bytes_per_step(params) * 2, (
         w, eng.wire_bytes_per_step(params))
-assert losses[False] == losses[True], losses
+assert losses["ref"] == losses["kernel"], losses
 print("KERNEL-REF-IDENTICAL")
 
 # --- EF state round-trips: second run from engine state continues sane ---

@@ -1,0 +1,57 @@
+"""Hypothesis property tests on the compression-kernel invariants.
+
+Kept separate from tests/test_kernels.py so the deterministic kernel-vs-ref
+sweeps still run on hosts without the optional hypothesis dev dep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import onebit, qsgd, terngrad
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_onebit_error_feedback_telescopes(r, c, seed):
+    """EF invariant: compensated gradient == transmitted + residual exactly,
+    so no information is ever lost across steps (Seide et al.)."""
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (r, c))
+    e = jax.random.normal(jax.random.fold_in(k, 1), (r, c))
+    signs, scale, new_e = onebit.onebit_ref(g, e)
+    recon = signs.astype(jnp.float32) * scale + new_e
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(g + e),
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_terngrad_unbiased_support(r, c, seed):
+    """TernGrad values are in {-1,0,1} * s and sign-consistent with g."""
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (r, c))
+    u = jax.random.uniform(jax.random.fold_in(k, 1), (r, c))
+    t, s = terngrad.terngrad_ref(g, u)
+    assert set(np.unique(np.asarray(t))) <= {-1, 0, 1}
+    nz = np.asarray(t) != 0
+    assert np.all(np.sign(np.asarray(t)[nz]) == np.sign(np.asarray(g)[nz]))
+    assert float(s) >= 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 200), st.integers(0, 2**31 - 1),
+       st.sampled_from([3, 15, 127]))
+def test_qsgd_reconstruction_bounded(r, c, seed, levels):
+    """QSGD: |decompressed - g| <= ||g||/s per element (stochastic rounding
+    never moves more than one level)."""
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (r, c))
+    u = jax.random.uniform(jax.random.fold_in(k, 1), (r, c))
+    q, norm = qsgd.qsgd_ref(g, u, levels)
+    recon = qsgd.decompress(q, norm, s_levels=levels)
+    assert np.all(np.abs(np.asarray(recon - g)) <= float(norm) / levels + 1e-5)

@@ -1,18 +1,36 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle,
-plus hypothesis property tests on the compression invariants."""
+the kernel-backend seam (fused encode+EF, codec planes, flash decode, the
+trainable flash forward), and the strategy-level backend-parity acceptance
+cells on virtual devices.
+
+Hypothesis property tests live in tests/test_kernel_properties.py so these
+sweeps run even without the optional dev dep."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis "
-    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
 
+from repro.comm.codecs import make_codec
 from repro.kernels import flash_attention as FA
 from repro.kernels import onebit, qsgd, terngrad, topk
+from repro.kernels.backend import resolve_backend
 
 KEY = jax.random.PRNGKey(42)
+
+
+# ------------------------------------------------------------ backend seam
+def test_resolve_backend_contract(monkeypatch):
+    """auto resolves per host (ref on this CPU container), explicit
+    choices pass through, garbage is rejected, env overrides auto."""
+    assert resolve_backend("kernel") == "kernel"
+    assert resolve_backend("ref") == "ref"
+    assert resolve_backend("auto") in ("kernel", "ref")
+    with pytest.raises(ValueError):
+        resolve_backend("bogus")
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "kernel")
+    assert resolve_backend("auto") == "kernel"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    assert resolve_backend("auto") == "ref"
 
 
 # ------------------------------------------------------------ flash attention
@@ -55,6 +73,85 @@ def test_flash_attention_noncausal():
     assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
 
 
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16),
+                                           (False, 0)])
+def test_flash_attention_grad_matches_ref(causal, window):
+    """The trainable entry: flash forward, reference-math VJP.  Both the
+    value and every input gradient must match the jnp oracle under
+    value_and_grad."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 48, 8, 32))
+    k = jax.random.normal(ks[1], (2, 48, 2, 32))
+    v = jax.random.normal(ks[2], (2, 48, 2, 32))
+
+    def loss_k(q, k, v):
+        return jnp.sum(FA.attention_grad(q, k, v, causal=causal,
+                                         window=window) ** 2)
+
+    def loss_r(q, k, v):
+        return jnp.sum(FA.attention_ref(q, k, v, causal=causal,
+                                        window=window) ** 2)
+
+    vk, gk = jax.value_and_grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    vr, gr = jax.value_and_grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    assert abs(float(vk - vr)) < 1e-2
+    for a, b in zip(gk, gr):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+
+
+@pytest.mark.parametrize("pos", [0, 5, 39])
+def test_flash_decode_full_cache(pos):
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, hd, L = 2, 8, 2, 64, 40
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    ck = jax.random.normal(ks[1], (B, L, KV, hd))
+    cv = jax.random.normal(ks[2], (B, L, KV, hd))
+    out = FA.decode(q, ck, cv, jnp.int32(pos), block_k=16)
+    ref = FA.decode_ref(q, ck, cv, jnp.int32(pos))
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+@pytest.mark.parametrize("pos", [0, 7, 23, 100])
+def test_flash_decode_ring_window(pos):
+    """Ring-buffer cache: slots masked by age exactly like the jnp decode
+    path, including the partially-filled early steps."""
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, hd, W = 2, 4, 2, 32, 16
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    ck = jax.random.normal(ks[1], (B, W, KV, hd))
+    cv = jax.random.normal(ks[2], (B, W, KV, hd))
+    out = FA.decode(q, ck, cv, jnp.int32(pos), window=W, block_k=8)
+    ref = FA.decode_ref(q, ck, cv, jnp.int32(pos), window=W)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+def test_attention_module_backend_parity():
+    """models.attention routed through the seam: kernel and ref backends
+    agree on forward (causal / windowed / encoder) and decode."""
+    from repro.configs import get_config
+    from repro.models import attention as attn
+    cfg = get_config("tinyllama-1.1b").reduced()
+    p = attn.attn_init(KEY, cfg)
+    B, S = 2, 24
+    x = jax.random.normal(KEY, (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for kw in (dict(causal=True), dict(causal=True, window=8),
+               dict(causal=False)):
+        o_r, _ = attn.attention_forward(p, x, pos, cfg, backend="ref", **kw)
+        o_k, _ = attn.attention_forward(p, x, pos, cfg, backend="kernel",
+                                        **kw)
+        assert float(jnp.max(jnp.abs(o_r - o_k))) < 1e-4, kw
+    xt = jax.random.normal(KEY, (B, 1, cfg.d_model))
+    caches = {b: attn.init_cache(cfg, B, 8, jnp.float32) for b in
+              ("ref", "kernel")}
+    for t in range(4):
+        outs = {}
+        for b in ("ref", "kernel"):
+            outs[b], caches[b] = attn.attention_decode(
+                p, xt, jnp.int32(t), caches[b], cfg, backend=b)
+        assert float(jnp.max(jnp.abs(outs["ref"] - outs["kernel"]))) < 1e-4
+
+
 # ----------------------------------------------------------- compression
 SHAPES = [(8, 128), (64, 256), (100, 512), (3, 1024)]
 
@@ -72,6 +169,39 @@ def test_onebit_kernel_vs_ref(R, C):
 
 
 @pytest.mark.parametrize("R,C", SHAPES)
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_onebit_fused_encode_ef_kernel_vs_ref(R, C, symmetric):
+    """The fused single-pass encode+EF kernel (signs, bin means, recon,
+    next residual from one read of g/e) is bitwise the jnp oracle."""
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], (R, C))
+    e = jax.random.normal(ks[1], (R, C)) * 0.3
+    out_k = onebit.encode_ef(g, e, gain=2.0, symmetric=symmetric,
+                             backend="kernel")
+    out_r = onebit.encode_ef(g, e, gain=2.0, symmetric=symmetric,
+                             backend="ref")
+    for a, b in zip(out_k, out_r):
+        assert jnp.array_equal(a, b)
+    signs, sp, sn, recon, new_e = out_r
+    # EF telescoping: recon + residual == g + e (any gain)
+    np.testing.assert_allclose(np.asarray(recon + new_e), np.asarray(g + e),
+                               atol=1e-5)
+
+
+def test_onebit_fused_encode_ef_masks_invalid_lanes():
+    """Pad lanes flagged invalid must transmit nothing: recon 0, and they
+    never contaminate the bin means of real lanes."""
+    g = jnp.ones((4, 128)) * 3.0
+    valid = jnp.zeros((4, 128), jnp.int8).at[:, :100].set(1)
+    for backend in ("ref", "kernel"):
+        _, _, _, recon, _ = onebit.encode_ef(
+            g, None, valid, backend=backend)
+        assert np.all(np.asarray(recon[:, 100:]) == 0.0), backend
+        np.testing.assert_allclose(np.asarray(recon[:, :100]), 3.0,
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("R,C", SHAPES)
 def test_terngrad_qsgd_kernel_vs_ref(R, C):
     ks = jax.random.split(KEY, 2)
     g = jax.random.normal(ks[0], (R, C))
@@ -82,6 +212,29 @@ def test_terngrad_qsgd_kernel_vs_ref(R, C):
     q_k, n_k = qsgd.compress(g, u)
     q_r, n_r = qsgd.qsgd_ref(g, u)
     assert jnp.array_equal(q_k, q_r) and jnp.allclose(n_k, n_r)
+
+
+@pytest.mark.parametrize("R,C", SHAPES)
+def test_dispatch_entries_kernel_vs_ref(R, C):
+    """The backend-dispatching ops entries (the ones the codecs call)
+    agree across backends: terngrad.ternarize, qsgd.quantize,
+    topk.sparsify."""
+    ks = jax.random.split(KEY, 3)
+    g = jax.random.normal(ks[0], (R, C))
+    u = jax.random.uniform(ks[1], (R, C))
+    e = jax.random.normal(ks[2], (R, C)) * 0.1
+    sigma = 2.5 * jnp.std(g)
+    gc = jnp.clip(g, -sigma, sigma)
+    s = jnp.max(jnp.abs(gc))                 # scalar scale, codec-style
+    assert jnp.array_equal(terngrad.ternarize(gc, u, s, backend="kernel"),
+                           terngrad.ternarize(gc, u, s, backend="ref"))
+    for a, b in zip(qsgd.quantize(g, u, backend="kernel"),
+                    qsgd.quantize(g, u, backend="ref")):
+        assert jnp.array_equal(a, b)
+    th = topk.threshold_for_density(g, e, 0.05)
+    for a, b in zip(topk.sparsify(g, e, th, backend="kernel"),
+                    topk.sparsify(g, e, th, backend="ref")):
+        assert jnp.array_equal(a, b)
 
 
 @pytest.mark.parametrize("R,C", SHAPES)
@@ -107,44 +260,143 @@ def test_pack_unpack_roundtrip():
     assert jnp.array_equal(onebit.unpack_bits(words, C=256), signs)
 
 
-# --------------------------------------------------- hypothesis properties
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 40), st.integers(1, 300), st.integers(0, 2**31 - 1))
-def test_onebit_error_feedback_telescopes(r, c, seed):
-    """EF invariant: compensated gradient == transmitted + residual exactly,
-    so no information is ever lost across steps (Seide et al.)."""
-    k = jax.random.PRNGKey(seed)
-    g = jax.random.normal(k, (r, c))
-    e = jax.random.normal(jax.random.fold_in(k, 1), (r, c))
-    signs, scale, new_e = onebit.onebit_ref(g, e)
-    recon = signs.astype(jnp.float32) * scale + new_e
-    np.testing.assert_allclose(np.asarray(recon), np.asarray(g + e),
-                               atol=1e-5)
+# --------------------------------------------------- codec backend parity
+@pytest.mark.parametrize("method,kw", [
+    ("onebit", {}), ("terngrad", {}), ("qsgd", {}),
+    ("dgc", {"density": 0.05}),
+])
+def test_codec_backends_bitwise_identical(method, kw):
+    """The CommPlan codecs produce bitwise-identical wire planes and EF
+    residuals on both backends — what keeps measured wire accounting
+    backend-independent."""
+    seg = jax.random.normal(jax.random.PRNGKey(5), (700,))
+    key = jax.random.PRNGKey(1)
+    out = {}
+    for backend in ("ref", "kernel"):
+        codec = make_codec(method, backend=backend, **kw)
+        planes, res = codec.encode_ef(seg, key)
+        out[backend] = (planes, res, codec.decode(planes),
+                        codec.sent_elems(planes))
+    pr, rr, dr, sr = out["ref"]
+    pk, rk, dk, sk = out["kernel"]
+    assert sorted(pr) == sorted(pk)
+    for name in pr:
+        assert jnp.array_equal(pr[name], pk[name]), (method, name)
+    assert jnp.array_equal(rr, rk)
+    assert jnp.array_equal(dr, dk)
+    assert int(sr) == int(sk)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 20), st.integers(1, 200), st.integers(0, 2**31 - 1))
-def test_terngrad_unbiased_support(r, c, seed):
-    """TernGrad values are in {-1,0,1} * s and sign-consistent with g."""
-    k = jax.random.PRNGKey(seed)
-    g = jax.random.normal(k, (r, c))
-    u = jax.random.uniform(jax.random.fold_in(k, 1), (r, c))
-    t, s = terngrad.terngrad_ref(g, u)
-    assert set(np.unique(np.asarray(t))) <= {-1, 0, 1}
-    nz = np.asarray(t) != 0
-    assert np.all(np.sign(np.asarray(t)[nz]) == np.sign(np.asarray(g)[nz]))
-    assert float(s) >= 0
+def test_dgc_sent_elems_wire_accounting_backend_invariant():
+    """Regression for the kernels/topk-backed selection: the traced
+    sent_elems count (what measured wire bytes are billed from) must not
+    move when the selection runs through the Pallas kernel, across
+    densities and degenerate segments."""
+    key = jax.random.PRNGKey(9)
+    segs = [jax.random.normal(key, (2048,)),
+            jnp.zeros((512,)),                       # degenerate: all-zero
+            jnp.ones((300,)).at[7].set(100.0)]       # near-constant
+    for density in (0.01, 0.05, 0.25):
+        for seg in segs:
+            counts = {}
+            for backend in ("ref", "kernel"):
+                codec = make_codec("dgc", density=density, backend=backend)
+                counts[backend] = int(codec.sent_elems(codec.encode(seg)))
+            assert counts["ref"] == counts["kernel"], (density, seg.shape)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 20), st.integers(1, 200), st.integers(0, 2**31 - 1),
-       st.sampled_from([3, 15, 127]))
-def test_qsgd_reconstruction_bounded(r, c, seed, levels):
-    """QSGD: |decompressed - g| <= ||g||/s per element (stochastic rounding
-    never moves more than one level)."""
-    k = jax.random.PRNGKey(seed)
-    g = jax.random.normal(k, (r, c))
-    u = jax.random.uniform(jax.random.fold_in(k, 1), (r, c))
-    q, norm = qsgd.qsgd_ref(g, u, levels)
-    recon = qsgd.decompress(q, norm, s_levels=levels)
-    assert np.all(np.abs(np.asarray(recon - g)) <= float(norm) / levels + 1e-5)
+# ------------------------------------- strategy backend parity (subprocess)
+SCRIPT_BACKEND_PARITY = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.train import Strategy
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (64, 1))
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 64))
+    return {"X": X, "y": X @ W_TRUE}
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+P0 = {"W": jnp.zeros((64, 1)), "b": jnp.zeros((4096,))}
+
+# --- compressed cells: kernel backend inside the existing loss bands ---
+for comp in ("onebit", "terngrad", "qsgd"):
+    runs = {}
+    for kb in ("ref", "kernel"):
+        eng = Strategy.parse(f"bsp/ring/{comp}@4", lr=0.05,
+                             backend="device", wire="measured",
+                             kernel_backend=kb).build(grad_fn)
+        runs[kb] = eng.run(P0, make_batch, 3)
+    lr_ = [h["loss"] for h in runs["ref"][1]]
+    lk = [h["loss"] for h in runs["kernel"][1]]
+    ld = max(abs(a - b) for a, b in zip(lr_, lk))
+    assert ld <= 1e-4, (comp, lr_, lk)
+    assert runs["ref"][2] == runs["kernel"][2], comp   # measured wire bytes
+print("CODEC-BACKEND-PARITY-OK")
+
+# --- none cells: the backend knob must be a bitwise no-op ---
+for topo in ("ring", "tree", "butterfly"):
+    runs = {}
+    for kb in ("ref", "kernel"):
+        eng = Strategy.parse(f"bsp/{topo}/none@4", lr=0.05,
+                             backend="device", wire="measured",
+                             kernel_backend=kb).build(grad_fn)
+        runs[kb] = eng.run(P0, make_batch, 3)
+    for a, b in zip(jax.tree.leaves(runs["ref"][0]),
+                    jax.tree.leaves(runs["kernel"][0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [h["loss"] for h in runs["ref"][1]] == \
+           [h["loss"] for h in runs["kernel"][1]], topo
+    assert runs["ref"][2] == runs["kernel"][2], topo
+print("NONE-BACKEND-BITWISE-OK")
+"""
+
+
+def test_strategy_kernel_backend_parity_4dev(multidevice):
+    out = multidevice(SCRIPT_BACKEND_PARITY, 4)
+    assert "CODEC-BACKEND-PARITY-OK" in out
+    assert "NONE-BACKEND-BITWISE-OK" in out
+
+
+# ---------------------------- ISSUE acceptance cell (subprocess, 8 devices)
+SCRIPT_ONEBIT8 = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.data import LMDataConfig, make_lm_batches
+from repro.models import build_model
+from repro.train import Strategy
+
+cfg = get_config("tinyllama-1.1b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=32, batch_size=4)
+batches = make_lm_batches(data)
+def grad_fn(p, batch):
+    (loss, _), g = jax.value_and_grad(
+        lambda pp: model.loss_fn(pp, batch, compute_dtype=jnp.float32),
+        has_aux=True)(p)
+    return loss, g
+
+runs = {}
+for kb in ("ref", "kernel"):
+    eng = Strategy.parse("bsp/ring/onebit@8", lr=0.01, backend="device",
+                         wire="measured", kernel_backend=kb).build(grad_fn)
+    _, hist, wire = eng.run(params, batches, 4)
+    m = eng.metrics()
+    runs[kb] = ([h["loss"] for h in hist], wire,
+                m["measured_step_tx_bytes"] / m["fp32_step_tx_bytes"])
+ld = max(abs(a - b) for a, b in zip(runs["ref"][0], runs["kernel"][0]))
+assert ld <= 1e-4, (ld, runs["ref"][0], runs["kernel"][0])
+assert runs["ref"][1] == runs["kernel"][1], runs   # bitwise wire bytes
+assert runs["ref"][2] <= 0.05, runs["ref"][2]      # the 0.039x fp32-ring cell
+print(f"ONEBIT8-BACKEND-OK loss_delta={ld:.2e} "
+      f"bytes_ratio={runs['ref'][2]:.4f}")
+"""
+
+
+def test_onebit8_kernel_backend_acceptance(multidevice):
+    out = multidevice(SCRIPT_ONEBIT8, 8)
+    assert "ONEBIT8-BACKEND-OK" in out
