@@ -8,7 +8,7 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench strategies elastic hybrid comm kernels
+.PHONY: smoke tier1 bench strategies elastic hybrid comm kernels serve
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -50,11 +50,18 @@ comm:
 kernels:
 	$(PYTEST) $(SMOKE_TIMEOUT) python tools/kernel_smoke.py
 
+# Serving gate: paged/contiguous/seed-loop token equivalence,
+# continuous-vs-oneshot latency win, pool-exhaustion stalls, the
+# autoscale->sched->elastic plan loop, and a 2-virtual-device
+# tensor-parallel decode cell (see docs/serving.md).
+serve:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/serve_smoke.py
+
 # Full tier-1 verify (ROADMAP.md): the strategy-matrix, elasticity,
-# hybrid-mesh, comm-plane, and kernel-backend gates plus everything in
-# tests/, including the 8-virtual-device subprocess tests and end-to-end
-# training compositions.
-tier1: strategies elastic hybrid comm kernels
+# hybrid-mesh, comm-plane, kernel-backend, and serving gates plus
+# everything in tests/, including the 8-virtual-device subprocess tests
+# and end-to-end training compositions.
+tier1: strategies elastic hybrid comm kernels serve
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

@@ -25,6 +25,7 @@ BENCHES = [
     ("scheduler", "benchmarks.scheduler_bench"),        # §3.4.2
     ("elastic", "benchmarks.elastic_bench"),            # §3.2.3 / §3.4.2
     ("kernel", "benchmarks.kernel_bench"),              # §3.3.3 hot spots
+    ("serve", "benchmarks.serve_bench"),                # §5 serving plane
 ]
 
 

@@ -1,30 +1,58 @@
-"""Serving launcher: batched greedy decoding on this host (reduced config).
+"""Serving launcher: the continuous-batching engine on this host
+(reduced config), driven by an open-loop arrival trace.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
-      --prompt-len 8 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --smoke --requests 8 --rate 0.5 --policy continuous --pages 4
+
+  # static-batching baseline on the same trace
+  PYTHONPATH=src python -m repro.launch.serve --smoke --policy oneshot
+
+  # tensor-parallel decode (needs >= tp devices)
+  PYTHONPATH=src python -m repro.launch.serve --smoke --tp 2
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import generate
+from repro.serve.autoscale import poisson_trace
+from repro.serve.batcher import POLICIES
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.request import Request, SamplingParams
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="max concurrent batch slots")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate (req per engine "
+                         "iteration); 0 = all requests arrive at t=0")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache capacity (0 = prompt+max_new)")
+    ap.add_argument("--policy", choices=POLICIES, default="continuous")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="KV page size (0 = contiguous per-slot cache)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool cap (0 = size for all slots full)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel decode degree")
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window override (sub-quadratic decode)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="<= 0 is greedy argmax")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -34,18 +62,46 @@ def main():
         raise SystemExit("use examples/whisper_decode.py for enc-dec serving")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-    t0 = time.time()
-    out = generate(model, params, prompt, args.max_new,
-                   window_override=args.window)
-    dt = time.time() - t0
-    print("prompt :", prompt.tolist())
-    print("output :", out[:, args.prompt_len:].tolist())
-    n_tok = args.batch * (args.prompt_len + args.max_new)
-    print(f"{n_tok} decode steps in {dt:.2f}s "
-          f"({1e3 * dt / n_tok:.1f} ms/token incl. compile)")
+
+    max_len = args.max_len or (args.prompt_len + args.max_new)
+    horizon = max(1.0, args.requests / args.rate) if args.rate > 0 else 1.0
+    arrivals = ([0.0] + poisson_trace(args.rate, horizon, seed=args.seed,
+                                      max_requests=args.requests - 1)
+                if args.rate > 0 else [0.0] * args.requests)
+    rng = np.random.RandomState(args.seed + 1)
+    prompts = rng.randint(1, cfg.vocab_size,
+                          size=(len(arrivals), args.prompt_len))
+    reqs = [Request(rid=i, prompt=[int(t) for t in prompts[i]],
+                    max_new_tokens=args.max_new, arrival=arrivals[i],
+                    sampling=SamplingParams(temperature=args.temperature,
+                                            top_k=args.top_k,
+                                            seed=args.seed + i))
+            for i in range(len(arrivals))]
+
+    eng = ServeEngine(model, params, ServeConfig(
+        slots=args.slots, max_len=max_len, page_size=args.pages,
+        num_pages=args.num_pages or None, policy=args.policy, tp=args.tp,
+        window_override=args.window,
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32))
+    metrics = eng.run(reqs)
+
+    for r in reqs[:4]:
+        print(f"req {r.rid}: arrival={r.arrival:5.1f} "
+              f"ttft={r.first_token_latency():5.1f} "
+              f"output={r.output[:8]}{'...' if len(r.output) > 8 else ''}")
+    if len(reqs) > 4:
+        print(f"... {len(reqs) - 4} more")
+    print(f"policy={metrics['policy']} paged={metrics['paged']} "
+          f"tp={metrics['tp']}")
+    print(f"{metrics['completed']} requests, "
+          f"{metrics['generated_tokens']} tokens in "
+          f"{metrics['clock']:.0f} iterations "
+          f"({metrics['tokens_per_s']:.2f} tok/iter, "
+          f"{metrics['wall_s']:.2f}s wall)")
+    print(f"first-token p50/p99: {metrics['p50_first_token']:.1f}/"
+          f"{metrics['p99_first_token']:.1f} iters   per-token p50/p99: "
+          f"{metrics['p50_per_token']:.2f}/{metrics['p99_per_token']:.2f}"
+          f"   stalls: {metrics['admission_stalls']}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,8 @@ class Model:
     init_cache: Callable       # (batch, max_len, dtype, ...) -> caches
     decode_step: Callable      # (params, caches, token, pos) -> (logits, caches)
     prefill: Callable | None
+    # prefill states -> init_cache decode layout (serving-plane plumbing)
+    cache_from_prefill: Callable | None = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -58,4 +60,6 @@ def build_model(cfg: ModelConfig) -> Model:
             compute_dtype=jnp.bfloat16, **kw:
             T.decode_step(params, cfg, caches, token, pos, compute_dtype, **kw),
         prefill=lambda params, tokens, **kw: T.prefill(params, cfg, tokens, **kw),
+        cache_from_prefill=lambda fwd_caches, max_len, dtype=jnp.bfloat16, **kw:
+            T.cache_from_prefill(cfg, fwd_caches, max_len, dtype, **kw),
     )

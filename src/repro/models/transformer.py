@@ -84,7 +84,8 @@ def _layer_init(key, cfg: ModelConfig, sig, dtype):
     return p
 
 
-def _layer_forward(p, cfg: ModelConfig, sig, x, positions, state=None):
+def _layer_forward(p, cfg: ModelConfig, sig, x, positions, state=None,
+                   window_override=0):
     """Full-sequence forward for one layer.  Returns (x, aux, new_state).
     state is only used/returned for stateful kinds (cache build in prefill)."""
     kind, use_moe = sig
@@ -95,7 +96,7 @@ def _layer_forward(p, cfg: ModelConfig, sig, x, positions, state=None):
         if cfg.attn_type == "mla":
             out, new_state = mla_mod.mla_forward(p["mixer"], h, positions, cfg)
         else:
-            window = cfg.window if kind == "local" else 0
+            window = cfg.window if kind == "local" else window_override
             out, new_state = attn.attention_forward(
                 p["mixer"], h, positions, cfg, causal=True, window=window)
     elif kind == "rglru":
@@ -118,9 +119,26 @@ def _layer_forward(p, cfg: ModelConfig, sig, x, positions, state=None):
     return x + out, aux, new_state
 
 
-def _layer_decode(p, cfg: ModelConfig, sig, x, pos, cache, window_override=0):
-    """One-token decode for one layer.  Returns (x, new_cache)."""
+def _layer_decode(p, cfg: ModelConfig, sig, x, pos, cache, window_override=0,
+                  tp_axis=None):
+    """One-token decode for one layer.  Returns (x, new_cache).
+
+    tp_axis: when set (tensor-parallel decode under shard_map), the mixer
+    and MLP outputs are row-parallel partial products — sum them across
+    the tensor axis with ``tensor_reduce`` before each residual add.
+    Only plain GQA attention layers support this (the serving engine
+    gates admission accordingly)."""
     kind, use_moe = sig
+    if tp_axis is not None and (use_moe or kind not in ("attn", "local")
+                                or cfg.attn_type == "mla"):
+        raise ValueError(
+            f"tensor-parallel decode supports dense GQA layers only "
+            f"(got kind={kind}, moe={use_moe}, attn_type={cfg.attn_type})")
+    if tp_axis is not None:
+        from repro.parallel.staged import tensor_copy, tensor_reduce
+        t_copy, t_reduce = tensor_copy(tp_axis), tensor_reduce(tp_axis)
+    else:
+        t_copy = t_reduce = lambda y: y
     if kind == "rwkv":
         return rwkv_mod.rwkv_block_decode(
             p["mixer"], p["mixer"], p["ln1"], p["ln2"], cfg, x, cache)
@@ -131,7 +149,8 @@ def _layer_decode(p, cfg: ModelConfig, sig, x, pos, cache, window_override=0):
         else:
             window = cfg.window if kind == "local" else window_override
             out, new_cache = attn.attention_decode(
-                p["mixer"], h, pos, cache, cfg, window=window)
+                p["mixer"], t_copy(h), pos, cache, cfg, window=window)
+            out = t_reduce(out)
     elif kind == "rglru":
         out, new_cache = rglru_mod.rglru_decode(p["mixer"], h, cache)
     else:
@@ -141,7 +160,7 @@ def _layer_decode(p, cfg: ModelConfig, sig, x, pos, cache, window_override=0):
     if use_moe:
         out, _ = moe_apply(p["moe"], h, cfg)
     else:
-        out = mlp_apply(p["mlp"], h, cfg.act)
+        out = t_reduce(mlp_apply(p["mlp"], t_copy(h), cfg.act))
     return x + out, new_cache
 
 
@@ -195,11 +214,15 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32,
 def forward(params, cfg: ModelConfig, tokens, positions=None,
             vision_embeds=None, compute_dtype=jnp.bfloat16,
             return_cache: bool = False, cache_len: int = 0,
-            remat: bool = False, unroll: bool = False):
+            remat: bool = False, unroll: bool = False,
+            window_override: int = 0):
     """Full-sequence forward.  Returns (logits, aux, caches|None).
 
     tokens [B, S] int32.  positions: [B, S] (or [B, 3, S] for M-RoPE).
     vision_embeds [B, P, d]: merged into the leading P token slots (vlm stub).
+    window_override: sliding-window mask for plain attention layers — the
+    prefill-side twin of ``decode_step``'s ring-buffer override, so a
+    windowed serve's batched prefill attends exactly what its decode would.
     """
     B, S = tokens.shape
     segs = plan_segments(cfg)
@@ -219,7 +242,8 @@ def forward(params, cfg: ModelConfig, tokens, positions=None,
         p_seg = params["segments"][seg_i]
         seg_i += 1
         if seg[0] == "plain":
-            x, aux, st = _layer_forward(p_seg, cfg, seg[1], x, positions)
+            x, aux, st = _layer_forward(p_seg, cfg, seg[1], x, positions,
+                                        window_override=window_override)
             aux_total = aux_total + aux
             if return_cache:
                 caches.append(st)
@@ -231,7 +255,8 @@ def forward(params, cfg: ModelConfig, tokens, positions=None,
                 sts = []
                 for j, sig in enumerate(_pattern):
                     xc, aux_j, st_j = _layer_forward(
-                        g_params[j], cfg, sig, xc, positions)
+                        g_params[j], cfg, sig, xc, positions,
+                        window_override=window_override)
                     auxc = auxc + aux_j
                     sts.append(st_j)
                 return (xc, auxc), tuple(sts)
@@ -299,16 +324,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params, cfg: ModelConfig, caches, token, pos,
                 compute_dtype=jnp.bfloat16, window_override: int = 0,
-                unroll: bool = False):
+                unroll: bool = False, tp_axis: Optional[str] = None):
     """One decode step.  token [B, 1] int32; pos scalar int32 (position of
-    this token).  Returns (logits [B, 1, Vpad], new_caches)."""
+    this token).  Returns (logits [B, 1, Vpad], new_caches).
+
+    tp_axis: tensor-parallel decode (serving).  Inside a ``shard_map``
+    over mesh axis ``tp_axis`` with head-sharded attention weights and
+    column/row-sharded MLP weights, each rank computes its head/ff shard
+    and the two row-parallel products (wo, w_down) are combined with
+    ``tensor_reduce`` before the residual adds — Megatron's f/g pair from
+    ``repro.parallel.staged``, reused for inference."""
     segs = plan_segments(cfg)
     x = params["embed"].astype(compute_dtype)[token]
     new_caches: List[Any] = []
     for seg, p_seg, c_seg in zip(segs, params["segments"], caches):
         if seg[0] == "plain":
             x, nc = _layer_decode(p_seg, cfg, seg[1], x, pos, c_seg,
-                                  window_override)
+                                  window_override, tp_axis)
             new_caches.append(nc)
         else:
             _, pattern, n_groups = seg
@@ -318,7 +350,8 @@ def decode_step(params, cfg: ModelConfig, caches, token, pos,
                 ncs = []
                 for j, sig in enumerate(_pattern):
                     xc, nc_j = _layer_decode(g_params[j], cfg, sig, xc, pos,
-                                             g_cache[j], window_override)
+                                             g_cache[j], window_override,
+                                             tp_axis)
                     ncs.append(nc_j)
                 return xc, tuple(ncs)
 
@@ -344,11 +377,73 @@ def decode_step(params, cfg: ModelConfig, caches, token, pos,
 
 def prefill(params, cfg: ModelConfig, tokens, positions=None,
             vision_embeds=None, compute_dtype=jnp.bfloat16,
-            unroll: bool = False):
+            unroll: bool = False, window_override: int = 0):
     """Prefill: forward over the prompt, returning last-token logits and the
     populated caches (full-length attention caches / final recurrent states)."""
     logits, _, caches = forward(params, cfg, tokens, positions=positions,
                                 vision_embeds=vision_embeds,
                                 compute_dtype=compute_dtype,
-                                return_cache=True, unroll=unroll)
+                                return_cache=True, unroll=unroll,
+                                window_override=window_override)
     return logits[:, -1:], caches
+
+
+def _state_to_cache(cfg: ModelConfig, sig, st, max_len: int, dtype,
+                    window_override: int = 0):
+    """Convert one layer's prefill state into its ``init_cache`` decode
+    layout.  Leaves may carry leading stacked dims (scan groups) — the
+    sequence axis is located from the *end* per kind, so the same rule
+    maps plain and group-stacked states."""
+    kind, _ = sig
+    if kind in ("attn", "local"):
+        if cfg.attn_type == "mla":
+            seq_from_end, window = 2, 0          # [.., B, S, r]
+        else:
+            seq_from_end = 3                     # [.., B, S, KV, hd]
+            window = cfg.window if kind == "local" else window_override
+        L = window if window else max_len
+
+        def fill(a):
+            ax = a.ndim - seq_from_end
+            S = a.shape[ax]
+            if not window and S > max_len:
+                raise ValueError(f"prompt length {S} > max_len {max_len}")
+            # position t lives at slot t (full) / t % window (ring buffer);
+            # only the last `window` positions survive in a ring cache
+            start = max(0, S - window) if window else 0
+            ts = np.arange(start, S)
+            slots = ts % window if window else ts
+            am = jnp.moveaxis(a.astype(dtype), ax, 0)
+            om = jnp.zeros((L,) + am.shape[1:], dtype=dtype)
+            om = om.at[slots].set(am[ts])
+            return jnp.moveaxis(om, 0, ax)
+
+        return jax.tree.map(fill, st)
+    # recurrent kinds (rglru / rwkv): the final forward state *is* the
+    # decode cache — align each leaf's dtype with the init_cache template
+    # (e.g. rwkv keeps its S matrix in float32 regardless of cache dtype)
+    tmpl = _layer_cache(cfg, sig, 1, max_len, dtype, window_override)
+    return jax.tree.map(lambda t, s: s.astype(t.dtype), tmpl, st)
+
+
+def cache_from_prefill(cfg: ModelConfig, fwd_caches, max_len: int,
+                       dtype=jnp.bfloat16, window_override: int = 0):
+    """Cache-page plumbing for the serving plane: convert the states of
+    ``forward(..., return_cache=True)`` / ``prefill`` into the decode-cache
+    pytree ``init_cache`` lays out (attention k/v scattered to their
+    full-length or ring-buffer slots, recurrent states passed through), so
+    a prompt is consumed by ONE batched forward pass instead of a
+    token-by-token warm-up loop."""
+    segs = plan_segments(cfg)
+    out: List[Any] = []
+    for seg, st in zip(segs, fwd_caches):
+        if seg[0] == "plain":
+            out.append(_state_to_cache(cfg, seg[1], st, max_len, dtype,
+                                       window_override))
+        else:
+            _, pattern, _n = seg
+            out.append(tuple(
+                _state_to_cache(cfg, pattern[j], st[j], max_len, dtype,
+                                window_override)
+                for j in range(len(pattern))))
+    return out

@@ -1,3 +1,8 @@
 from repro.serve.serve_loop import generate, greedy_sample
 
-__all__ = ["generate", "greedy_sample"]
+__all__ = [
+    "generate", "greedy_sample",
+    # serving plane (imported lazily by callers to keep the compat path
+    # light): engine.ServeEngine/ServeConfig, request.Request/SamplingParams,
+    # cache.make_kv_store, batcher.Batcher, autoscale.Autoscaler
+]

@@ -1,0 +1,339 @@
+"""Paged KV cache over the model zoo's ``init_cache`` layouts.
+
+vLLM-style block management (arXiv 2111.14247 §KV management) on top of
+the existing cache pytrees:
+
+  * attention caches ([.., B, L, KV, hd] k/v, [.., B, L, r] MLA latents)
+    are re-laid-out as fixed-size **page pools** ``[num_pages, page, ...]``
+    shared by every batch slot, addressed through per-request **block
+    tables** (logical page -> physical page);
+  * a **BlockAllocator** hands pages out at admission and takes them back
+    on completion (free-list reuse), so batch slots are recycled
+    continuously and an over-subscribed pool *stalls admission* instead
+    of OOM-ing;
+  * recurrent states (rglru / rwkv), sliding-window ring buffers, and
+    whole caches in contiguous mode stay per-slot arrays.
+
+Physical page 0 is reserved as the null/scratch page: freshly-reset block
+tables point at it and *inactive* batch slots scatter their garbage decode
+writes into it, so the one jitted decode step needs no masking branches.
+
+Equivalence contract (tested in tests/test_serving.py): ``gather`` of a
+request's pages reproduces the contiguous cache bit-for-bit at every
+position <= its current one, and positions beyond are score-masked to
+exactly zero probability — so paged decode is bitwise-identical to
+contiguous decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import plan_segments
+
+
+# ------------------------------------------------------------- allocator
+class BlockAllocator:
+    """Free-list page allocator.  Page 0 is reserved (null/scratch)."""
+
+    def __init__(self, num_pages: int, reserved: int = 1):
+        if num_pages <= reserved:
+            raise ValueError(f"num_pages={num_pages} <= reserved={reserved}")
+        self.num_pages = num_pages
+        self.reserved = reserved
+        self._free: List[int] = list(range(reserved, num_pages))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - self.reserved
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise MemoryError(
+                f"paged KV pool exhausted: want {n}, free {len(self._free)} "
+                "(admission should have stalled)")
+        pages, self._free = self._free[:n], self._free[n:]
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p < self.reserved or p >= self.num_pages:
+                raise ValueError(f"freeing invalid page {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(pages)
+
+
+# ----------------------------------------------------- segment structure
+def _seq_from_end(cfg: ModelConfig, sig, window_override: int) -> int:
+    """Pages-eligible sequence axis of this layer kind, counted from the
+    end of each cache leaf (0 = not paged: recurrent state / ring
+    buffer).  From-the-end indexing maps through the leading group axis
+    scan segments add."""
+    kind, _ = sig
+    if kind not in ("attn", "local"):
+        return 0
+    if cfg.attn_type == "mla":
+        return 2                         # {c_kv, k_rope}: [.., B, L, r]
+    window = cfg.window if kind == "local" else window_override
+    return 0 if window else 3            # ring buffers stay per-slot
+
+
+def _map_cache(cfg: ModelConfig, caches, fn, window_override: int = 0):
+    """Apply ``fn(subtree, batch_axis, seq_from_end)`` per layer, walking
+    the segment-plan structure of an ``init_cache`` pytree (plain layers:
+    batch axis 0; scan groups: leading group axis, batch axis 1)."""
+    out: List[Any] = []
+    for seg, c in zip(plan_segments(cfg), caches):
+        if seg[0] == "plain":
+            out.append(fn(c, 0, _seq_from_end(cfg, seg[1], window_override)))
+        else:
+            _, pattern, _n = seg
+            out.append(tuple(
+                fn(c[j], 1, _seq_from_end(cfg, pattern[j], window_override))
+                for j in range(len(pattern))))
+    return out
+
+
+def cache_bytes(caches) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+
+
+# ------------------------------------------------------------- KV stores
+class ContiguousKV:
+    """The seed layout: one ``init_cache(slots, max_len)`` pytree, every
+    slot owning its full-length rows.  Same interface as ``PagedKV`` so
+    the engine's jitted step is layout-agnostic."""
+
+    paged = False
+
+    def __init__(self, model, slots: int, max_len: int, dtype=jnp.float32,
+                 window_override: int = 0):
+        self.cfg = model.cfg
+        self.slots, self.max_len = slots, max_len
+        self.dtype, self.window_override = dtype, window_override
+        self.store = model.init_cache(slots, max_len, dtype=dtype,
+                                      window_override=window_override)
+
+    # the engine threads (store, block_tables) through its jitted step;
+    # contiguous mode has no tables — a 0-d placeholder keeps shapes static
+    def block_tables_device(self):
+        return jnp.zeros((), jnp.int32)
+
+    def gather(self, store, bt):
+        return store
+
+    def scatter(self, store, new_caches, bt, pos, active):
+        # the vmapped decode already wrote each slot's token row in place
+        # (inactive slots scribble at pos 0 of their own — free — rows)
+        return new_caches
+
+    # ------------------------------------------------------ admission
+    def try_reserve(self, request) -> bool:
+        return request.total_len <= self.max_len
+
+    def write_prefill(self, slot: int, conv_cache, j: int, prompt_len: int):
+        """Copy request ``j``'s row of a converted (decode-layout) prefill
+        cache into batch slot ``slot``, walking dst/src trees in lockstep."""
+        out = []
+        for dst_sub, src_sub, seg in zip(
+                self.store, conv_cache, plan_segments(self.cfg)):
+            ax = 0 if seg[0] == "plain" else 1
+            out.append(jax.tree.map(
+                lambda d, s, _ax=ax: (d.at[slot].set(s[j]) if _ax == 0
+                                      else d.at[:, slot].set(s[:, j])),
+                dst_sub, src_sub))
+        self.store = out
+
+    def release(self, slot: int, request) -> None:
+        pass                              # rows are overwritten on admit
+
+
+class PagedKV:
+    """Fixed-size page pools + per-slot block tables over the attention
+    caches; everything else (recurrent states, ring buffers) stays a
+    per-slot array exactly as in ``ContiguousKV``."""
+
+    paged = True
+
+    def __init__(self, model, slots: int, max_len: int, page_size: int,
+                 num_pages: Optional[int] = None, dtype=jnp.float32,
+                 window_override: int = 0):
+        if page_size <= 0:
+            raise ValueError("page_size must be > 0 for PagedKV")
+        if window_override:
+            raise ValueError("paged cache + window_override unsupported "
+                             "(ring buffers are already constant-size)")
+        self.cfg = model.cfg
+        self.slots, self.max_len, self.page = slots, max_len, page_size
+        self.dtype, self.window_override = dtype, 0
+        self.pages_per_seq = math.ceil(max_len / page_size)
+        if num_pages is None:
+            # default: every slot can hold a full-length request, +1 null
+            num_pages = 1 + slots * self.pages_per_seq
+        self.allocator = BlockAllocator(num_pages, reserved=1)
+        self.block_tables = np.zeros((slots, self.pages_per_seq), np.int32)
+
+        template = model.init_cache(slots, max_len, dtype=dtype)
+
+        def to_pool(sub, batch_axis, seq):
+            if seq == 0:
+                return sub                # per-slot leaf kept as-is
+            def pool(leaf):
+                s_ax = leaf.ndim - seq
+                lead = leaf.shape[:s_ax]
+                lead = lead[:batch_axis] + lead[batch_axis + 1:]  # drop B
+                return jnp.zeros(
+                    lead + (num_pages, page_size) + leaf.shape[s_ax + 1:],
+                    dtype=leaf.dtype)
+            return jax.tree.map(pool, sub)
+
+        self.store = _map_cache(self.cfg, template, to_pool)
+
+    def block_tables_device(self):
+        return jnp.asarray(self.block_tables)
+
+    # ------------------------------------------------- gather / scatter
+    def gather(self, store, bt):
+        """Paged pools -> the contiguous view the decode math consumes.
+        Pure function of (store, bt): runs inside the jitted step."""
+        P, page, L = self.pages_per_seq, self.page, self.max_len
+
+        def one(sub, batch_axis, seq):
+            if seq == 0:
+                return sub
+            def g(pool):
+                if batch_axis == 0:      # pool [Np, page, rest]
+                    v = pool[bt]         # [B, P, page, rest]
+                    v = v.reshape((v.shape[0], P * page) + v.shape[3:])
+                    return v[:, :L]
+                # pool [G, Np, page, rest]
+                v = jnp.take(pool, bt, axis=1)   # [G, B, P, page, rest]
+                v = v.reshape(v.shape[:2] + (P * page,) + v.shape[4:])
+                return v[:, :, :L]
+            return jax.tree.map(g, sub)
+
+        return _map_cache(self.cfg, store, one)
+
+    def scatter(self, store, new_caches, bt, pos, active):
+        """Write the token row each slot just produced back to its page
+        (pure; inside the jitted step).  pos [B] int32 is the position
+        just written; inactive slots are routed to null page 0."""
+        page = self.page
+        phys = jnp.where(active,
+                         jnp.take_along_axis(
+                             bt, (pos // page)[:, None], axis=1)[:, 0],
+                         0)
+        off = pos % page
+
+        def one(pair, batch_axis, seq):
+            pool_sub, new_sub = pair
+            if seq == 0:
+                return new_sub           # per-slot leaf: updated in place
+
+            def s(pool, new):
+                if batch_axis == 0:      # new [B, L, rest]
+                    rows = jax.vmap(lambda a, p: a[p])(new, pos)
+                    return pool.at[phys, off].set(rows.astype(pool.dtype))
+                # new [G, B, L, rest] -> rows [G, B, rest]
+                rows = jax.vmap(lambda a, p: a[:, p],
+                                in_axes=(1, 0), out_axes=1)(new, pos)
+                return pool.at[:, phys, off].set(rows.astype(pool.dtype))
+            return jax.tree.map(s, pool_sub, new_sub)
+
+        out: List[Any] = []
+        for ps, ns, seg in zip(store, new_caches, plan_segments(self.cfg)):
+            if seg[0] == "plain":
+                out.append(one((ps, ns), 0,
+                               _seq_from_end(self.cfg, seg[1], 0)))
+            else:
+                _, pattern, _n = seg
+                out.append(tuple(
+                    one((ps[j], ns[j]), 1,
+                        _seq_from_end(self.cfg, pattern[j], 0))
+                    for j in range(len(pattern))))
+        return out
+
+    # ------------------------------------------------------ admission
+    def try_reserve(self, request) -> bool:
+        """Reservation-based admission: take every page the request can
+        ever touch (prompt + max_new) up front, or refuse (the batcher
+        stalls the request instead of risking mid-decode OOM)."""
+        if request.total_len > self.max_len:
+            return False
+        n = math.ceil(request.total_len / self.page)
+        if not self.allocator.can_alloc(n):
+            return False
+        request.pages = self.allocator.alloc(n)
+        return True
+
+    def write_prefill(self, slot: int, conv_cache, j: int, prompt_len: int):
+        """Scatter request ``j``'s prompt rows of a converted prefill
+        cache into its reserved pages; per-slot leaves assign directly."""
+        bt_row = self.block_tables[slot]
+        ts = np.arange(prompt_len)
+        phys = jnp.asarray(bt_row[ts // self.page])
+        off = jnp.asarray(ts % self.page)
+
+        out: List[Any] = []
+        for dst_sub, src_sub, seg in zip(
+                self.store, conv_cache, plan_segments(self.cfg)):
+            if seg[0] == "plain":
+                infos = [(0, _seq_from_end(self.cfg, seg[1], 0))]
+                subs = [(dst_sub, src_sub)]
+            else:
+                _, pattern, _n = seg
+                infos = [(1, _seq_from_end(self.cfg, pattern[k], 0))
+                         for k in range(len(pattern))]
+                subs = list(zip(dst_sub, src_sub))
+
+            def wr(d, s, batch_axis, seq):
+                if seq == 0:
+                    return (d.at[slot].set(s[j]) if batch_axis == 0
+                            else d.at[:, slot].set(s[:, j]))
+                if batch_axis == 0:      # s [B, L, rest] -> rows [S0, rest]
+                    rows = s[j, :prompt_len]
+                    return d.at[phys, off].set(rows.astype(d.dtype))
+                rows = s[:, j, :prompt_len]          # [G, S0, rest]
+                return d.at[:, phys, off].set(rows.astype(d.dtype))
+
+            done = [jax.tree.map(
+                        lambda dd, ss, _i=i: wr(dd, ss, *infos[_i]),
+                        subs[i][0], subs[i][1])
+                    for i in range(len(subs))]
+            out.append(done[0] if seg[0] == "plain" else tuple(done))
+        self.store = out
+
+    def set_block_table(self, slot: int, pages: Sequence[int]) -> None:
+        row = np.zeros(self.pages_per_seq, np.int32)
+        row[:len(pages)] = pages
+        self.block_tables[slot] = row
+
+    def release(self, slot: int, request) -> None:
+        if request.pages:
+            self.allocator.free(request.pages)
+            request.pages = []
+        self.block_tables[slot] = 0
+
+
+def make_kv_store(model, slots: int, max_len: int, page_size: int = 0,
+                  num_pages: Optional[int] = None, dtype=jnp.float32,
+                  window_override: int = 0):
+    """page_size == 0 -> contiguous (seed layout); > 0 -> paged pools."""
+    if page_size:
+        return PagedKV(model, slots, max_len, page_size, num_pages,
+                       dtype=dtype, window_override=window_override)
+    return ContiguousKV(model, slots, max_len, dtype=dtype,
+                        window_override=window_override)

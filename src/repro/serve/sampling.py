@@ -1,0 +1,64 @@
+"""Token sampling for the serving plane.
+
+``greedy_sample`` is the deterministic argmax the seed server used (and
+every equivalence test still uses).  ``sample_tokens`` adds temperature /
+top-k sampling with an *explicit per-request PRNG key*: the engine derives
+one key per request from ``SamplingParams.seed`` and folds the token index
+in per step, so a request's sample stream is reproducible regardless of
+which batch slot or iteration served it (continuous batching must not
+change sampled outputs).
+
+All knobs are traced per-slot arrays so the whole batch samples in the one
+jitted decode step: a slot with ``temperature <= 0`` takes the argmax
+branch bit-for-bit (greedy stays the default), ``top_k > 0`` restricts to
+the k highest logits via a sorted threshold (k is traced, so mixed-k
+batches share one compiled program).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def greedy_sample(logits, vocab_size: int):
+    """argmax over the un-padded vocab.  logits [B, 1, Vpad]."""
+    return jnp.argmax(logits[..., :vocab_size], axis=-1).astype(jnp.int32)
+
+
+def request_key(seed: int):
+    """The per-request PRNG key ``SamplingParams.seed`` names."""
+    return jax.random.PRNGKey(seed)
+
+
+def _sample_one(logits, key, temperature, top_k, vocab_size: int):
+    """One row: logits [V] float32, traced temperature/top_k scalars."""
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    # top-k via sorted threshold: keep logits >= k-th largest (traced k)
+    sorted_desc = jnp.sort(logits)[::-1]
+    k = jnp.clip(top_k, 1, vocab_size)
+    thresh = sorted_desc[k - 1]
+    allow = jnp.where(top_k > 0, logits >= thresh, True)
+    return jax.random.categorical(key, jnp.where(allow, scaled, NEG_INF))
+
+
+def sample_tokens(logits, vocab_size: int, keys, temperature, top_k):
+    """Batched per-slot sampling inside the jitted decode step.
+
+    logits [B, Vpad]; keys [B, 2] uint32 (one PRNG key per slot);
+    temperature [B] float32; top_k [B] int32.  Slots with
+    ``temperature <= 0`` return the greedy argmax (exactly
+    ``greedy_sample``); the rest draw from the temperature-scaled,
+    top-k-filtered categorical with their own key.
+    """
+    lg = logits[..., :vocab_size].astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1)
+    sampled = jax.vmap(_sample_one, in_axes=(0, 0, 0, 0, None))(
+        lg, keys, temperature, top_k, vocab_size)
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+def fold_token(keys, step: int):
+    """Advance every per-slot key to this token index (vmapped fold_in)."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, step))(keys)

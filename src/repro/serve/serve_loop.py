@@ -1,47 +1,41 @@
-"""Batched autoregressive serving loop (survey §5 flags DL serving as an
-open direction; this is the decode path the decode_32k / long_500k shapes
-exercise)."""
+"""Batch-generate compatibility shim over the serving engine.
+
+The seed's ``generate`` warmed the cache by feeding the prompt through
+the decode path *token-by-token* — S0 sequential ``decode_step`` calls
+before the first new token.  It is now a thin wrapper over
+``ServeEngine``: the prompt runs as ONE batched prefill forward pass
+(``Model.prefill`` + ``cache_from_prefill``) and decode proceeds through
+the engine's jitted step.  Greedy tokens are bitwise-identical to the old
+loop (regression-tested in tests/test_serving.py); ``greedy_sample`` is
+re-exported from serve/sampling.py for existing callers.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
-
-def greedy_sample(logits, vocab_size: int):
-    """argmax over the un-padded vocab.  logits [B, 1, Vpad]."""
-    return jnp.argmax(logits[..., :vocab_size], axis=-1).astype(jnp.int32)
+from repro.serve.sampling import greedy_sample  # noqa: F401  (compat)
 
 
 def generate(model, params, prompt, max_new_tokens: int,
              max_len: Optional[int] = None, window_override: int = 0,
              compute_dtype=jnp.float32):
-    """Greedy decode.  prompt [B, S0] int32 -> [B, S0 + max_new_tokens].
+    """Greedy decode.  prompt [B, S0] int32 -> [B, S0 + max_new_tokens]."""
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.request import Request
 
-    The prompt is consumed through the decode path token-by-token (cache
-    warm-up), then generation proceeds greedily; one jitted decode_step
-    serves both phases — the production structure for a step-synchronous
-    batched decoder.
-    """
+    prompt = np.asarray(prompt)
     B, S0 = prompt.shape
-    V = model.cfg.vocab_size
     max_len = max_len or (S0 + max_new_tokens)
-    caches = model.init_cache(B, max_len, dtype=compute_dtype,
-                              window_override=window_override)
-
-    step = jax.jit(
-        lambda p, c, tok, pos: model.decode_step(
-            p, c, tok, pos, compute_dtype=compute_dtype,
-            window_override=window_override),
-        static_argnames=())
-
-    tokens = prompt
-    logits = None
-    for t in range(S0):
-        logits, caches = step(params, caches, tokens[:, t:t + 1], t)
-    for t in range(S0, S0 + max_new_tokens):
-        nxt = greedy_sample(logits, V)
-        tokens = jnp.concatenate([tokens, nxt], axis=1)
-        logits, caches = step(params, caches, nxt, t)
-    return tokens
+    eng = ServeEngine(model, params, ServeConfig(
+        slots=B, max_len=max_len, policy="oneshot",
+        cache_dtype=compute_dtype, compute_dtype=compute_dtype,
+        window_override=window_override))
+    reqs = [Request(rid=i, prompt=[int(t) for t in prompt[i]],
+                    max_new_tokens=max_new_tokens) for i in range(B)]
+    eng.run(reqs)
+    out = np.concatenate(
+        [prompt, np.array([r.output for r in reqs], np.int32)], axis=1)
+    return jnp.asarray(out)

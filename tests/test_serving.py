@@ -1,0 +1,308 @@
+"""Serving plane: continuous batching over a paged KV cache.
+
+Invariants under test:
+  * paged decode is token-identical to contiguous decode (same math,
+    different memory layout);
+  * the engine (batched prefill + per-slot vmapped decode) reproduces the
+    seed's token-by-token warm-up loop bitwise for greedy decode;
+  * continuous batching never changes a request's tokens versus one-shot
+    static batching — only its latency;
+  * an over-subscribed page pool stalls admission (and recovers) instead
+    of failing allocation;
+  * tensor-parallel decode produces the single-device token stream;
+  * sampling is reproducible per request seed, and top_k=1 == greedy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.autoscale import (AutoscalePolicy, Autoscaler, ScaleDecision,
+                                   poisson_trace, simulate_queue)
+from repro.serve.batcher import Batcher
+from repro.serve.cache import BlockAllocator, make_kv_store
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.request import Request, SamplingParams
+from repro.serve.serve_loop import generate
+
+_CACHE = {}
+
+
+def small_model(arch="tinyllama-1.1b"):
+    if arch not in _CACHE:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _CACHE[arch] = (model, params)
+    return _CACHE[arch]
+
+
+def seed_loop(model, params, prompt, max_new, max_len, window_override=0):
+    """The seed's generate(): token-by-token cache warm-up, greedy."""
+    B, S0 = prompt.shape
+    caches = model.init_cache(B, max_len, dtype=jnp.float32,
+                              window_override=window_override)
+    step = jax.jit(lambda p, c, tok, pos: model.decode_step(
+        p, c, tok, pos, compute_dtype=jnp.float32,
+        window_override=window_override))
+    tokens = jnp.asarray(prompt)
+    logits = None
+    for t in range(S0):
+        logits, caches = step(params, caches, tokens[:, t:t + 1], t)
+    V = model.cfg.vocab_size
+    for t in range(S0, S0 + max_new):
+        nxt = jnp.argmax(logits[..., :V], axis=-1).astype(jnp.int32)
+        tokens = jnp.concatenate([tokens, nxt], axis=1)
+        logits, caches = step(params, caches, nxt, t)
+    return np.asarray(tokens)
+
+
+def make_requests(prompts, max_new, arrivals=None, sampling=None):
+    per_req = max_new if isinstance(max_new, (list, tuple)) \
+        else [max_new] * len(prompts)
+    return [Request(rid=i, prompt=[int(t) for t in p],
+                    max_new_tokens=per_req[i],
+                    arrival=0.0 if arrivals is None else arrivals[i],
+                    sampling=sampling or SamplingParams())
+            for i, p in enumerate(prompts)]
+
+
+def run_engine(model, params, reqs, **scfg):
+    eng = ServeEngine(model, params, ServeConfig(
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32, **scfg))
+    metrics = eng.run(reqs)
+    return [r.output for r in reqs], metrics
+
+
+# --------------------------------------------------------------- allocator
+def test_block_allocator_reuse_and_errors():
+    a = BlockAllocator(num_pages=8, reserved=1)     # 7 usable
+    p1 = a.alloc(4)
+    assert a.free_pages == 3 and not a.can_alloc(4)
+    with pytest.raises(MemoryError):
+        a.alloc(4)
+    a.free(p1)
+    assert a.free_pages == 7
+    p2 = a.alloc(7)                                 # freed pages are reused
+    assert sorted(p2) == list(range(1, 8))
+    with pytest.raises(ValueError):
+        a.free([0])                                 # null page is reserved
+    a.free(p2)
+    with pytest.raises(ValueError):
+        a.free([p2[0]])                             # double free
+
+
+# ---------------------------------------------------- paged == contiguous
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "deepseek-v2-lite-16b",
+                                  "recurrentgemma-9b"])
+def test_paged_matches_contiguous(arch):
+    """Same tokens from page pools and from per-slot contiguous rows —
+    covers full k/v, MLA latent, and mixed rglru+ring-buffer caches."""
+    model, params = small_model(arch)
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(1, model.cfg.vocab_size, size=(3, 5))
+    out_c, _ = run_engine(model, params, make_requests(prompts, 6),
+                          slots=2, max_len=16)
+    out_p, m = run_engine(model, params, make_requests(prompts, 6),
+                          slots=2, max_len=16, page_size=4)
+    assert out_c == out_p
+    assert m["paged"] and m["completed"] == 3
+
+
+def test_engine_matches_seed_loop_bitwise():
+    """Batched prefill + vmapped decode == the seed token-by-token loop."""
+    model, params = small_model()
+    rng = np.random.RandomState(1)
+    prompts = rng.randint(1, model.cfg.vocab_size, size=(3, 7))
+    ref = seed_loop(model, params, prompts, 6, 16)[:, 7:].tolist()
+    for page_size in (0, 4):
+        out, _ = run_engine(model, params, make_requests(prompts, 6),
+                            slots=3, max_len=16, page_size=page_size)
+        assert out == ref
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "recurrentgemma-9b"])
+def test_generate_compat_bitwise(arch):
+    """generate() (now a thin engine wrapper) reproduces the seed loop's
+    tokens exactly, prompt included."""
+    model, params = small_model(arch)
+    rng = np.random.RandomState(2)
+    prompt = rng.randint(1, model.cfg.vocab_size, size=(2, 5))
+    ref = seed_loop(model, params, prompt, 6, 11)
+    out = np.asarray(generate(model, params, jnp.asarray(prompt), 6))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_generate_compat_window_override():
+    model, params = small_model()
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(1, model.cfg.vocab_size, size=(2, 6))
+    ref = seed_loop(model, params, prompt, 5, 11, window_override=4)
+    out = np.asarray(generate(model, params, jnp.asarray(prompt), 5,
+                              window_override=4))
+    np.testing.assert_array_equal(out, ref)
+
+
+# ------------------------------------------------- continuous vs one-shot
+def test_continuous_matches_oneshot_tokens_and_beats_latency():
+    """Iteration-level admission changes WHEN a request is served, never
+    WHAT it generates; on a staggered open-loop trace it strictly beats
+    static batching on p99 time-to-first-token (the 2209.01341 claim)."""
+    model, params = small_model()
+    rng = np.random.RandomState(4)
+    prompts = rng.randint(1, model.cfg.vocab_size, size=(6, 5))
+    arrivals = [0.0, 0.0, 1.0, 2.0, 3.0, 8.0]
+    # mixed decode lengths: one-shot waves are gated by their slowest
+    # member, continuous refills each slot the moment it frees
+    budgets = [3, 10, 4, 9, 5, 8]
+    out_1, m_1 = run_engine(
+        model, params, make_requests(prompts, budgets, arrivals),
+        slots=2, max_len=16, page_size=4, policy="oneshot")
+    out_c, m_c = run_engine(
+        model, params, make_requests(prompts, budgets, arrivals),
+        slots=2, max_len=16, page_size=4, policy="continuous")
+    assert out_c == out_1
+    assert m_c["p99_first_token"] < m_1["p99_first_token"]
+    assert m_c["tokens_per_s"] >= m_1["tokens_per_s"]
+
+
+# ------------------------------------------------------- pool exhaustion
+def test_pool_exhaustion_stalls_admission_not_oom():
+    """A pool sized for ~1.5 requests serves 4 slots' worth of work by
+    stalling admission until pages free up — same tokens, some stalls."""
+    model, params = small_model()
+    rng = np.random.RandomState(5)
+    prompts = rng.randint(1, model.cfg.vocab_size, size=(4, 5))
+    ref, _ = run_engine(model, params, make_requests(prompts, 6),
+                        slots=4, max_len=16, page_size=4)
+    # each request reserves ceil(11/4)=3 pages; 5-page pool fits one
+    # request (plus a stalled head) at a time
+    out, m = run_engine(model, params, make_requests(prompts, 6),
+                        slots=4, max_len=16, page_size=4, num_pages=6)
+    assert out == ref
+    assert m["admission_stalls"] > 0 and m["completed"] == 4
+    assert m["clock"] > 0 and m["p99_first_token"] > 1.0
+
+
+def test_oversized_request_rejected():
+    model, params = small_model()
+    eng = ServeEngine(model, params, ServeConfig(slots=1, max_len=8,
+                                                 page_size=4))
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=32))
+    with pytest.raises(ValueError, match="can never be served"):
+        eng.run()
+
+
+# ------------------------------------------------------------- sampling
+def test_sampling_topk1_is_greedy_and_seeded_runs_reproduce():
+    model, params = small_model()
+    rng = np.random.RandomState(6)
+    prompts = rng.randint(1, model.cfg.vocab_size, size=(2, 5))
+    greedy, _ = run_engine(model, params, make_requests(prompts, 8),
+                           slots=2, max_len=16, page_size=4)
+    topk1, _ = run_engine(
+        model, params,
+        make_requests(prompts, 8,
+                      sampling=SamplingParams(temperature=1.0, top_k=1)),
+        slots=2, max_len=16, page_size=4)
+    assert topk1 == greedy                    # top-1 collapses to argmax
+
+    sp = SamplingParams(temperature=1.0, seed=7)
+    a, _ = run_engine(model, params, make_requests(prompts, 8, sampling=sp),
+                      slots=2, max_len=16, page_size=4)
+    b, _ = run_engine(model, params, make_requests(prompts, 8, sampling=sp),
+                      slots=2, max_len=16, page_size=4)
+    assert a == b                             # explicit key -> reproducible
+    c, _ = run_engine(
+        model, params,
+        make_requests(prompts, 8,
+                      sampling=SamplingParams(temperature=1.0, seed=8)),
+        slots=2, max_len=16, page_size=4)
+    assert c != a                             # a different seed diverges
+
+
+# ------------------------------------------------------------ TP decode
+def test_tp_decode_matches_single_device(multidevice):
+    multidevice("""
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.request import Request
+
+cfg = get_config("tinyllama-1.1b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.RandomState(0)
+prompts = rng.randint(1, cfg.vocab_size, size=(3, 5))
+
+def run(tp):
+    reqs = [Request(rid=i, prompt=[int(t) for t in prompts[i]],
+                    max_new_tokens=6) for i in range(3)]
+    ServeEngine(model, params, ServeConfig(
+        slots=2, max_len=16, page_size=4, tp=tp,
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32)).run(reqs)
+    return [r.output for r in reqs]
+
+assert run(2) == run(1), "tp=2 token stream != single-device"
+print("TP-SERVE-OK")
+""", n_devices=2)
+
+
+def test_tp_rejects_unsupported_archs():
+    from repro.serve.tp import check_tp_supported
+    with pytest.raises(ValueError):
+        check_tp_supported(get_config("deepseek-v2-lite-16b").reduced(), 2)
+    with pytest.raises(ValueError):
+        check_tp_supported(get_config("rwkv6-7b").reduced(), 2)
+    with pytest.raises(ValueError):   # tp must divide kv heads
+        check_tp_supported(get_config("tinyllama-1.1b").reduced(), 3)
+
+
+# ------------------------------------------------------------ autoscaler
+def test_autoscaler_tracks_load_and_cuts_queueing():
+    arrivals = poisson_trace(rate=2.0, horizon=60.0, seed=0)
+    pol = AutoscalePolicy(replica_rate=0.5, min_replicas=1, max_replicas=8,
+                          interval=5.0, scale_down_patience=2)
+    plan, decisions = Autoscaler(pol, jid=3).plan(arrivals, horizon=60.0,
+                                                  steps_per_sec=2.0)
+    assert decisions[0].replicas == 1
+    assert max(d.replicas for d in decisions) > 1       # scaled up
+    assert any(e.kind == "resize" for e in plan)        # sched->elastic
+    fixed = [ScaleDecision(0.0, 0.0, 1)]
+    q_fixed = simulate_queue(arrivals, fixed, service_time=1.0, horizon=60.0)
+    q_auto = simulate_queue(arrivals, decisions, service_time=1.0,
+                            horizon=60.0)
+    assert q_auto["p99_wait"] < q_fixed["p99_wait"]
+
+
+def test_autoscaler_scale_down_hysteresis():
+    """A burst then silence: scale-up is immediate, scale-down waits out
+    ``scale_down_patience`` decision intervals."""
+    arrivals = [float(t) * 0.1 for t in range(100)]     # 10 req/s for 10s
+    pol = AutoscalePolicy(replica_rate=2.0, min_replicas=1, max_replicas=8,
+                          interval=5.0, scale_down_patience=2)
+    decisions = Autoscaler(pol, jid=0, window=10.0).schedule(arrivals, 40.0)
+    ups = [d for d in decisions if d.replicas > 1]
+    assert ups and ups[0].t <= 10.0
+    downs = [d for d in decisions if d.replicas == 1 and d.t > 0]
+    assert downs and downs[0].t >= 20.0     # not at the first quiet tick
+
+
+# ----------------------------------------------------------- batch admin
+def test_oneshot_admits_only_when_idle():
+    model, params = small_model()
+    kv = make_kv_store(model, slots=2, max_len=16, page_size=4)
+    b = Batcher(kv, slots=2, policy="oneshot")
+    for i in range(3):
+        b.submit(Request(rid=i, prompt=[1, 2], max_new_tokens=2))
+    first = b.admit(0.0)
+    assert len(first) == 2 and b.admit(0.0) == []       # batch is busy
+    from repro.serve.request import RequestState
+    for r in first:
+        r.state = RequestState.DONE
+        b.release(r)
+    assert len(b.admit(0.0)) == 1                       # next wave
