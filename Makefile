@@ -8,7 +8,7 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench strategies elastic hybrid comm kernels serve
+.PHONY: smoke tier1 bench strategies elastic hybrid comm kernels serve obs
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -57,11 +57,18 @@ kernels:
 serve:
 	$(PYTEST) $(SMOKE_TIMEOUT) python tools/serve_smoke.py
 
+# Observability gate: a traced bsp/ring/onebit@8 run on 8 virtual
+# devices (well-formed Chrome trace, step->exchange->bucket nesting,
+# same-seed byte identity) and a traced serve episode (request
+# lifecycles, KV occupancy, stall instants); see docs/observability.md.
+obs:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/obs_smoke.py
+
 # Full tier-1 verify (ROADMAP.md): the strategy-matrix, elasticity,
-# hybrid-mesh, comm-plane, kernel-backend, and serving gates plus
-# everything in tests/, including the 8-virtual-device subprocess tests
-# and end-to-end training compositions.
-tier1: strategies elastic hybrid comm kernels serve
+# hybrid-mesh, comm-plane, kernel-backend, serving, and observability
+# gates plus everything in tests/, including the 8-virtual-device
+# subprocess tests and end-to-end training compositions.
+tier1: strategies elastic hybrid comm kernels serve obs
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

@@ -82,6 +82,35 @@ for spec in sys.argv[1:]:
             modeled_tictac_overlap_us=round(tl["overlap_s"] * 1e6, 2),
             n_buckets=tl["n_buckets"])
     print("ROW " + json.dumps(row))
+
+# trace overhead: the same engine stepped with tracing off vs on — the
+# "zero overhead when disabled" claim, quantified (docs/observability.md)
+import time
+from repro.obs.trace import tracing
+strat = Strategy.parse("bsp/ring/onebit@8", lr=0.01, bucket_mb=0.25,
+                       backend="device")
+engine = strat.build(grad_fn)
+st = engine.init(params)
+N = 10
+for t in range(2):                       # compile + warm the caches
+    st, _ = engine.step(st, batches, t)
+t0 = time.perf_counter()
+for t in range(2, 2 + N):
+    st, _ = engine.step(st, batches, t)
+untraced_us = (time.perf_counter() - t0) / N * 1e6
+with tracing() as recorder:
+    t0 = time.perf_counter()
+    for t in range(2 + N, 2 + 2 * N):
+        st, _ = engine.step(st, batches, t)
+    traced_us = (time.perf_counter() - t0) / N * 1e6
+print("ROW " + json.dumps({
+    "bench": "data_parallel",
+    "strategy": "trace_overhead/" + strat.spec(),
+    "untraced_step_us": round(untraced_us, 1),
+    "traced_step_us": round(traced_us, 1),
+    "traced_overhead_pct": round((traced_us / untraced_us - 1) * 100, 2),
+    "trace_events_per_step": len(recorder.events) // N,
+}))
 print("WIRE-ACCOUNTING-MATCHES")
 """
 
@@ -100,7 +129,8 @@ def main(specs=None):
         raise RuntimeError("data_parallel child failed")
     rows = [json.loads(line[4:]) for line in res.stdout.splitlines()
             if line.startswith("ROW ")]
-    assert len(rows) == len(specs), (len(rows), len(specs))
+    # one row per spec + the trace-overhead row the child always appends
+    assert len(rows) == len(specs) + 1, (len(rows), len(specs))
     emit_json(rows)
 
 

@@ -1,12 +1,19 @@
 """Benchmark harness — one module per survey table/figure.
 
-Prints ``name,value,derived`` CSV rows per benchmark.
+Prints ``name,value,derived`` CSV rows per benchmark.  Machine-readable
+rows are single-line JSON objects starting with ``{`` (the BENCH_pr*.json
+convention: ``python -m benchmarks.run <filter> | grep '^{'``); the
+harness validates that every such row actually parses, so a benchmark
+that prints a torn/malformed object fails loudly instead of silently
+corrupting the committed BENCH file.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run table1     # substring filter
 """
 from __future__ import annotations
 
+import io
+import json
 import sys
 import time
 import traceback
@@ -29,6 +36,43 @@ BENCHES = [
 ]
 
 
+class _RowChecker(io.TextIOBase):
+    """Tee for a benchmark's stdout that validates machine-readable rows:
+    every line starting with ``{`` must parse as a single JSON object
+    (the rows ``grep '^{'`` harvests into BENCH_pr*.json)."""
+
+    def __init__(self, out):
+        self.out = out
+        self._buf = ""
+        self.json_rows = 0
+        self.malformed: list = []
+
+    def write(self, s: str) -> int:
+        self.out.write(s)
+        self._buf += s
+        while "\n" in self._buf:
+            line, self._buf = self._buf.split("\n", 1)
+            self._check(line)
+        return len(s)
+
+    def flush(self) -> None:
+        self.out.flush()
+
+    def finish(self) -> None:
+        if self._buf:            # unterminated last line still counts
+            self._check(self._buf)
+            self._buf = ""
+
+    def _check(self, line: str) -> None:
+        if not line.startswith("{"):
+            return
+        try:
+            json.loads(line)
+            self.json_rows += 1
+        except ValueError:
+            self.malformed.append(line[:200])
+
+
 def main() -> None:
     flt = sys.argv[1] if len(sys.argv) > 1 else ""
     failures = []
@@ -37,13 +81,26 @@ def main() -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         t0 = time.time()
+        checker = _RowChecker(sys.stdout)
+        sys.stdout = checker
         try:
             mod = __import__(module, fromlist=["main"])
             mod.main()
         except Exception:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        finally:
+            checker.finish()
+            sys.stdout = checker.out
+        if checker.malformed:
+            if name not in failures:
+                failures.append(name)
+            print(f"# {name}: {len(checker.malformed)} malformed JSON "
+                  f"row(s):", flush=True)
+            for bad in checker.malformed:
+                print(f"#   {bad!r}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s "
+              f"({checker.json_rows} json rows)", flush=True)
     if failures:
         print(f"# FAILED: {failures}")
         raise SystemExit(1)

@@ -258,6 +258,79 @@ class CommPlan:
                    if ef_leaves is not None else None)
         return out_tree, ef_tree, sent
 
+    # -------------------------------------------------------------- trace
+    def hop_model(self, b: int, arch: str = "allreduce"
+                  ) -> List[Tuple[str, float]]:
+        """The per-hop wire model for one exchange of bucket ``b``: a list
+        of (hop kind, mean per-worker tx bytes) mirroring exactly the
+        aggregate ``schedule_tx_bytes`` / ``measured_step_tx_bytes``
+        accounting, so the sum over hops equals the per-bucket measured
+        bytes (shape-static part; dgc adds its traced sparse payload at
+        the step level)."""
+        import math
+        codec = self.codec if self.in_schedule else codec_for(
+            Compressor("none"))
+        n = self.n
+        if n == 1:
+            return []
+        L = self.bucket_len(b)
+        P = pad_for_schedule(L, n)
+        m = P // n
+        e = codec.static_tx_bytes
+        if arch == "ps":
+            # gradient RS encoded, parameter AG exact fp32 (docs/comm.md)
+            return ([("rs", float(e(m)))] * (n - 1)
+                    + [("ag", float(4 * m))] * (n - 1))
+        topo = self.topology
+        if topo in ("ring", "psum"):
+            return ([("rs", float(e(m)))] * (n - 1)
+                    + [("ag", float(e(m)))] * (n - 1))
+        if topo == "butterfly":
+            if codec.exact:
+                return [("exchange", float(e(P)))] * int(math.log2(n))
+            rs = [("rs", float(e((n >> (k + 1)) * m)))
+                  for k in range(int(math.log2(n)))]
+            return rs + [("ag", float(e(m)))] * (n - 1)
+        if topo == "tree":
+            half = (n - 1) / n * e(P)
+            return [("reduce", float(half)), ("broadcast", float(half))]
+        if topo == "fully_connected":
+            return [("send", float(e(P)))] * (n - 1)
+        raise ValueError(topo)
+
+    def emit_trace(self, rec, *, arch: str = "allreduce",
+                   pid: str = "train", tid: str = "loop",
+                   clock=None) -> None:
+        """Emit the exchange this plan just executed onto the trace
+        timeline (docs/observability.md): an ``exchange`` span holding
+        one span per fused bucket *in issue order*, each carrying its
+        per-hop wire events.  The schedule runs inside jit, so these are
+        the plan's own deterministic model of what executed — virtual
+        clock only, byte-reproducible under fixed seeds."""
+        if not rec.enabled:
+            return
+        comp = self.compressor
+        rec.begin("exchange", pid=pid, tid=tid, cat="comm", clock=clock,
+                  topology=self.topology, codec=comp.method,
+                  backend=getattr(comp, "backend", "auto"),
+                  wire_mode=self.wire, arch=arch,
+                  n_buckets=len(self.buckets),
+                  step_tx_bytes=self.measured_step_tx_bytes(arch))
+        for b in self.order:
+            hops = self.hop_model(b, arch)
+            rec.begin(f"bucket{b}", pid=pid, tid=tid, cat="comm",
+                      elems=self.bucket_len(b),
+                      padded=pad_for_schedule(self.bucket_len(b), self.n),
+                      leaves=len(self.buckets[b]),
+                      tx_bytes=int(sum(x for _, x in hops)))
+            for h, (kind, nbytes) in enumerate(hops):
+                # mean per-worker bytes can be fractional (tree halves);
+                # keep the fraction so hop sums match the accounting
+                rec.instant("hop", pid=pid, tid=tid, cat="comm",
+                            hop=h, kind=kind, tx_bytes=round(nbytes, 3))
+            rec.end(pid=pid, tid=tid)
+        rec.end(pid=pid, tid=tid)
+
     # --------------------------------------------------------- accounting
     def modeled_timeline(self) -> Dict[str, float]:
         """Iteration-time projections for the exact bucket plan this

@@ -124,6 +124,12 @@ class ElasticWorkerSet:
         """Gradient pushes discarded by the backup-worker policy."""
         return self._dropped
 
+    def extra_metrics(self) -> dict:
+        """Backend-specific additions to ``Engine.metrics()`` — part of
+        the engine protocol (every backend implements it; the Strategy
+        wrapper calls it unconditionally).  The simulator has none."""
+        return {}
+
 
 class SimSyncEngine(ElasticWorkerSet):
     """Drives ``grad_fn(params, batch) -> (loss, grads)`` under a

@@ -41,6 +41,7 @@ from repro.checkpoint.store import (is_valid_checkpoint, load_checkpoint,
                                     read_manifest, save_checkpoint)
 from repro.data.partition import stream_assignment
 from repro.elastic.events import EventPlan, merge_plans
+from repro.obs.trace import get_recorder
 
 _CKPT_FMT = "step_{:06d}"
 
@@ -199,6 +200,8 @@ def fit_elastic(strategy, grad_fn: Callable, params,
     # explicit opt-in for picking up a previous incarnation's snapshot)
     written: set = set()
 
+    rec = get_recorder()
+
     def commit(step: int, state, hist_len: int, full: bool = False):
         # every snapshot records which plan events have already fired:
         # "fired" is not derivable from the step alone (a crash rollback
@@ -208,9 +211,12 @@ def fit_elastic(strategy, grad_fn: Callable, params,
         # hash-skipped against the newest committed snapshot); crash
         # rollback and preemption commits stay full saves.
         prev = ckpt(max(written)) if (written and not full) else None
-        save_engine_state(ckpt(step), engine, state, step, hist_len,
-                          extra={"consumed": run.consumed_specs()},
-                          incremental_from=prev)
+        with rec.span("snapshot", pid="elastic", tid="events", cat="elastic",
+                      clock=("train_step", step), step=step,
+                      mode="full" if prev is None else "incremental"):
+            save_engine_state(ckpt(step), engine, state, step, hist_len,
+                              extra={"consumed": run.consumed_specs()},
+                              incremental_from=prev)
         written.add(step)
 
     t = 0
@@ -256,6 +262,9 @@ def fit_elastic(strategy, grad_fn: Callable, params,
             # due batch pending, to fire when the run reaches them again
             while (ev := run.take_one(t)) is not None:
                 if ev.kind == "slow":
+                    rec.instant("straggler", pid="elastic", tid="events",
+                                cat="elastic", clock=("train_step", t),
+                                worker=ev.worker, factor=ev.factor)
                     engine.set_slowdown(ev.worker, ev.factor)
                     if ckpt:
                         # commit so a later crash rollback (which restores
@@ -263,8 +272,12 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                         # events) cannot erase the straggler
                         commit(t, st, len(history))
                 elif ev.kind == "resize":
-                    st = engine.reshard(st, ev.workers, step=t)
-                    eb.assign(_engine_streams(engine))
+                    with rec.span("resize", pid="elastic", tid="events",
+                                  cat="elastic", clock=("train_step", t),
+                                  from_workers=_engine_workers(engine),
+                                  to_workers=ev.workers):
+                        st = engine.reshard(st, ev.workers, step=t)
+                        eb.assign(_engine_streams(engine))
                     resizes += 1
                     if ckpt:
                         # commit the post-reshard state so a later crash
@@ -272,6 +285,14 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                         commit(t, st, len(history))
                 elif ev.kind in ("crash", "restart"):
                     t0 = time.time()
+                    # explicit begin/end (not a ``with``): the error paths
+                    # below abort the run anyway, and a truncated trace is
+                    # the honest record of a failed recovery
+                    rec.begin("recovery", pid="elastic", tid="events",
+                              cat="elastic", clock=("train_step", t),
+                              kind=ev.kind,
+                              worker=(ev.worker if ev.kind == "crash"
+                                      else None))
                     if ev.kind == "restart":
                         # scheduler suspend: snapshot the live state first
                         # (full save — recovery must not depend on links)
@@ -307,6 +328,9 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                                             lost=lost)
                         eb.assign(_engine_streams(engine))
                         commit(rstep, st, len(history), full=True)
+                    rec.end(pid="elastic", tid="events",
+                            restored_step=rstep, lost_steps=t - rstep,
+                            workers=_engine_workers(engine))
                     recoveries.append(dict(
                         kind=ev.kind, at=t, restored_step=rstep,
                         lost_steps=t - rstep,
@@ -321,7 +345,15 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                 continue
             if ckpt and t > 0 and t % checkpoint_every == 0:
                 commit(t, st, len(history))
-            st, evs = engine.step(st, eb, t)
+            if rec.enabled:
+                # same step track as train_loop (fit_elastic drives the
+                # engine directly), so engine sub-spans nest identically
+                with rec.span("step", pid="train", tid="loop", cat="train",
+                              clock=("train_step", t), step=t,
+                              workers=_engine_workers(engine)):
+                    st, evs = engine.step(st, eb, t)
+            else:
+                st, evs = engine.step(st, eb, t)
             history.extend(evs)
             executed += 1
             t += 1

@@ -13,6 +13,7 @@
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,9 @@ def main():
                     help="<= 0 is greedy argmax")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome trace (request lifecycles + KV "
+                         "occupancy); see docs/observability.md")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -83,7 +87,13 @@ def main():
         num_pages=args.num_pages or None, policy=args.policy, tp=args.tp,
         window_override=args.window,
         cache_dtype=jnp.float32, compute_dtype=jnp.float32))
-    metrics = eng.run(reqs)
+    with contextlib.ExitStack() as stack:
+        if args.trace:
+            from repro.obs.trace import tracing
+            stack.enter_context(tracing(args.trace))
+        metrics = eng.run(reqs)
+    if args.trace:
+        print(f"trace written to {args.trace}")
 
     for r in reqs[:4]:
         print(f"req {r.rid}: arrival={r.arrival:5.1f} "

@@ -10,6 +10,7 @@ container).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -39,6 +40,9 @@ def main():
     ap.add_argument("--compress", default="none",
                     choices=["none", "onebit", "terngrad", "qsgd", "dgc"])
     ap.add_argument("--compute-dtype", default="float32")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome trace (Perfetto-loadable) of the "
+                         "run; see docs/observability.md")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -74,8 +78,14 @@ def main():
                            precision=precision, compressor=comp)
     state = TrainState.create(params, opt, comp)
     t0 = time.time()
-    state, hist = train_loop(step, state, batch_fn, args.steps,
-                             log_every=max(1, args.steps // 10))
+    with contextlib.ExitStack() as stack:
+        if args.trace:
+            from repro.obs.trace import tracing
+            stack.enter_context(tracing(args.trace))
+        state, hist = train_loop(step, state, batch_fn, args.steps,
+                                 log_every=max(1, args.steps // 10))
+    if args.trace:
+        print(f"trace written to {args.trace}")
     for rec in hist:
         print(json.dumps({k: round(v, 5) for k, v in rec.items()}))
     print(f"done in {time.time() - t0:.1f}s; "

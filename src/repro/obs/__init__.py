@@ -1,0 +1,26 @@
+"""Unified observability plane (docs/observability.md).
+
+``repro.obs.trace`` — structured tracing: spans / instants / counters
+recorded in Chrome trace-event JSON (loadable in Perfetto or
+``chrome://tracing``) on *dual clocks*: a deterministic virtual tick
+timeline plus wall-clock annotations, so traces from seeded runs are
+reproducible byte-for-byte once the wall fields are stripped.  The
+default recorder is a no-op — instrumented hot paths cost nothing when
+tracing is off.
+
+``repro.obs.metrics`` — a counter / gauge / histogram registry with
+JSONL export, and the nearest-rank ``percentile`` helper every latency
+aggregation in the repo shares.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               percentile)
+from repro.obs.trace import (NullRecorder, TraceRecorder, emit_sched_trace,
+                             get_recorder, load_trace, set_recorder,
+                             strip_wall, tracing, validate_trace)
+
+__all__ = [
+    "TraceRecorder", "NullRecorder", "get_recorder", "set_recorder",
+    "tracing", "load_trace", "strip_wall", "validate_trace",
+    "emit_sched_trace",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "percentile",
+]

@@ -1,0 +1,157 @@
+"""Counter / gauge / histogram registry with JSONL export
+(docs/observability.md), plus the nearest-rank ``percentile`` helper
+every latency aggregation in the repo shares (``serve/request.py``
+re-exports it for compatibility).
+
+The registry is deliberately tiny and dependency-free: metrics are
+host-side Python scalars updated outside jit, so registering and
+updating them never touches a traced value.
+
+    reg = MetricsRegistry()
+    reg.counter("requests").inc()
+    reg.gauge("kv_free_pages").set(13)
+    reg.histogram("ttft").observe(2.0)
+    print("\n".join(reg.to_jsonl()))      # one JSON object per metric
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence, Union
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile over ``values`` (``q`` in [0, 100]), no
+    numpy dependency in the hot accounting path.  Edge cases: an empty
+    sample returns ``nan`` (there is no order statistic to report), a
+    singleton sample returns its one value for every ``q``."""
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q!r} outside [0, 100]")
+    xs = sorted(float(v) for v in values)
+    if not xs:
+        return float("nan")
+    if len(xs) == 1:
+        return xs[0]
+    k = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[k]
+
+
+class Counter:
+    """Monotonically increasing count (requests served, stalls, bytes)."""
+    __slots__ = ("value",)
+    kind = "counter"
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: Union[int, float] = 1) -> None:
+        if n < 0:
+            raise ValueError("counters only go up; use a Gauge")
+        self.value += n
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"value": self.value}
+
+
+class Gauge:
+    """A value that goes up and down (pool occupancy, replica count)."""
+    __slots__ = ("value",)
+    kind = "gauge"
+
+    def __init__(self):
+        self.value = float("nan")
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"value": self.value}
+
+
+class Histogram:
+    """Sample distribution with nearest-rank percentile summaries
+    (latencies, step times).  Keeps raw samples — these registries live
+    for one run, not for months."""
+    __slots__ = ("samples",)
+    kind = "histogram"
+
+    def __init__(self):
+        self.samples: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.samples.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def sum(self) -> float:
+        return sum(self.samples)
+
+    def percentile(self, q: float) -> float:
+        return percentile(self.samples, q)
+
+    def snapshot(self, qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
+        out: Dict[str, float] = {"count": float(self.count)}
+        if self.samples:
+            out.update(sum=self.sum, min=min(self.samples),
+                       max=max(self.samples),
+                       mean=self.sum / self.count)
+        for q in qs:
+            out[f"p{q:g}"] = self.percentile(q)
+        return out
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class MetricsRegistry:
+    """Named metrics, get-or-create semantics, kind-checked: asking for
+    an existing name as a different kind is a bug, not a new metric."""
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, kind: str):
+        m = self._metrics.get(name)
+        if m is None:
+            m = _KINDS[kind]()
+            self._metrics[name] = m
+        elif m.kind != kind:
+            raise ValueError(f"metric {name!r} is a {m.kind}, not a {kind}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, "counter")
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, "gauge")
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, "histogram")
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    # ----------------------------------------------------------- export
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {name: self._metrics[name].snapshot()
+                for name in self.names()}
+
+    def to_jsonl(self, **common) -> List[str]:
+        """One JSON object per metric (``{"metric": name, "kind": ...,
+        **snapshot, **common}``) — the ``BENCH_*.json`` row convention."""
+        lines = []
+        for name in self.names():
+            m = self._metrics[name]
+            row = dict(metric=name, kind=m.kind, **m.snapshot(), **common)
+            lines.append(json.dumps(row, sort_keys=True))
+        return lines
+
+    def export_jsonl(self, path: str, **common) -> None:
+        with open(path, "w") as f:
+            for line in self.to_jsonl(**common):
+                f.write(line + "\n")

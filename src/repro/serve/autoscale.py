@@ -27,6 +27,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.elastic.events import EventPlan, plan_from_sched_trace
+from repro.obs.trace import emit_sched_trace, get_recorder
 from repro.sched.jobs import Job
 from repro.sched.simulator import TraceEvent
 
@@ -123,6 +124,14 @@ class Autoscaler:
             else:
                 below = 0
             if cur != decisions[-1].replicas:
+                rec = get_recorder()
+                if rec.enabled:
+                    rec.instant("autoscale_decision", pid="serve",
+                                tid="autoscale", cat="serve",
+                                clock=("sched_time", now), jid=self.jid,
+                                rate=round(rate, 6),
+                                from_replicas=decisions[-1].replicas,
+                                to_replicas=cur)
                 decisions.append(ScaleDecision(now, rate, cur))
         return decisions
 
@@ -148,6 +157,9 @@ class Autoscaler:
         deployment's own step clock), via the shared sched plumbing."""
         decisions = self.schedule(arrivals, horizon)
         trace = self.to_trace(decisions)
+        # the deployment's allocation stream rides the shared sched
+        # timeline, next to any co-scheduled training tenants
+        emit_sched_trace(get_recorder(), trace, pid="sched")
         return (plan_from_sched_trace(trace, self.jid,
                                       steps_per_sec=steps_per_sec),
                 decisions)

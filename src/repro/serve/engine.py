@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.transformer import plan_segments
+from repro.obs.trace import get_recorder
 from repro.serve.batcher import Batcher
 from repro.serve.cache import make_kv_store
 from repro.serve.request import Request, RequestState, summarize
@@ -90,6 +91,9 @@ class ServeEngine:
         self.clock = 0.0
         self.decode_iterations = 0
         self.prefill_groups = 0
+        # rids whose lifecycle spans this engine opened — a request is
+        # only ever *ended* on the trace if tracing saw it get submitted
+        self._traced_rids: set = set()
 
         B = scfg.slots
         self._last_tok = np.zeros(B, np.int32)
@@ -144,11 +148,28 @@ class ServeEngine:
     def submit(self, request: Request) -> None:
         self.requests.append(request)
         self.batcher.submit(request)
+        rec = get_recorder()
+        if rec.enabled:
+            # lifecycle track per request: QUEUED -> PREFILL -> DECODE
+            # spans back to back on tid=req<rid> (docs/observability.md)
+            self._traced_rids.add(request.rid)
+            rec.begin("queued", pid="serve", tid=f"req{request.rid}",
+                      cat="serve", clock=("serve_iter", self.clock),
+                      rid=request.rid, prompt_len=request.prompt_len,
+                      max_new_tokens=request.max_new_tokens,
+                      arrival=request.arrival)
 
     def _finish(self, r: Request) -> None:
         r.state = RequestState.DONE
         r.finish_time = self.clock
         self.batcher.release(r)
+        rec = get_recorder()
+        if rec.enabled and r.rid in self._traced_rids:
+            rec.end(pid="serve", tid=f"req{r.rid}",      # closes "decode"
+                    generated=len(r.output))
+            rec.instant("done", pid="serve", tid=f"req{r.rid}", cat="serve",
+                        clock=("serve_iter", self.clock), rid=r.rid)
+            self._traced_rids.discard(r.rid)
 
     def _set_slot(self, r: Request, token: int) -> None:
         i = r.slot
@@ -163,8 +184,17 @@ class ServeEngine:
         groups: Dict[int, List[Request]] = {}
         for r in admitted:
             groups.setdefault(r.prompt_len, []).append(r)
+        rec = get_recorder()
         for plen in sorted(groups):
             rs = groups[plen]
+            if rec.enabled:
+                for r in rs:
+                    if r.rid in self._traced_rids:
+                        rec.end(pid="serve", tid=f"req{r.rid}")  # "queued"
+                        rec.begin("prefill", pid="serve",
+                                  tid=f"req{r.rid}", cat="serve",
+                                  clock=("serve_iter", self.clock),
+                                  rid=r.rid, slot=r.slot, group_len=plen)
             toks = jnp.asarray(
                 np.array([list(r.prompt) for r in rs], np.int32))
             logits, states = self.model.prefill(
@@ -197,6 +227,12 @@ class ServeEngine:
                 r.first_token_time = self.clock
                 r.state = RequestState.DECODE
                 self._set_slot(r, tok)
+                if rec.enabled and r.rid in self._traced_rids:
+                    rec.end(pid="serve", tid=f"req{r.rid}")  # "prefill"
+                    rec.begin("decode", pid="serve", tid=f"req{r.rid}",
+                              cat="serve",
+                              clock=("serve_iter", self.clock),
+                              rid=r.rid, slot=r.slot)
                 if len(r.output) >= r.max_new_tokens:
                     self._finish(r)
 
@@ -229,12 +265,36 @@ class ServeEngine:
             if len(r.output) >= r.max_new_tokens:
                 self._finish(r)
 
+    def _emit_occupancy(self, rec) -> None:
+        """Counter tracks: paged-KV pool occupancy (or contiguous slot
+        occupancy) sampled once per engine iteration."""
+        alloc = getattr(self.kv, "allocator", None)
+        clock = ("serve_iter", self.clock)
+        if alloc is not None:
+            rec.counter("kv_pages",
+                        {"used": alloc.capacity - alloc.free_pages,
+                         "free": alloc.free_pages},
+                        pid="serve", cat="serve", clock=clock)
+        busy = sum(r is not None for r in self.batcher.running)
+        rec.counter("slots", {"used": busy, "free": self.scfg.slots - busy},
+                    pid="serve", cat="serve", clock=clock)
+
     def step_iteration(self) -> bool:
         """One engine iteration: admit+prefill, then one decode step.
         Returns False when nothing could make progress at this clock
         (the caller should jump the clock to the next arrival)."""
         progressed = False
+        rec = get_recorder()
+        stalls0 = self.batcher.stalls
         admitted = self.batcher.admit(self.clock)
+        if rec.enabled and self.batcher.stalls > stalls0:
+            # the FIFO head could not reserve pages/a slot this iteration
+            rec.instant("admission_stall", pid="serve", tid="engine",
+                        cat="serve", clock=("serve_iter", self.clock),
+                        stalls=self.batcher.stalls,
+                        free_pages=(self.kv.allocator.free_pages
+                                    if getattr(self.kv, "allocator", None)
+                                    is not None else -1))
         if admitted:
             self._prefill(admitted)
             progressed = True
@@ -242,6 +302,8 @@ class ServeEngine:
                for r in self.batcher.running):
             self._decode_iteration()
             progressed = True
+        if rec.enabled:
+            self._emit_occupancy(rec)
         return progressed
 
     def run(self, requests: Optional[Sequence[Request]] = None) -> dict:

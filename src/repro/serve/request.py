@@ -25,6 +25,11 @@ import dataclasses
 import enum
 from typing import List, Optional, Sequence
 
+# the latency aggregation lives in the shared observability plane now;
+# re-exported here so existing ``serve.request.percentile`` callers keep
+# working (docs/observability.md)
+from repro.obs.metrics import percentile
+
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
@@ -98,16 +103,6 @@ class Request:
         if n <= 1:
             return 0.0
         return (self.finish_time - self.first_token_time) / (n - 1)
-
-
-def percentile(values: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]) without numpy dependency in
-    the hot accounting path."""
-    xs = sorted(values)
-    if not xs:
-        return float("nan")
-    k = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
-    return xs[k]
 
 
 def summarize(requests: Sequence[Request], makespan: float) -> dict:

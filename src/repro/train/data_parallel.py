@@ -74,6 +74,7 @@ from repro.core.parameter_server import make_ps_step, sgd_update_fn
 from repro.core.sync import (ElasticWorkerSet, default_periods,
                              firing_schedule, warn_deprecated)
 from repro.elastic.backup import participation_weights
+from repro.obs.trace import get_recorder
 
 AXIS = "workers"
 
@@ -458,19 +459,37 @@ class DeviceEngine(ElasticWorkerSet):
             per_worker = [batches(t, w) for w in range(K)]
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_worker)
         st["rng"], *subs = jax.random.split(st["rng"], K + 1)
-        params, ef, losses, sent = self._step_fn(
-            st["params"], st["ef"], batch, jnp.stack(subs),
-            jnp.asarray(weights))
+        rec = get_recorder()
+        if rec.enabled:
+            # the fused shard_map step cannot be split at runtime, so the
+            # compute span covers the whole dispatch (blocked for an
+            # honest wall_s) and the exchange structure below is the
+            # plan's deterministic model of what ran inside it
+            with rec.span("compute", pid="train", tid="loop", cat="train",
+                          clock=("train_step", t), workers=K, fused=True):
+                params, ef, losses, sent = self._step_fn(
+                    st["params"], st["ef"], batch, jnp.stack(subs),
+                    jnp.asarray(weights))
+                jax.block_until_ready(losses)
+        else:
+            params, ef, losses, sent = self._step_fn(
+                st["params"], st["ef"], batch, jnp.stack(subs),
+                jnp.asarray(weights))
         st.update(params=params, ef=ef)
         if cfg.wire == "measured":
             # recomputed per bucket from the plan, every step: the
             # shape-static plane bytes of the whole schedule plus dgc's
             # per-step sparse payload (traced sent_elems, all workers)
-            st["wire"] += plan.measured_step_tx_bytes(cfg.arch) * K \
+            wire_inc = plan.measured_step_tx_bytes(cfg.arch) * K \
                 + SPARSE_ELEM_BYTES * int(np.sum(np.asarray(sent)))
         else:
-            st["wire"] += self._event_wire_bytes(st["params"]) \
+            wire_inc = self._event_wire_bytes(st["params"]) \
                 * (K - len(drop))
+        st["wire"] += wire_inc
+        if rec.enabled:
+            plan.emit_trace(rec, arch=cfg.arch, clock=("train_step", t))
+            rec.counter("wire_bytes", {"cumulative": int(st["wire"])},
+                        pid="train", cat="comm", clock=("train_step", t))
         self._dropped += len(drop)
         # participant-mean loss, float64 like the simulator's accounting
         part_losses = [float(losses[w]) for w in range(K) if w not in drop]

@@ -434,6 +434,10 @@ class Engine:
       step(state, batches, t)   -> (state, events)   # one global step
       finalize(state)           -> params
       metrics()                 -> {backend, spec, wire_bytes, ...}
+      extra_metrics()           -> backend-specific metric additions
+                                   (empty dict when there are none —
+                                   every inner engine implements it, so
+                                   ``metrics`` needs no duck-typing)
 
     ``run`` composes them through the shared fit loop and returns the
     legacy ``(params, history, wire_bytes)`` triple."""
@@ -462,9 +466,11 @@ class Engine:
                  wire_bytes=self.inner.wire_bytes())
         if hasattr(self.inner, "dropped_updates"):
             m["dropped_updates"] = self.inner.dropped_updates()
-        if hasattr(self.inner, "extra_metrics"):
-            m.update(self.inner.extra_metrics())
+        m.update(self.inner.extra_metrics())
         return m
+
+    def extra_metrics(self) -> Dict[str, Any]:
+        return self.inner.extra_metrics()
 
     # --------------------------------------------------- elastic interface
     # (repro.elastic.recovery drives these; every backend implements them)

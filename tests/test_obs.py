@@ -1,0 +1,263 @@
+"""Observability plane: trace recorder semantics, dual-clock determinism,
+metrics registry aggregation, and the instrumented serve engine
+(docs/observability.md)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import Compressor
+from repro.comm.plan import CommPlan
+from repro.obs.metrics import MetricsRegistry, percentile
+from repro.obs.trace import (NullRecorder, TraceRecorder, canonical_bytes,
+                             emit_sched_trace, find_spans, get_recorder,
+                             set_recorder, strip_wall, tracing,
+                             validate_trace)
+
+
+# ------------------------------------------------------------- recorder
+def test_default_recorder_is_noop():
+    rec = get_recorder()
+    assert isinstance(rec, NullRecorder)
+    assert rec.enabled is False
+    # the disabled hot path: span/instant/counter are all no-ops and the
+    # shared null span is reused (no per-call allocation)
+    assert rec.span("x", pid="p") is rec.span("y", tid="t")
+    rec.begin("a")
+    rec.end()
+    rec.instant("i", foo=1)
+    rec.counter("c", {"v": 1.0})
+
+
+def test_tracing_installs_and_restores(tmp_path):
+    before = get_recorder()
+    path = tmp_path / "t.json"
+    with tracing(str(path)) as rec:
+        assert get_recorder() is rec
+        with rec.span("outer", pid="p", tid="t", clock=("train_step", 0)):
+            rec.instant("mark", pid="p", tid="t")
+    assert get_recorder() is before
+    trace = json.loads(path.read_bytes())
+    stats = validate_trace(trace)
+    assert stats["spans"] == 1 and stats["instants"] == 1
+
+
+def test_span_nesting_and_validation():
+    rec = TraceRecorder()
+    with rec.span("step", pid="train", tid="loop"):
+        with rec.span("compute", pid="train", tid="loop"):
+            pass
+        with rec.span("exchange", pid="train", tid="loop"):
+            rec.instant("hop", pid="train", tid="loop")
+    stats = validate_trace(rec.to_chrome())
+    assert stats["max_depth"] == 2
+    assert stats["spans"] == 3
+    # unmatched end is rejected at record time
+    with pytest.raises(ValueError):
+        rec.end(pid="train", tid="loop")
+
+
+def test_dual_clock_and_wall_strip():
+    rec = TraceRecorder()
+    rec.begin("step", pid="train", tid="loop", clock=("train_step", 7))
+    rec.end(pid="train", tid="loop")
+    tr = rec.to_chrome()
+    b = find_spans(tr, "step")[0]
+    assert b["args"]["clock_domain"] == "train_step"
+    assert b["args"]["clock_t"] == 7
+    assert "wall_s" in b["args"]
+    stripped = strip_wall(tr)
+    assert all("wall_s" not in ev["args"]
+               for ev in stripped["traceEvents"])
+    # ...and include_wall=False serializes identically to the strip
+    assert (canonical_bytes(strip_wall(json.loads(rec.to_bytes()))) ==
+            rec.to_bytes(include_wall=False))
+
+
+def test_trace_determinism_on_virtual_clock():
+    """Two identical event sequences differ only in wall time — the
+    virtual tick timeline is byte-identical after strip_wall."""
+    def run():
+        rec = TraceRecorder()
+        for t in range(3):
+            with rec.span("step", pid="train", tid="loop",
+                          clock=("train_step", t), step=t):
+                rec.counter("wire_bytes", {"cumulative": 10.0 * t},
+                            pid="train", clock=("train_step", t))
+        return rec.to_chrome()
+    a, b = run(), run()
+    assert a != b                      # wall clocks differ...
+    assert (canonical_bytes(strip_wall(a)) ==
+            canonical_bytes(strip_wall(b)))     # ...nothing else does
+
+
+# ------------------------------------------------------------ comm plan
+def test_commplan_emit_trace_matches_accounting():
+    """The per-hop model sums to the plan's measured per-step bytes
+    (CommPlan.plan is pure host — no devices needed)."""
+    params = {"a": jnp.zeros((64, 8)), "b": jnp.zeros((130,))}
+    for topo in ("ring", "tree", "butterfly", "fully_connected"):
+        plan = CommPlan.plan(params, axis="w", n=4, topology=topo,
+                             compressor=Compressor("onebit"),
+                             wire="measured", bucket_mb=1e-4)
+        per_bucket = [sum(x for _, x in plan.hop_model(b))
+                      for b in range(len(plan.buckets))]
+        assert int(sum(per_bucket)) == plan.measured_step_tx_bytes()
+        rec = TraceRecorder()
+        plan.emit_trace(rec, clock=("train_step", 0))
+        tr = rec.to_chrome()
+        stats = validate_trace(tr)
+        assert len(find_spans(tr, "exchange")) == 1
+        bucket_spans = [n for n in stats["names"]
+                        if n.startswith("bucket")]
+        assert len(bucket_spans) == len(plan.buckets)
+        hop_bytes = sum(ev["args"]["tx_bytes"]
+                        for ev in tr["traceEvents"]
+                        if ev.get("ph") == "i" and ev["name"] == "hop")
+        assert hop_bytes == pytest.approx(sum(per_bucket), abs=0.01)
+
+
+def test_commplan_ps_hop_model():
+    params = {"a": jnp.zeros((64, 8))}
+    plan = CommPlan.plan(params, axis="w", n=4, topology="ring",
+                         compressor=Compressor("onebit"), wire="measured",
+                         bucket_mb=1.0)
+    hops = plan.hop_model(0, arch="ps")
+    assert [k for k, _ in hops] == ["rs"] * 3 + ["ag"] * 3
+    assert int(sum(x for _, x in hops)) == plan.measured_step_tx_bytes("ps")
+
+
+# ---------------------------------------------------------- sched bridge
+def test_emit_sched_trace_spans_and_truncation():
+    from repro.sched.simulator import TraceEvent
+    rec = TraceRecorder()
+    emit_sched_trace(rec, [
+        TraceEvent(0.0, 1, "start", 2),
+        TraceEvent(5.0, 1, "suspend", 2),
+        TraceEvent(6.0, 1, "resume", 4),
+        TraceEvent(9.0, 1, "finish", 4),
+        TraceEvent(2.0, 2, "start", 1),      # never finishes
+    ])
+    tr = rec.to_chrome()
+    stats = validate_trace(tr)               # truncated job was closed
+    assert stats["spans"] == 3
+    assert stats["instants"] == 5
+    last = [ev for ev in tr["traceEvents"] if ev.get("ph") == "E"][-1]
+    assert last["args"].get("truncated") is True
+
+
+# -------------------------------------------------------------- metrics
+def test_percentile_edges():
+    assert np.isnan(percentile([], 50))
+    assert percentile([3.0], 0) == 3.0
+    assert percentile([3.0], 100) == 3.0
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == 3.0          # nearest rank of 4 samples
+    with pytest.raises(ValueError):
+        percentile(xs, 101)
+    with pytest.raises(ValueError):
+        percentile(xs, -1)
+
+
+def test_percentile_reexport_is_shared():
+    from repro.serve import request as req
+    assert req.percentile is percentile
+
+
+def test_metrics_registry_aggregation(tmp_path):
+    m = MetricsRegistry()
+    m.counter("steps").inc()
+    m.counter("steps").inc(4)
+    m.gauge("workers").set(8)
+    for v in [1.0, 2.0, 3.0, 10.0]:
+        m.histogram("lat").observe(v)
+    snap = m.snapshot()
+    assert snap["steps"]["value"] == 5
+    assert snap["workers"]["value"] == 8
+    assert snap["lat"]["count"] == 4
+    assert snap["lat"]["sum"] == 16.0
+    assert snap["lat"]["p50"] == 3.0          # nearest rank of 4 samples
+    # same name, different kind -> loud failure
+    with pytest.raises(ValueError):
+        m.gauge("steps")
+    with pytest.raises(ValueError):
+        m.counter("steps").inc(-1)
+    path = tmp_path / "m.jsonl"
+    m.export_jsonl(str(path), run="r0")
+    rows = [json.loads(x) for x in path.read_text().splitlines()]
+    assert {r["metric"] for r in rows} == {"steps", "workers", "lat"}
+    assert all(r["run"] == "r0" for r in rows)
+
+
+# ----------------------------------------------------------- serve trace
+def _serve_episode(num_pages=None):
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.request import Request
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(1, cfg.vocab_size, size=(4, 5))
+    reqs = [Request(rid=i, prompt=[int(t) for t in prompts[i]],
+                    max_new_tokens=6) for i in range(4)]
+    eng = ServeEngine(model, params, ServeConfig(
+        slots=4, max_len=16, page_size=4, num_pages=num_pages,
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32))
+    with tracing() as rec:
+        m = eng.run(reqs)
+    return rec.to_chrome(), m
+
+
+def test_serve_trace_pool_exhaustion_stalls():
+    """An undersized page pool shows up on the trace: stall instants plus
+    full queued->prefill->decode lifecycles once pages free up."""
+    tr, m = _serve_episode(num_pages=6)
+    assert m["admission_stalls"] > 0
+    stats = validate_trace(tr)
+    stalls = [ev for ev in tr["traceEvents"]
+              if ev.get("ph") == "i" and ev["name"] == "admission_stall"]
+    assert len(stalls) > 0
+    assert all(ev["args"]["free_pages"] >= 0 for ev in stalls)
+    assert len(find_spans(tr, "queued")) == 4
+    assert len(find_spans(tr, "prefill")) == 4
+    assert len(find_spans(tr, "decode")) == 4
+    # the kv_pages counter track tops out at the pool capacity
+    kv = [ev for ev in tr["traceEvents"]
+          if ev.get("ph") == "C" and ev["name"] == "kv_pages"]
+    assert kv and all(ev["args"]["used"] + ev["args"]["free"] == 5
+                      for ev in kv)           # 6 pages - 1 reserved
+    assert "admission_stall" in stats["names"]
+
+
+def test_serve_untraced_records_nothing():
+    """With no recorder installed the engine leaves no lifecycle state."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.request import Request
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = [Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2)]
+    eng = ServeEngine(model, params, ServeConfig(
+        slots=1, max_len=8, page_size=4,
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32))
+    assert isinstance(get_recorder(), NullRecorder)
+    eng.run(reqs)
+    assert eng._traced_rids == set()
+
+
+def test_set_recorder_restores_null():
+    rec = TraceRecorder()
+    prev = set_recorder(rec)
+    try:
+        assert get_recorder() is rec
+    finally:
+        set_recorder(prev)
+    assert isinstance(get_recorder(), NullRecorder)

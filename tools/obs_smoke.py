@@ -1,0 +1,143 @@
+"""`make obs` tier-1 gate: the observability plane end to end.
+
+Three checks (see docs/observability.md):
+
+  train trace    a traced ``bsp/ring/onebit@8`` run on 8 virtual devices
+                 produces well-formed Chrome trace JSON with the
+                 step -> compute/exchange -> bucket -> hop nesting and
+                 wire-byte counter track
+  determinism    two same-seed traced runs are byte-identical after
+                 ``strip_wall`` (the virtual-tick clock is a pure
+                 function of host event order)
+  serve trace    a traced serve episode over an undersized page pool
+                 records the queued -> prefill -> decode lifecycle span
+                 chain per request, the ``kv_pages`` occupancy counter
+                 track, and at least one ``admission_stall`` instant
+
+  PYTHONPATH=src python tools/obs_smoke.py
+"""
+import os
+import sys
+
+# virtual devices must be configured before jax import
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=8").strip()
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.obs.trace import (canonical_bytes, find_spans,   # noqa: E402
+                             strip_wall, tracing, validate_trace)
+from repro.train import Strategy                            # noqa: E402
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (8, 1))
+STEPS = 3
+
+
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 8))
+    return {"X": X, "y": X @ W_TRUE}
+
+
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+
+
+def traced_train() -> dict:
+    # a second small leaf forces >1 fused bucket at this bucket_mb
+    p0 = {"W": jnp.zeros((8, 1)), "b": jnp.zeros((130,))}
+    strat = Strategy.parse("bsp/ring/onebit@8", lr=0.05, bucket_mb=1e-4,
+                           backend="device", wire="measured")
+    engine = strat.build(grad_fn)
+    with tracing() as rec:
+        engine.run(p0, make_batch, STEPS)
+    return rec.to_chrome()
+
+
+def traced_serve() -> dict:
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.request import Request
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(1, cfg.vocab_size, size=(4, 5))
+    reqs = [Request(rid=i, prompt=[int(t) for t in prompts[i]],
+                    max_new_tokens=6) for i in range(4)]
+    # num_pages=6 is under the 4-request working set -> admission stalls
+    eng = ServeEngine(model, params, ServeConfig(
+        slots=4, max_len=16, page_size=4, num_pages=6,
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32))
+    with tracing() as rec:
+        m = eng.run(reqs)
+    assert m["admission_stalls"] > 0, "pool was not exhausted"
+    return rec.to_chrome()
+
+
+def main() -> int:
+    failures = []
+
+    # ------------------------------------------------------ train trace
+    tr = traced_train()
+    try:
+        stats = validate_trace(tr)
+        names = set(stats["names"])
+        need = {"step", "compute", "exchange", "hop", "wire_bytes"}
+        assert need <= names, f"missing events: {need - names}"
+        assert any(n.startswith("bucket") for n in names), "no bucket spans"
+        assert len(find_spans(tr, "step")) == STEPS, "step span per step"
+        # step -> exchange -> bucket is depth 3 on the train track
+        assert stats["max_depth"] >= 3, stats["max_depth"]
+        ok = True
+    except (AssertionError, ValueError) as e:
+        ok = False
+        failures.append(f"train: {e}")
+    print(f"{'train trace: nested step/exchange/bucket':48s} "
+          f"{'OK' if ok else 'FAIL'}")
+
+    # ------------------------------------------------------ determinism
+    a = canonical_bytes(strip_wall(tr))
+    b = canonical_bytes(strip_wall(traced_train()))
+    ok = a == b
+    print(f"{'determinism: same-seed traces byte-identical':48s} "
+          f"{'OK' if ok else 'FAIL'} ({len(a)} bytes)")
+    if not ok:
+        failures.append("determinism")
+
+    # ------------------------------------------------------ serve trace
+    sv = traced_serve()
+    try:
+        stats = validate_trace(sv)
+        names = set(stats["names"])
+        need = {"queued", "prefill", "decode", "kv_pages",
+                "admission_stall"}
+        assert need <= names, f"missing events: {need - names}"
+        assert len(find_spans(sv, "queued")) == 4, "lifecycle per request"
+        assert len(find_spans(sv, "decode")) == 4, "decode span per request"
+        ok = True
+    except (AssertionError, ValueError) as e:
+        ok = False
+        failures.append(f"serve: {e}")
+    print(f"{'serve trace: lifecycles + kv pool + stalls':48s} "
+          f"{'OK' if ok else 'FAIL'}")
+
+    if failures:
+        print(f"\nobs gate FAILED: {failures}")
+        return 1
+    print("\nobs gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
