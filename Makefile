@@ -8,7 +8,8 @@ PYTEST := env PYTHONPATH=src timeout
 SMOKE_TIMEOUT ?= 300
 TIER1_TIMEOUT ?= 900
 
-.PHONY: smoke tier1 bench strategies elastic hybrid comm kernels serve obs
+.PHONY: smoke tier1 bench strategies elastic hybrid comm kernels serve obs \
+	bench-regress
 
 # Fast subset: pure-host unit tests (collectives shim units, compression,
 # schedulers, configs, models). ~1 min.
@@ -59,16 +60,26 @@ serve:
 
 # Observability gate: a traced bsp/ring/onebit@8 run on 8 virtual
 # devices (well-formed Chrome trace, step->exchange->bucket nesting,
-# same-seed byte identity) and a traced serve episode (request
-# lifecycles, KV occupancy, stall instants); see docs/observability.md.
+# same-seed byte identity, analyzer attribution + overlap bounds), a
+# traced d2.t2.s2 pipeline run (measured vs analytic bubble fraction),
+# and a traced serve episode (request lifecycles, KV occupancy, stall
+# instants, SLO burn alert); see docs/observability.md.
 obs:
 	$(PYTEST) $(SMOKE_TIMEOUT) python tools/obs_smoke.py
 
+# Bench-lineage gate: the newest committed BENCH_pr<N>.json vs its
+# predecessors on the keyed deterministic metrics (wire bytes, seeded
+# loss bands, modeled times, virtual-clock latencies); see
+# docs/observability.md "Analysis & SLOs".
+bench-regress:
+	$(PYTEST) $(SMOKE_TIMEOUT) python tools/bench_regress.py
+
 # Full tier-1 verify (ROADMAP.md): the strategy-matrix, elasticity,
-# hybrid-mesh, comm-plane, kernel-backend, serving, and observability
-# gates plus everything in tests/, including the 8-virtual-device
-# subprocess tests and end-to-end training compositions.
-tier1: strategies elastic hybrid comm kernels serve obs
+# hybrid-mesh, comm-plane, kernel-backend, serving, observability, and
+# bench-lineage gates plus everything in tests/, including the
+# 8-virtual-device subprocess tests and end-to-end training
+# compositions.
+tier1: strategies elastic hybrid comm kernels serve obs bench-regress
 	$(PYTEST) $(TIER1_TIMEOUT) python -m pytest -q
 
 bench:

@@ -84,32 +84,50 @@ for spec in sys.argv[1:]:
     print("ROW " + json.dumps(row))
 
 # trace overhead: the same engine stepped with tracing off vs on — the
-# "zero overhead when disabled" claim, quantified (docs/observability.md)
+# "zero overhead when disabled" claim, quantified (docs/observability.md).
+# Both paths are warmed before any timing (the traced path compiles /
+# allocates on its first pass too — timing it cold produced the negative
+# -4.72% artifact in BENCH_pr8.json), then K interleaved rounds are
+# timed per mode and the best round wins: min-of-k discards scheduler
+# noise, interleaving keeps cache/allocator drift from favoring a side.
 import time
-from repro.obs.trace import tracing
+from repro.obs.trace import TraceRecorder, tracing
 strat = Strategy.parse("bsp/ring/onebit@8", lr=0.01, bucket_mb=0.25,
                        backend="device")
 engine = strat.build(grad_fn)
 st = engine.init(params)
-N = 10
-for t in range(2):                       # compile + warm the caches
-    st, _ = engine.step(st, batches, t)
-t0 = time.perf_counter()
-for t in range(2, 2 + N):
-    st, _ = engine.step(st, batches, t)
-untraced_us = (time.perf_counter() - t0) / N * 1e6
-with tracing() as recorder:
-    t0 = time.perf_counter()
-    for t in range(2 + N, 2 + 2 * N):
+t = 0
+def steps(n, st, t):
+    for _ in range(n):
         st, _ = engine.step(st, batches, t)
-    traced_us = (time.perf_counter() - t0) / N * 1e6
+        t += 1
+    return st, t
+st, t = steps(2, st, t)                  # compile + warm untraced
+with tracing():
+    st, t = steps(2, st, t)              # warm the traced path as well
+K, N = 3, 5
+best_untraced = best_traced = float("inf")
+events_per_step = 0
+for _ in range(K):
+    t0 = time.perf_counter()
+    st, t = steps(N, st, t)
+    best_untraced = min(best_untraced,
+                        (time.perf_counter() - t0) / N * 1e6)
+    recorder = TraceRecorder()
+    with tracing(recorder=recorder):
+        t0 = time.perf_counter()
+        st, t = steps(N, st, t)
+        best_traced = min(best_traced,
+                          (time.perf_counter() - t0) / N * 1e6)
+    events_per_step = len(recorder.events) // N
 print("ROW " + json.dumps({
     "bench": "data_parallel",
     "strategy": "trace_overhead/" + strat.spec(),
-    "untraced_step_us": round(untraced_us, 1),
-    "traced_step_us": round(traced_us, 1),
-    "traced_overhead_pct": round((traced_us / untraced_us - 1) * 100, 2),
-    "trace_events_per_step": len(recorder.events) // N,
+    "untraced_step_us": round(best_untraced, 1),
+    "traced_step_us": round(best_traced, 1),
+    "traced_overhead_pct": round(
+        (best_traced / best_untraced - 1) * 100, 2),
+    "trace_events_per_step": events_per_step,
 }))
 print("WIRE-ACCOUNTING-MATCHES")
 """

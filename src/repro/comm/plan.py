@@ -310,12 +310,23 @@ class CommPlan:
         if not rec.enabled:
             return
         comp = self.compressor
+        # the modeled bounds the analyzer compares issue order against:
+        # serial buckets (worst) vs TicTac-ordered overlap (best for
+        # this plan) vs the order actually executed.  Rounded so traces
+        # stay byte-stable (obs/analyze.overlap_efficiency).
+        no_overlap_s = schedule_no_overlap(self.fused, self.link)
+        tictac_s = schedule_overlap(self.fused, self.link,
+                                    tictac_order(self.fused))
+        issue_s = schedule_overlap(self.fused, self.link, self.order)
         rec.begin("exchange", pid=pid, tid=tid, cat="comm", clock=clock,
                   topology=self.topology, codec=comp.method,
                   backend=getattr(comp, "backend", "auto"),
                   wire_mode=self.wire, arch=arch,
                   n_buckets=len(self.buckets),
-                  step_tx_bytes=self.measured_step_tx_bytes(arch))
+                  step_tx_bytes=self.measured_step_tx_bytes(arch),
+                  modeled_no_overlap_us=round(no_overlap_s * 1e6, 3),
+                  modeled_tictac_overlap_us=round(tictac_s * 1e6, 3),
+                  modeled_issue_overlap_us=round(issue_s * 1e6, 3))
         for b in self.order:
             hops = self.hop_model(b, arch)
             rec.begin(f"bucket{b}", pid=pid, tid=tid, cat="comm",

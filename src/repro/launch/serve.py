@@ -57,6 +57,14 @@ def main():
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Chrome trace (request lifecycles + KV "
                          "occupancy); see docs/observability.md")
+    ap.add_argument("--report", action="store_true",
+                    help="print the trace analysis (latency summary, SLO "
+                         "burn) after the run; implies tracing even "
+                         "without --trace")
+    ap.add_argument("--slo", action="append", default=[], metavar="SPEC",
+                    help="attach an SLO objective, e.g. ttft_p99<8 "
+                         "(repeatable); burning SLOs emit slo_burn "
+                         "instants (docs/serving.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -82,18 +90,30 @@ def main():
                                             seed=args.seed + i))
             for i in range(len(arrivals))]
 
+    slo = None
+    if args.slo:
+        from repro.obs.slo import SLOMonitor
+        slo = SLOMonitor(args.slo)
     eng = ServeEngine(model, params, ServeConfig(
         slots=args.slots, max_len=max_len, page_size=args.pages,
         num_pages=args.num_pages or None, policy=args.policy, tp=args.tp,
         window_override=args.window,
-        cache_dtype=jnp.float32, compute_dtype=jnp.float32))
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32), slo=slo)
+    rec = None
     with contextlib.ExitStack() as stack:
-        if args.trace:
+        if args.trace or args.report:
             from repro.obs.trace import tracing
-            stack.enter_context(tracing(args.trace))
+            rec = stack.enter_context(tracing(args.trace))
         metrics = eng.run(reqs)
     if args.trace:
         print(f"trace written to {args.trace}")
+    if args.report and rec is not None:
+        from repro.obs.report import render
+        print(render(rec.to_chrome(), slos=args.slo))
+    if slo is not None:
+        print(f"slo alerts: {len(eng.slo_alerts)}"
+              + (f" (first at t={eng.slo_alerts[0]['t']})"
+                 if eng.slo_alerts else ""))
 
     for r in reqs[:4]:
         print(f"req {r.rid}: arrival={r.arrival:5.1f} "

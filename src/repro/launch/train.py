@@ -43,6 +43,10 @@ def main():
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Chrome trace (Perfetto-loadable) of the "
                          "run; see docs/observability.md")
+    ap.add_argument("--report", action="store_true",
+                    help="print the trace analysis (step-time "
+                         "attribution etc.) after the run; implies "
+                         "tracing even without --trace")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -78,14 +82,18 @@ def main():
                            precision=precision, compressor=comp)
     state = TrainState.create(params, opt, comp)
     t0 = time.time()
+    rec = None
     with contextlib.ExitStack() as stack:
-        if args.trace:
+        if args.trace or args.report:
             from repro.obs.trace import tracing
-            stack.enter_context(tracing(args.trace))
+            rec = stack.enter_context(tracing(args.trace))
         state, hist = train_loop(step, state, batch_fn, args.steps,
                                  log_every=max(1, args.steps // 10))
     if args.trace:
         print(f"trace written to {args.trace}")
+    if args.report and rec is not None:
+        from repro.obs.report import render
+        print(render(rec.to_chrome()))
     for rec in hist:
         print(json.dumps({k: round(v, 5) for k, v in rec.items()}))
     print(f"done in {time.time() - t0:.1f}s; "

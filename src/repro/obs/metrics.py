@@ -16,7 +16,8 @@ updating them never touches a traced value.
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Sequence, Union
+import random
+from typing import Dict, List, Optional, Sequence, Union
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -69,34 +70,68 @@ class Gauge:
 
 class Histogram:
     """Sample distribution with nearest-rank percentile summaries
-    (latencies, step times).  Keeps raw samples — these registries live
-    for one run, not for months."""
-    __slots__ = ("samples",)
-    kind = "histogram"
+    (latencies, step times), bounded memory.
 
-    def __init__(self):
+    At most ``max_samples`` raw samples are retained (default
+    ``DEFAULT_MAX_SAMPLES``).  Below the cap, percentiles are **exact**.
+    Above it, retained samples are a uniform reservoir (Vitter's
+    Algorithm R) driven by a fixed-seed PRNG, so for a given observation
+    sequence the result is **deterministic** — two same-seed runs
+    snapshot identically.  ``count`` / ``sum`` / ``min`` / ``max`` /
+    ``mean`` stay exact regardless of the cap."""
+    __slots__ = ("samples", "max_samples", "_n", "_sum", "_min", "_max",
+                 "_rng")
+    kind = "histogram"
+    DEFAULT_MAX_SAMPLES = 4096
+
+    def __init__(self, max_samples: Optional[int] = None):
+        cap = (self.DEFAULT_MAX_SAMPLES if max_samples is None
+               else int(max_samples))
+        if cap < 1:
+            raise ValueError(f"max_samples must be >= 1, got {cap}")
         self.samples: List[float] = []
+        self.max_samples = cap
+        self._n = 0
+        self._sum = 0.0
+        self._min = float("inf")
+        self._max = float("-inf")
+        self._rng = random.Random(0)
 
     def observe(self, v: float) -> None:
-        self.samples.append(float(v))
+        v = float(v)
+        self._n += 1
+        self._sum += v
+        if v < self._min:
+            self._min = v
+        if v > self._max:
+            self._max = v
+        if len(self.samples) < self.max_samples:
+            self.samples.append(v)
+        else:
+            # Algorithm R: keep each of the n samples with prob cap/n
+            j = self._rng.randrange(self._n)
+            if j < self.max_samples:
+                self.samples[j] = v
 
     @property
     def count(self) -> int:
-        return len(self.samples)
+        return self._n
 
     @property
     def sum(self) -> float:
-        return sum(self.samples)
+        return self._sum
 
     def percentile(self, q: float) -> float:
         return percentile(self.samples, q)
 
     def snapshot(self, qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
         out: Dict[str, float] = {"count": float(self.count)}
-        if self.samples:
-            out.update(sum=self.sum, min=min(self.samples),
-                       max=max(self.samples),
-                       mean=self.sum / self.count)
+        if self._n:
+            out.update(sum=self._sum, min=self._min, max=self._max,
+                       mean=self._sum / self._n)
+        if self._n > len(self.samples):
+            # percentiles below are over the reservoir, not every sample
+            out["retained"] = float(len(self.samples))
         for q in qs:
             out[f"p{q:g}"] = self.percentile(q)
         return out
@@ -127,7 +162,15 @@ class MetricsRegistry:
     def gauge(self, name: str) -> Gauge:
         return self._get(name, "gauge")
 
-    def histogram(self, name: str) -> Histogram:
+    def histogram(self, name: str,
+                  max_samples: Optional[int] = None) -> Histogram:
+        """``max_samples`` bounds the retained reservoir and only takes
+        effect when the histogram is first created."""
+        h = self._metrics.get(name)
+        if h is None and max_samples is not None:
+            h = Histogram(max_samples)
+            self._metrics[name] = h
+            return h
         return self._get(name, "histogram")
 
     def __contains__(self, name: str) -> bool:

@@ -270,15 +270,26 @@ def canonical_bytes(trace: dict) -> bytes:
     return json.dumps(trace, sort_keys=True, separators=(",", ":")).encode()
 
 
-def validate_trace(trace: dict) -> Dict[str, Any]:
+def validate_trace(trace: dict, strict: bool = True) -> Dict[str, Any]:
     """Structural validation of a Chrome trace-event object: ``ts`` is
     globally non-decreasing and every ``E`` matches the innermost open
-    ``B`` on its (pid, tid) track.  Raises ``ValueError`` on violation;
-    returns summary stats (span/instant/counter counts, max nesting
-    depth, span names)."""
+    ``B`` on its (pid, tid) track.  With ``strict`` (the default) the
+    first violation raises ``ValueError``; with ``strict=False`` every
+    violation is collected into the returned ``errors`` list instead —
+    analysis of a damaged trace should report, not crash.  Returns
+    summary stats (span/instant/counter counts, max nesting depth, span
+    names, errors)."""
+    errors: List[str] = []
+
+    def fail(msg: str) -> None:
+        if strict:
+            raise ValueError(msg)
+        errors.append(msg)
+
     events = trace.get("traceEvents")
     if not isinstance(events, list):
-        raise ValueError("not a Chrome trace: missing traceEvents list")
+        fail("not a Chrome trace: missing traceEvents list")
+        events = []
     stacks: Dict[Tuple[Any, Any], List[str]] = {}
     last_ts = None
     spans = instants = counters = 0
@@ -289,35 +300,40 @@ def validate_trace(trace: dict) -> Dict[str, Any]:
         if ph == "M":
             continue
         ts = ev.get("ts")
-        if last_ts is not None and ts < last_ts:
-            raise ValueError(f"ts went backwards: {ts} < {last_ts}")
-        last_ts = ts
+        if ts is None:
+            fail(f"event missing ts: {ev}")
+        elif last_ts is not None and ts < last_ts:
+            fail(f"ts went backwards: {ts} < {last_ts}")
+        if ts is not None:
+            last_ts = ts
         key = (ev.get("pid"), ev.get("tid"))
         if ph == "B":
-            stacks.setdefault(key, []).append(ev["name"])
-            names.add(ev["name"])
+            stacks.setdefault(key, []).append(ev.get("name"))
+            names.add(ev.get("name"))
             max_depth = max(max_depth, len(stacks[key]))
         elif ph == "E":
             stack = stacks.get(key, [])
             if not stack:
-                raise ValueError(f"E without B on track {key}: {ev}")
-            if stack.pop() != ev["name"]:
-                raise ValueError(f"E name mismatch on track {key}: {ev}")
+                fail(f"E without B on track {key}: {ev}")
+                continue
+            if stack.pop() != ev.get("name"):
+                fail(f"E name mismatch on track {key}: {ev}")
             spans += 1
         elif ph == "i":
             instants += 1
-            names.add(ev["name"])
+            names.add(ev.get("name"))
         elif ph == "C":
             counters += 1
-            names.add(ev["name"])
+            names.add(ev.get("name"))
         else:
-            raise ValueError(f"unknown phase {ph!r}: {ev}")
+            fail(f"unknown phase {ph!r}: {ev}")
     unclosed = {k: v for k, v in stacks.items() if v}
     if unclosed:
-        raise ValueError(f"unclosed spans: {unclosed}")
+        fail(f"unclosed spans: {unclosed}")
     return dict(events=len(events), spans=spans, instants=instants,
                 counters=counters, max_depth=max_depth,
-                names=sorted(names))
+                names=sorted(n for n in names if n is not None),
+                errors=errors)
 
 
 def find_spans(trace: dict, name: str) -> List[dict]:

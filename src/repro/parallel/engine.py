@@ -49,7 +49,8 @@ from repro.comm.transport import (compressed_allreduce,
 from repro.core.collectives import shard_map
 from repro.core.compression import Compressor, EF_METHODS
 from repro.core.parameter_server import shard_of_flat
-from repro.core.pipeline import gpipe_forward, gpipe_ticks
+from repro.core.pipeline import bubble_fraction, gpipe_forward, gpipe_ticks
+from repro.obs.trace import get_recorder
 from repro.core.sync import default_periods
 from repro.launch.mesh import make_hybrid_mesh
 from repro.parallel.mesh_plan import AXES, MeshPlan, MeshSpec, plan_mesh
@@ -64,6 +65,35 @@ from repro.train.data_parallel import _scatter_flat, async_replay_step
 DATA, TENSOR, STAGE = AXES
 
 ASYNC_SYNCS = ("ssp", "asp")
+
+
+def emit_pipeline_trace(rec, stages: int, micro: int, *,
+                        pid: str = "pipeline", clock=None) -> None:
+    """The GPipe schedule this step executed, as trace spans on the
+    deterministic tick clock (docs/observability.md): a ``pipe`` parent
+    span on ``pipeline/schedule`` carrying the analytic bubble fraction,
+    and per-stage tracks ``stage<s>`` with one span per schedule tick —
+    ``mb<k>`` while stage s processes micro-batch k = tick - s, and
+    ``bubble`` for the fill/drain ticks where it sits idle.  The fused
+    jitted step cannot be split at runtime, so like the CommPlan
+    exchange spans this is the plan's own deterministic model of what
+    executed; ``obs.analyze.pipeline_accounting`` measures the bubble
+    fraction back off these spans."""
+    if not rec.enabled:
+        return
+    ticks = gpipe_ticks(stages, micro)
+    rec.begin("pipe", pid=pid, tid="schedule", cat="pipeline", clock=clock,
+              stages=stages, micro=micro, ticks=ticks,
+              analytic_bubble=round(bubble_fraction(stages, micro), 6))
+    for s in range(stages):
+        tid = f"stage{s}"
+        for k in range(ticks):
+            mb = k - s
+            name = f"mb{mb}" if 0 <= mb < micro else "bubble"
+            rec.begin(name, pid=pid, tid=tid, cat="pipeline",
+                      clock=("pipe_tick", k), stage=s)
+            rec.end(pid=pid, tid=tid)
+    rec.end(pid=pid, tid="schedule")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +173,7 @@ class HybridEngine:
         self._act_cell: List[int] = []
         self._dev_event_bytes: Optional[int] = None
         self._measured_tx: Optional[int] = None
+        self._trace_plan: Optional[CommPlan] = None
         self._wire_total = 0
         self._leaf_meta = None           # (treedef, [(local_shape, dtype)])
         # same replicated apply as the flat engines (async data axis)
@@ -596,9 +627,30 @@ class HybridEngine:
                     f"{self.plan.micro} micro-batches")
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
         st["rng"], sub = jax.random.split(st["rng"])
-        params, opt, ef, losses, sent = self._step_fn(
-            st["params"], st["opt"], st["ef"], batch, sub)
+        rec = get_recorder()
+        if rec.enabled:
+            with rec.span("compute", pid="train", tid="loop", cat="train",
+                          clock=("train_step", t), mesh=cfg.mesh.spec(),
+                          zero=cfg.zero, fused=True):
+                params, opt, ef, losses, sent = self._step_fn(
+                    st["params"], st["opt"], st["ef"], batch, sub)
+                jax.block_until_ready(losses)
+        else:
+            params, opt, ef, losses, sent = self._step_fn(
+                st["params"], st["opt"], st["ef"], batch, sub)
         st.update(params=params, opt=opt, ef=ef)
+        if rec.enabled:
+            if D > 1 and cfg.zero == 0:
+                # z0 runs the CommPlan schedule on the data axis; z1-3
+                # exchange through the ZeRO shard path instead, which the
+                # per-step byte accounting (not bucket spans) covers
+                if self._trace_plan is None:
+                    self._trace_plan = self._comm_plan()
+                self._trace_plan.emit_trace(rec, arch="allreduce",
+                                            clock=("train_step", t))
+            if self.staged and cfg.mesh.stage > 1:
+                emit_pipeline_trace(rec, cfg.mesh.stage, self.plan.micro,
+                                    clock=("train_step", t))
         if cfg.wire == "measured":
             # per bucket from the plan, every step: static plane bytes of
             # the data-axis schedule on every device + dgc's traced
@@ -607,6 +659,9 @@ class HybridEngine:
                 + SPARSE_ELEM_BYTES * int(np.sum(np.asarray(sent)))
         else:
             st["wire"] += self._modeled_event_bytes() * cfg.mesh.size
+        if rec.enabled:
+            rec.counter("wire_bytes", {"cumulative": int(st["wire"])},
+                        pid="train", cat="comm", clock=("train_step", t))
         ev = dict(step=t, loss=float(np.mean(np.asarray(losses))),
                   max_staleness=0)
         return st, [ev]
@@ -934,6 +989,7 @@ class HybridEngine:
         self._step_fn, self._async_fns, self._sma_fn = None, None, None
         self._act_cell = []
         self._dev_event_bytes, self._measured_tx = None, None
+        self._trace_plan = None
         return st
 
     def export_state(self, st) -> Tuple[Dict[str, Any], Dict[str, Any]]:
@@ -973,7 +1029,15 @@ class HybridEngine:
     def run(self, params, batches: Callable[[int, int], Any], steps: int):
         st = self.init(params)
         hist: List[dict] = []
+        rec = get_recorder()
         for t in range(steps):
-            st, ev = self.step(st, batches, t)
+            # same step spans train_loop emits for the flat engines, so
+            # hybrid traces feed obs.analyze.step_attribution too
+            if rec.enabled:
+                with rec.span("step", pid="train", tid="loop", cat="train",
+                              clock=("train_step", t), step=t):
+                    st, ev = self.step(st, batches, t)
+            else:
+                st, ev = self.step(st, batches, t)
             hist.extend(ev)
         return self.finalize(st), hist, st["wire"]

@@ -98,10 +98,17 @@ class Autoscaler:
         self.jid = jid
         self.estimator = RateEstimator(window)
 
-    def schedule(self, arrivals: Sequence[float],
-                 horizon: float) -> List[ScaleDecision]:
+    def schedule(self, arrivals: Sequence[float], horizon: float,
+                 burn_times: Optional[Sequence[float]] = None
+                 ) -> List[ScaleDecision]:
+        """``burn_times`` (optional) are SLO alert instants from a
+        monitored serve engine (``ServeEngine.slo_alerts``): a decision
+        interval containing a burn forces at least a one-replica
+        scale-up and resets the scale-down hysteresis — a burning SLO
+        outranks the arrival-rate signal (obs/slo.py)."""
         pol = self.policy
         arrivals = sorted(arrivals)
+        burns = sorted(burn_times) if burn_times else []
         decisions: List[ScaleDecision] = []
         cur = pol.min_replicas
         below = 0
@@ -115,9 +122,12 @@ class Autoscaler:
                 i += 1
             rate = self.estimator.rate(now)
             want = pol.desired(rate)
+            burning = any(now - pol.interval < b <= now for b in burns)
+            if burning:
+                want = max(want, min(pol.max_replicas, cur + 1))
             if want > cur:
                 cur, below = want, 0          # scale up immediately
-            elif want < cur:
+            elif want < cur and not burning:
                 below += 1                    # hysteresis on the way down
                 if below >= pol.scale_down_patience:
                     cur, below = want, 0
@@ -126,12 +136,13 @@ class Autoscaler:
             if cur != decisions[-1].replicas:
                 rec = get_recorder()
                 if rec.enabled:
+                    extra = {"reason": "slo_burn"} if burning else {}
                     rec.instant("autoscale_decision", pid="serve",
                                 tid="autoscale", cat="serve",
                                 clock=("sched_time", now), jid=self.jid,
                                 rate=round(rate, 6),
                                 from_replicas=decisions[-1].replicas,
-                                to_replicas=cur)
+                                to_replicas=cur, **extra)
                 decisions.append(ScaleDecision(now, rate, cur))
         return decisions
 
@@ -151,11 +162,12 @@ class Autoscaler:
         return ev
 
     def plan(self, arrivals: Sequence[float], horizon: float,
-             steps_per_sec: float = 1.0) -> Tuple[EventPlan,
-                                                  List[ScaleDecision]]:
+             steps_per_sec: float = 1.0,
+             burn_times: Optional[Sequence[float]] = None
+             ) -> Tuple[EventPlan, List[ScaleDecision]]:
         """arrival trace -> elastic EventPlan (resize events on the
         deployment's own step clock), via the shared sched plumbing."""
-        decisions = self.schedule(arrivals, horizon)
+        decisions = self.schedule(arrivals, horizon, burn_times=burn_times)
         trace = self.to_trace(decisions)
         # the deployment's allocation stream rides the shared sched
         # timeline, next to any co-scheduled training tenants

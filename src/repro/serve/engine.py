@@ -70,10 +70,19 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, model, params, scfg: ServeConfig):
+    """``slo`` optionally attaches an ``obs.slo.SLOMonitor``: the engine
+    feeds it TTFT/TPOT on every completion and a stall sample every
+    iteration, emits an ``slo_burn`` instant on each transition into
+    firing, and records the alert times in ``slo_alerts`` — the signal
+    ``Autoscaler.schedule(..., burn_times=...)`` consumes."""
+
+    def __init__(self, model, params, scfg: ServeConfig, slo=None):
         if model.forward is None:
             raise ValueError("ServeEngine serves decoder-only models")
         self.model, self.params, self.scfg = model, params, scfg
+        self.slo = slo
+        self.slo_alerts: List[dict] = []
+        self._slo_firing = False
         self.cfg = model.cfg
         self.vocab = self.cfg.vocab_size
 
@@ -163,6 +172,9 @@ class ServeEngine:
         r.state = RequestState.DONE
         r.finish_time = self.clock
         self.batcher.release(r)
+        if self.slo is not None:
+            self.slo.observe("ttft", self.clock, r.first_token_latency())
+            self.slo.observe("tpot", self.clock, r.per_token_latency())
         rec = get_recorder()
         if rec.enabled and r.rid in self._traced_rids:
             rec.end(pid="serve", tid=f"req{r.rid}",      # closes "decode"
@@ -304,7 +316,31 @@ class ServeEngine:
             progressed = True
         if rec.enabled:
             self._emit_occupancy(rec)
+        if self.slo is not None:
+            self.slo.observe("stall", self.clock,
+                             1.0 if self.batcher.stalls > stalls0 else 0.0)
+            self._slo_tick(rec)
         return progressed
+
+    def _slo_tick(self, rec) -> None:
+        """Evaluate the attached monitor at the current clock; on a
+        transition into firing, record the alert and emit an
+        ``slo_burn`` instant on the serve timeline."""
+        firing = self.slo.firing(self.clock)
+        if firing and not self._slo_firing:
+            self.slo_alerts.append(dict(
+                t=self.clock,
+                objectives=[f["objective"] for f in firing]))
+            if rec.enabled:
+                rec.instant(
+                    "slo_burn", pid="serve", tid="slo", cat="serve",
+                    clock=("serve_iter", self.clock),
+                    objectives=",".join(f["objective"] for f in firing),
+                    burn_long=round(max(f["burn_long"] for f in firing),
+                                    4),
+                    burn_short=round(max(f["burn_short"] for f in firing),
+                                     4))
+        self._slo_firing = bool(firing)
 
     def run(self, requests: Optional[Sequence[Request]] = None) -> dict:
         """Drive every submitted request to DONE; returns the metrics row
@@ -337,4 +373,6 @@ class ServeEngine:
             admission_stalls=self.batcher.stalls,
             wall_s=wall,
         )
+        if self.slo is not None:
+            m["slo_alerts"] = len(self.slo_alerts)
         return m

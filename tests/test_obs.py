@@ -261,3 +261,121 @@ def test_set_recorder_restores_null():
     finally:
         set_recorder(prev)
     assert isinstance(get_recorder(), NullRecorder)
+
+
+# ------------------------------------------------- validation edge cases
+def test_validate_trace_counter_only():
+    """A trace holding only counter samples is structurally valid."""
+    rec = TraceRecorder()
+    for t in range(3):
+        rec.counter("wire_bytes", {"cumulative": 10.0 * t}, pid="train",
+                    clock=("train_step", t))
+    stats = validate_trace(rec.to_chrome())
+    assert stats["spans"] == 0 and stats["instants"] == 0
+    assert stats["counters"] == 3
+    assert stats["max_depth"] == 0
+    assert stats["errors"] == []
+    assert stats["names"] == ["wire_bytes"]
+
+
+def test_validate_trace_lax_reports_not_raises():
+    """strict=False collects structural problems into errors; strict=True
+    raises on the first one.  Both see the same damage."""
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 0, "pid": 1, "tid": 1, "args": {}},
+        {"name": "a", "ph": "E", "ts": 5, "pid": 1, "tid": 1, "args": {}},
+        # ts regression
+        {"name": "x", "ph": "i", "ts": 2, "pid": 1, "tid": 1, "args": {}},
+        # E without any open B on its track
+        {"name": "z", "ph": "E", "ts": 6, "pid": 1, "tid": 2, "args": {}},
+        # never closed
+        {"name": "open", "ph": "B", "ts": 7, "pid": 1, "tid": 1,
+         "args": {}},
+    ]}
+    with pytest.raises(ValueError):
+        validate_trace(bad)
+    stats = validate_trace(bad, strict=False)
+    assert len(stats["errors"]) == 3
+    assert any("backwards" in e for e in stats["errors"])
+    assert any("E without B" in e for e in stats["errors"])
+    assert any("unclosed" in e for e in stats["errors"])
+    # counting still completed despite the damage
+    assert stats["spans"] == 1 and stats["instants"] == 1
+
+
+def test_validate_trace_not_a_trace():
+    with pytest.raises(ValueError):
+        validate_trace({"events": []})
+    stats = validate_trace({"events": []}, strict=False)
+    assert stats["errors"] and stats["events"] == 0
+
+
+def test_trace_save_load_byte_roundtrip(tmp_path):
+    """save -> load_trace -> canonical_bytes reproduces the exact bytes,
+    and stripping wall from a loaded wall-ful trace matches the direct
+    include_wall=False serialization."""
+    from repro.obs.trace import load_trace
+    rec = TraceRecorder()
+    with rec.span("step", pid="train", tid="loop",
+                  clock=("train_step", 0)):
+        rec.instant("mark", pid="train", tid="loop")
+    p = tmp_path / "t.json"
+    rec.save(str(p), include_wall=False)
+    loaded = load_trace(str(p))
+    assert canonical_bytes(loaded) == rec.to_bytes(include_wall=False)
+    # wall-crossing round trip: strip after reload, same bytes again
+    p2 = tmp_path / "t_wall.json"
+    rec.save(str(p2), include_wall=True)
+    assert (canonical_bytes(strip_wall(load_trace(str(p2)))) ==
+            rec.to_bytes(include_wall=False))
+
+
+# ----------------------------------------------------- bounded histogram
+def test_histogram_exact_below_cap():
+    from repro.obs.metrics import Histogram
+    h = Histogram(max_samples=10)
+    for v in [5.0, 1.0, 3.0]:
+        h.observe(v)
+    assert h.count == 3 and h.sum == 9.0
+    assert h.percentile(50) == 3.0            # exact: all samples held
+    snap = h.snapshot()
+    assert "retained" not in snap             # nothing was dropped
+    assert snap["min"] == 1.0 and snap["max"] == 5.0
+
+
+def test_histogram_bounded_above_cap():
+    from repro.obs.metrics import Histogram
+    h = Histogram(max_samples=8)
+    for v in range(100):
+        h.observe(float(v))
+    assert len(h.samples) == 8                # memory stays bounded
+    assert h.count == 100                     # aggregates stay exact
+    assert h.sum == float(sum(range(100)))
+    snap = h.snapshot()
+    assert snap["min"] == 0.0 and snap["max"] == 99.0
+    assert snap["mean"] == pytest.approx(49.5)
+    assert snap["retained"] == 8.0
+    assert all(s in [float(v) for v in range(100)] for s in h.samples)
+
+
+def test_histogram_reservoir_deterministic():
+    from repro.obs.metrics import Histogram
+
+    def fill():
+        h = Histogram(max_samples=16)
+        for v in range(500):
+            h.observe(float(v * 7 % 101))
+        return h
+    a, b = fill(), fill()
+    assert a.samples == b.samples             # fixed-seed PRNG
+    assert a.snapshot() == b.snapshot()
+
+
+def test_histogram_cap_validation_and_registry():
+    from repro.obs.metrics import Histogram
+    with pytest.raises(ValueError):
+        Histogram(max_samples=0)
+    m = MetricsRegistry()
+    h = m.histogram("lat", max_samples=4)
+    assert h.max_samples == 4
+    assert m.histogram("lat") is h            # get-or-create keeps the cap

@@ -1,0 +1,49 @@
+"""`make bench-regress` tier-1 gate: the cross-PR benchmark lineage.
+
+Diffs the newest committed ``BENCH_pr<N>.json`` snapshot (or a fresh
+rows file via ``--current``) against the older snapshots on the keyed
+deterministic metrics in ``repro.obs.regress.METRIC_BANDS`` — wire
+bytes, seeded loss bands, modeled step times, virtual-clock serve
+latencies — and fails loudly on out-of-band drift, so the per-PR bench
+snapshots ROADMAP mandates are read on every tier-1 run instead of
+being write-only.
+
+  PYTHONPATH=src python tools/bench_regress.py
+  PYTHONPATH=src python tools/bench_regress.py --current fresh.json
+  PYTHONPATH=src python tools/bench_regress.py --json
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs.regress import format_report, run_gate  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Cross-PR BENCH_pr<N>.json regression gate "
+                    "(docs/observability.md).")
+    ap.add_argument("--root", default=REPO,
+                    help="directory holding BENCH_pr<N>.json snapshots")
+    ap.add_argument("--current", default=None, metavar="ROWS.json",
+                    help="compare this fresh rows file against the full "
+                         "lineage instead of the newest snapshot")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the raw report dict as JSON")
+    args = ap.parse_args()
+    report = run_gate(args.root, current_path=args.current)
+    if args.json:
+        print(json.dumps(report, sort_keys=True))
+    else:
+        print(format_report(report))
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """`make obs` tier-1 gate: the observability plane end to end.
 
-Three checks (see docs/observability.md):
+Checks (see docs/observability.md):
 
   train trace    a traced ``bsp/ring/onebit@8`` run on 8 virtual devices
                  produces well-formed Chrome trace JSON with the
@@ -9,10 +9,20 @@ Three checks (see docs/observability.md):
   determinism    two same-seed traced runs are byte-identical after
                  ``strip_wall`` (the virtual-tick clock is a pure
                  function of host event order)
+  attribution    the analyzer attributes >=95% of every step window to
+                 {compute, comm, snapshot, stall} with the majority
+                 explained by instrumented spans, and the exchange's
+                 issue-order overlap lies between the modeled
+                 no-overlap and TicTac bounds
+  pipeline       a traced d2.t2.s2 hybrid run reports a measured GPipe
+                 bubble fraction within 10% relative of the analytic
+                 (s-1)/(m+s-1)
   serve trace    a traced serve episode over an undersized page pool
                  records the queued -> prefill -> decode lifecycle span
                  chain per request, the ``kv_pages`` occupancy counter
-                 track, and at least one ``admission_stall`` instant
+                 track, at least one ``admission_stall`` instant, and —
+                 with a tight SLO monitor attached — an ``slo_burn``
+                 alert
 
   PYTHONPATH=src python tools/obs_smoke.py
 """
@@ -31,6 +41,8 @@ import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
 
+from repro.obs.analyze import (overlap_efficiency,          # noqa: E402
+                               pipeline_accounting, step_attribution)
 from repro.obs.trace import (canonical_bytes, find_spans,   # noqa: E402
                              strip_wall, tracing, validate_trace)
 from repro.train import Strategy                            # noqa: E402
@@ -63,9 +75,29 @@ def traced_train() -> dict:
     return rec.to_chrome()
 
 
+def traced_pipeline() -> dict:
+    """A d2.t2.s2 staged run — the pipeline-schedule spans feed the
+    analyzer's bubble accounting."""
+    from repro.parallel import make_tiny_transformer
+    params, model = make_tiny_transformer(2, 8, 16, seed=0)
+    strat = Strategy.parse("bsp/ring/none@8:d2.t2.s2", lr=0.05,
+                           bucket_mb=1e-4, backend="device")
+    engine = strat.build(model)
+
+    def batch(t, w):
+        k = jax.random.fold_in(KEY, 7919 * t + w)
+        x = jax.random.normal(k, (4, 8))
+        return {"x": x, "y": x @ jax.random.normal(KEY, (8, 8))}
+
+    with tracing() as rec:
+        engine.run(params, batch, 2)
+    return rec.to_chrome()
+
+
 def traced_serve() -> dict:
     from repro.configs import get_config
     from repro.models import build_model
+    from repro.obs.slo import SLOMonitor
     from repro.serve.engine import ServeConfig, ServeEngine
     from repro.serve.request import Request
     cfg = get_config("tinyllama-1.1b").reduced()
@@ -75,13 +107,18 @@ def traced_serve() -> dict:
     prompts = rng.randint(1, cfg.vocab_size, size=(4, 5))
     reqs = [Request(rid=i, prompt=[int(t) for t in prompts[i]],
                     max_new_tokens=6) for i in range(4)]
-    # num_pages=6 is under the 4-request working set -> admission stalls
+    # num_pages=6 is under the 4-request working set -> admission stalls;
+    # the stalled requests' TTFT blows the (deliberately tight) SLO, so
+    # the attached monitor must fire at least once
+    slo = SLOMonitor(["ttft_p99<2"], long_window=16.0, short_window=4.0,
+                     factor=1.0)
     eng = ServeEngine(model, params, ServeConfig(
         slots=4, max_len=16, page_size=4, num_pages=6,
-        cache_dtype=jnp.float32, compute_dtype=jnp.float32))
+        cache_dtype=jnp.float32, compute_dtype=jnp.float32), slo=slo)
     with tracing() as rec:
         m = eng.run(reqs)
     assert m["admission_stalls"] > 0, "pool was not exhausted"
+    assert m["slo_alerts"] > 0, "tight SLO never fired"
     return rec.to_chrome()
 
 
@@ -115,13 +152,46 @@ def main() -> int:
     if not ok:
         failures.append("determinism")
 
+    # ------------------------------------------------------ attribution
+    try:
+        attr = step_attribution(tr)
+        assert attr is not None, "no step spans to attribute"
+        assert attr["basis"] == "wall", attr["basis"]
+        assert attr["attributed_pct_min"] >= 95.0, attr
+        assert attr["attributed_pct_max"] <= 105.0, attr
+        # the instrumented spans, not the residual, explain the steps
+        assert attr["known_pct_mean"] >= 50.0, attr["known_pct_mean"]
+        ov = overlap_efficiency(tr)
+        assert ov is not None, "exchange spans carry no modeled bounds"
+        assert ov["all_in_bounds"], ov
+        assert 0.0 <= ov["efficiency_mean"] <= 1.0, ov
+        ok = True
+    except (AssertionError, ValueError) as e:
+        ok = False
+        failures.append(f"attribution: {e}")
+    print(f"{'analyzer: attribution sums + overlap bounds':48s} "
+          f"{'OK' if ok else 'FAIL'}")
+
+    # --------------------------------------------------------- pipeline
+    try:
+        pp = pipeline_accounting(traced_pipeline())
+        assert pp is not None, "no pipeline spans"
+        assert pp["pipes"], pp
+        assert pp["rel_err_max"] <= 0.10, pp
+        ok = True
+    except (AssertionError, ValueError) as e:
+        ok = False
+        failures.append(f"pipeline: {e}")
+    print(f"{'analyzer: measured bubble matches analytic':48s} "
+          f"{'OK' if ok else 'FAIL'}")
+
     # ------------------------------------------------------ serve trace
     sv = traced_serve()
     try:
         stats = validate_trace(sv)
         names = set(stats["names"])
         need = {"queued", "prefill", "decode", "kv_pages",
-                "admission_stall"}
+                "admission_stall", "slo_burn"}
         assert need <= names, f"missing events: {need - names}"
         assert len(find_spans(sv, "queued")) == 4, "lifecycle per request"
         assert len(find_spans(sv, "decode")) == 4, "decode span per request"
@@ -129,7 +199,7 @@ def main() -> int:
     except (AssertionError, ValueError) as e:
         ok = False
         failures.append(f"serve: {e}")
-    print(f"{'serve trace: lifecycles + kv pool + stalls':48s} "
+    print(f"{'serve trace: lifecycles + kv pool + slo burn':48s} "
           f"{'OK' if ok else 'FAIL'}")
 
     if failures:
