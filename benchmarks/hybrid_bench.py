@@ -1,13 +1,21 @@
-"""Hybrid-parallel benchmark: mesh × ZeRO cells (§3.2 / docs/hybrid.md).
+"""Hybrid-parallel benchmark: mesh × ZeRO × schedule × precision cells
+(§3.2 / docs/hybrid.md).
 
-One JSON row per mesh cell on 8 virtual host devices, tracking the three
+One JSON row per mesh cell on 8 virtual host devices, tracking the
 quantities the hybrid subsystem trades against each other:
 
-  * measured step wall time (post-compile),
+  * measured step wall time (post-compile).  NOTE: virtual host devices
+    time-share one CPU, so the pipeline-schedule win does NOT appear
+    here — every "parallel" stage serializes onto the same core;
+  * the modeled per-device critical path (``modeled_stage_units``:
+    schedule ticks × per-tick stage work) and analytic bubble, where the
+    1F1B rows must beat their GPipe twin, asserted;
   * wire accounting: the data-axis exchange plus the modeled ring-
     schedule bytes and the pipeline/tensor activation traffic,
   * measured per-device persistent state bytes (params + optimizer) —
-    the ZeRO rows must show ~the data-axis-factor reduction, asserted.
+    the ZeRO rows must show ~the data-axis-factor reduction, and the
+    quantized-moment (qmom) AdamW row ~half the fp32 moment bytes,
+    both asserted.
 
   PYTHONPATH=src python -m benchmarks.hybrid_bench                 # default matrix
   PYTHONPATH=src python -m benchmarks.hybrid_bench bsp/ring/none@8:d2.t2.s2 ...
@@ -32,11 +40,19 @@ DEFAULT_SPECS = [
     "bsp/ps/none@8:d8.z2.adamw",
     "bsp/ps/none@8:d8.z3.adamw",
     "bsp/ps/none@8:d2.t2.s2.z3.adamw",
+    # schedule × precision plane: gpipe twin first — the 1f1b rows
+    # assert their modeled critical path against it
+    "bsp/ring/none@8:d2.t2.s2.m8",
+    "bsp/ring/none@8:d2.t2.s2.m8.1f1b",
+    "bsp/ring/none@8:d2.t2.s2.m8.1f1b.bf16",
+    "bsp/ps/none@8:d8.z2.qmom.adamw",
 ]
 
 _CHILD = r"""
 import json, sys, time
 import jax, jax.numpy as jnp, numpy as np
+from repro.core.pipeline import (bubble_fraction, gpipe_ticks,
+                                 onefb_bubble_fraction, onefb_ticks)
 from repro.parallel import make_tiny_transformer
 from repro.train import Strategy
 
@@ -51,6 +67,8 @@ def make_batch(t, w):
 
 STEPS = 3
 baseline_bytes = {}
+stage_units = {}     # (mesh, micro) -> gpipe modeled critical path
+opt_bytes = {}       # (zero, optimizer, mesh) -> fp32-moment opt bytes
 for spec in sys.argv[1:]:
     strat = Strategy.parse(spec, lr=0.01, bucket_mb=1e-3, backend="device")
     engine = strat.build(model)
@@ -88,6 +106,52 @@ for spec in sys.argv[1:]:
         "state_opt_bytes_per_dev": state["opt"],
         "loss_last": round(hist[-1]["loss"], 4),
     }
+    # schedule/precision/moments dimensions ride only on non-default rows
+    # so every pre-existing row keeps its exact lineage key
+    if strat.micro_batches:
+        row["micro"] = strat.micro_batches
+    if strat.schedule != "gpipe":
+        row["schedule"] = strat.schedule
+        row["interleave"] = int(mets.get("interleave", 1))
+    if strat.precision != "fp32":
+        row["precision"] = strat.precision
+    if strat.moments != "float32":
+        row["moments"] = strat.moments
+    if mesh.stage > 1:
+        micro = engine.inner.plan.micro
+        if strat.schedule == "1f1b":
+            v = int(mets.get("interleave", 1))
+            ticks = onefb_ticks(mesh.stage, micro, v)
+            units = ticks / v          # each tick does 1/v of a stage
+            row["analytic_bubble"] = round(
+                onefb_bubble_fraction(mesh.stage, micro, v), 4)
+        else:
+            ticks = units = gpipe_ticks(mesh.stage, micro)
+            row["analytic_bubble"] = round(
+                bubble_fraction(mesh.stage, micro), 4)
+        row["modeled_step_ticks"] = ticks
+        row["modeled_stage_units"] = round(units, 2)
+        sched_key = (mesh.spec(), micro, strat.precision)
+        if strat.schedule == "gpipe":
+            stage_units[sched_key] = (units, row["analytic_bubble"])
+        elif sched_key in stage_units or (mesh.spec(), micro, "fp32") \
+                in stage_units:
+            gu, gb = stage_units.get(
+                sched_key, stage_units.get((mesh.spec(), micro, "fp32")))
+            # the 1F1B acceptance: a strictly shorter modeled critical
+            # path AND a strictly smaller analytic bubble than GPipe on
+            # the same mesh at the same micro count
+            assert units < gu and row["analytic_bubble"] < gb, \
+                (row, gu, gb)
+            row["modeled_speedup_vs_gpipe"] = round(gu / units, 3)
+    okey = (strat.zero, strat.optimizer, mesh.spec())
+    if strat.moments == "float32":
+        opt_bytes.setdefault(okey, state["opt"])
+    elif okey in opt_bytes:
+        cut = opt_bytes[okey] / state["opt"]
+        # the qmom acceptance: ~2x fewer persistent moment bytes
+        assert 1.8 <= cut <= 2.2, (row, opt_bytes[okey])
+        row["moment_bytes_cut"] = round(cut, 2)
     base = baseline_bytes.get(key)
     if strat.zero == 3 and base:
         row["state_reduction_vs_z0"] = round(base / state["total"], 2)
@@ -100,9 +164,10 @@ print("HYBRID-BENCH-OK")
 
 def main(specs=None):
     specs = specs or DEFAULT_SPECS
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(repo, "src"))
+    from repro.launch.env import subprocess_env
+    env = subprocess_env(8)
     env["PYTHONPATH"] = os.path.join(repo, "src")
     res = subprocess.run([sys.executable, "-c", _CHILD] + list(specs),
                          env=env, capture_output=True, text=True,

@@ -122,6 +122,11 @@ class CommPlan:
     treedef: Any
     leaf_shapes: List[Tuple[Tuple[int, ...], Any]]
     link: LinkModel = LinkModel()
+    # dtype gradients travel in on the UNCOMPRESSED exchange: "bfloat16"
+    # halves the wire words of the exact schedules (codec payloads are
+    # already quantized planes and are unaffected; parameter all-gathers
+    # always travel exact fp32)
+    reduce_dtype: str = "float32"
 
     @classmethod
     def plan(cls, params_example, *, axis: str, n: int,
@@ -129,7 +134,8 @@ class CommPlan:
              compressor: Compressor = Compressor("none"),
              wire: str = "modeled", bucket_mb: float = 4.0,
              order: str = "tictac", back_s_per_byte: float = 2e-12,
-             seed: int = 0, link: LinkModel = LinkModel()) -> "CommPlan":
+             seed: int = 0, link: LinkModel = LinkModel(),
+             reduce_dtype: str = "float32") -> "CommPlan":
         if wire not in WIRE_MODES:
             raise ValueError(f"wire={wire!r} (want {WIRE_MODES})")
         if topology not in SCHEDULES:
@@ -141,7 +147,8 @@ class CommPlan:
                   for x in jax.tree.leaves(params_example)]
         return cls(axis=axis, n=n, topology=topology, compressor=compressor,
                    wire=wire, buckets=buckets, order=order_idx, fused=fused,
-                   treedef=treedef, leaf_shapes=shapes, link=link)
+                   treedef=treedef, leaf_shapes=shapes, link=link,
+                   reduce_dtype=reduce_dtype)
 
     # ------------------------------------------------------------ derived
     @property
@@ -153,6 +160,21 @@ class CommPlan:
         """True when payloads are encoded inside the schedule (measured
         wire mode with a lossy method)."""
         return self.wire == "measured" and self.compressor.method != "none"
+
+    @property
+    def word_bytes(self) -> int:
+        """Bytes per word of the uncompressed gradient exchange (4 fp32,
+        2 when ``reduce_dtype="bfloat16"``)."""
+        return int(jnp.dtype(self.reduce_dtype).itemsize)
+
+    def _exact_tx(self, codec, length: int) -> float:
+        """``static_tx_bytes`` with the reduce-dtype word width applied to
+        the exact codec (NoneCodec counts 4 B/word; a bf16 exchange moves
+        2 B/word).  Lossy codec planes are unaffected."""
+        base = codec.static_tx_bytes(length)
+        if codec.exact and self.word_bytes != 4:
+            return base * self.word_bytes / 4
+        return base
 
     def bucket_len(self, b: int) -> int:
         return sum(int(np.prod(s) or 1) for s, _ in
@@ -171,10 +193,13 @@ class CommPlan:
         reduce_leaf = SCHEDULES[self.topology]
         leaves = jax.tree.leaves(grads)
         n = axis_size(self.axis)
+        rdt = jnp.dtype(self.reduce_dtype)
         out: List[Any] = [None] * len(leaves)
         for b in self.order:                   # the executed schedule
             flat = self._cat(leaves, b)
-            red = reduce_leaf(flat, self.axis) / n
+            if rdt != jnp.float32:
+                flat = flat.astype(rdt)        # the bf16 wire words
+            red = reduce_leaf(flat, self.axis).astype(jnp.float32) / n
             scatter_flat(red, self.buckets[b], self.leaf_shapes, out)
         return jax.tree.unflatten(self.treedef, out)
 
@@ -276,7 +301,7 @@ class CommPlan:
         L = self.bucket_len(b)
         P = pad_for_schedule(L, n)
         m = P // n
-        e = codec.static_tx_bytes
+        e = lambda length: self._exact_tx(codec, length)
         if arch == "ps":
             # gradient RS encoded, parameter AG exact fp32 (docs/comm.md)
             return ([("rs", float(e(m)))] * (n - 1)
@@ -361,17 +386,23 @@ class CommPlan:
         fp32.  Add ``SPARSE_ELEM_BYTES * sent_elems`` for dgc."""
         codec = self.codec if self.in_schedule else codec_for(
             Compressor("none"))
+        # bf16 reduce halves the exact codec's wire words (its accounting
+        # is linear in length, so scaling the schedule total is exact);
+        # lossy planes and the fp32 parameter all-gather are unaffected
+        scale = (self.word_bytes / 4
+                 if codec.exact and self.word_bytes != 4 else 1.0)
         total = 0.0
         for b in range(len(self.buckets)):
             L = self.bucket_len(b)
             P = pad_for_schedule(L, self.n)
             if arch == "ps":
                 m = P // self.n
-                rs = (self.n - 1) * codec.static_tx_bytes(m)
+                rs = (self.n - 1) * codec.static_tx_bytes(m) * scale
                 ag = (self.n - 1) * 4 * m          # params travel exact
                 total += rs + ag
             else:
-                total += schedule_tx_bytes(self.topology, self.n, P, codec)
+                total += schedule_tx_bytes(self.topology, self.n, P,
+                                           codec) * scale
         return int(total)
 
     def measured_bytes(self, sent_elems: int) -> int:

@@ -62,5 +62,21 @@ def stochastic_round(x, target_dtype, key):
 
 
 DEFAULT = PrecisionPolicy()
+FP32 = PrecisionPolicy("float32", "float32", "float32")
 BF16_COMPUTE = PrecisionPolicy("float32", "bfloat16", "float32")
+BF16_REDUCE = PrecisionPolicy("float32", "bfloat16", "bfloat16")
 BF16_EVERYTHING = PrecisionPolicy("bfloat16", "bfloat16", "bfloat16")
+
+# Strategy-level precision names (the mesh-suffix tokens): master weights
+# stay fp32 in every named policy — "bf16" is cast-for-compute with fp32
+# updates, "bf16r" additionally reduces gradients in bf16 on the wire.
+POLICIES = {"fp32": FP32, "bf16": BF16_COMPUTE, "bf16r": BF16_REDUCE}
+
+
+def policy_for(name: str) -> PrecisionPolicy:
+    """Resolve a Strategy/mesh-suffix precision name to its policy."""
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {name!r} (want one of {sorted(POLICIES)})")

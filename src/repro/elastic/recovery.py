@@ -51,7 +51,9 @@ def save_engine_state(path: str, engine, state, step: int,
                       history_len: int = 0,
                       extra: Optional[Dict[str, Any]] = None,
                       incremental_from: Optional[str] = None,
-                      shard_bytes: int = 512 * 1024 * 1024) -> None:
+                      shard_bytes: int = 512 * 1024 * 1024,
+                      background: bool = False
+                      ) -> Optional[threading.Thread]:
     """Atomically snapshot an engine's full run-state at ``step``.
     ``extra`` adds trainer-level bookkeeping (e.g. the consumed event
     record) to the manifest next to the engine's own meta.
@@ -59,13 +61,32 @@ def save_engine_state(path: str, engine, state, step: int,
     previous committed snapshot (checkpoint/store.py) — restores stay
     bitwise-identical.  Engine snapshots always carry content hashes so
     the *next* cadence save can link against this one even when this
-    save is full (crash/preemption commits)."""
+    save is full (crash/preemption commits).
+
+    ``background=True`` dispatches only the *file write* to a daemon
+    thread and returns it for the caller to join; the device→host export
+    still happens here, synchronously, so the captured arrays are the
+    state at call time no matter how far the training loop has advanced
+    by the time the write lands.  The snapshot does not count as
+    committed until the returned thread is joined — atomicity
+    (store.py's rename commit) guarantees a reader meanwhile sees either
+    the previous checkpoint or nothing, never a torn one."""
     arrays, meta = engine.export_state(state)
     meta = dict(meta, step=int(step), history_len=int(history_len),
                 **(extra or {}))
-    save_checkpoint(path, arrays, step=int(step), extra=meta,
-                    incremental_from=incremental_from,
-                    shard_bytes=shard_bytes, hash_leaves=True)
+
+    def write():
+        save_checkpoint(path, arrays, step=int(step), extra=meta,
+                        incremental_from=incremental_from,
+                        shard_bytes=shard_bytes, hash_leaves=True)
+
+    if background:
+        th = threading.Thread(target=write, name=f"ckpt-write-{step}",
+                              daemon=True)
+        th.start()
+        return th
+    write()
+    return None
 
 
 def restore_engine_state(path: str, engine, params_like
@@ -202,7 +223,20 @@ def fit_elastic(strategy, grad_fn: Callable, params,
 
     rec = get_recorder()
 
-    def commit(step: int, state, hist_len: int, full: bool = False):
+    # at most one snapshot write in flight: cadence saves dispatch the
+    # file write to a background thread so the next train step overlaps
+    # the disk I/O, and every consumer of "the newest committed
+    # checkpoint" — a later commit (incremental links need the previous
+    # snapshot durable), crash/restart recovery, and run exit — joins it
+    # first
+    pending_writes: List[threading.Thread] = []
+
+    def join_writes():
+        while pending_writes:
+            pending_writes.pop().join()
+
+    def commit(step: int, state, hist_len: int, full: bool = False,
+               background: bool = False):
         # every snapshot records which plan events have already fired:
         # "fired" is not derivable from the step alone (a crash rollback
         # commits *earlier* than the crash it consumed), and a resumed
@@ -210,13 +244,21 @@ def fit_elastic(strategy, grad_fn: Callable, params,
         # Periodic cadence saves are incremental (unchanged shards are
         # hash-skipped against the newest committed snapshot); crash
         # rollback and preemption commits stay full saves.
+        join_writes()
         prev = ckpt(max(written)) if (written and not full) else None
+        # the span measures what the training loop actually pays: for a
+        # background commit that is the device→host export + dispatch,
+        # not the write itself (dispatch="async" marks those records)
         with rec.span("snapshot", pid="elastic", tid="events", cat="elastic",
                       clock=("train_step", step), step=step,
-                      mode="full" if prev is None else "incremental"):
-            save_engine_state(ckpt(step), engine, state, step, hist_len,
-                              extra={"consumed": run.consumed_specs()},
-                              incremental_from=prev)
+                      mode="full" if prev is None else "incremental",
+                      dispatch="async" if background else "sync"):
+            th = save_engine_state(ckpt(step), engine, state, step, hist_len,
+                                   extra={"consumed": run.consumed_specs()},
+                                   incremental_from=prev,
+                                   background=background)
+        if th is not None:
+            pending_writes.append(th)
         written.add(step)
 
     t = 0
@@ -284,6 +326,9 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                         # never restores across the resize boundary
                         commit(t, st, len(history))
                 elif ev.kind in ("crash", "restart"):
+                    # an in-flight cadence write may BE the newest
+                    # committed snapshot — recovery must not race it
+                    join_writes()
                     t0 = time.time()
                     # explicit begin/end (not a ``with``): the error paths
                     # below abort the run anyway, and a truncated trace is
@@ -344,7 +389,7 @@ def fit_elastic(strategy, grad_fn: Callable, params,
             if rolled_back:
                 continue
             if ckpt and t > 0 and t % checkpoint_every == 0:
-                commit(t, st, len(history))
+                commit(t, st, len(history), background=True)
             if rec.enabled:
                 # same step track as train_loop (fit_elastic drives the
                 # engine directly), so engine sub-spans nest identically
@@ -361,6 +406,8 @@ def fit_elastic(strategy, grad_fn: Callable, params,
                 raise RuntimeError("elastic run not converging on its "
                                    "step target (runaway rollback loop?)")
     finally:
+        # the run is not over until its last snapshot is durable
+        join_writes()
         for sig, old in installed:
             signal.signal(sig, old)
 

@@ -1,0 +1,81 @@
+"""Host process environment setup for virtual-device runs.
+
+Every tool, test, and benchmark in this repo that wants N devices on a
+CPU host has to set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+*before the first jax import* — after jax initializes its backend the
+flag is silently ignored and the run proceeds on 1 device until a mesh
+constructor fails with a confusing "needs N devices" error.  This module
+is the one implementation of that dance:
+
+    from repro.launch.env import ensure_host_devices
+    ensure_host_devices(8)       # before any jax import
+    import jax
+
+and, for the subprocess pattern (benchmarks / multi-device tests):
+
+    subprocess.run([...], env=subprocess_env(8))
+
+Allocator note (docs/hybrid.md): on hosts where glibc malloc fragments
+under the engine's per-bucket arrays, preload tcmalloc *outside* the
+process — an env var cannot retroactively swap the allocator of a
+running interpreter::
+
+    LD_PRELOAD=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+        PYTHONPATH=src python tools/hybrid_smoke.py
+
+``subprocess_env`` forwards an LD_PRELOAD already present in the parent
+environment, so one export covers a whole bench tree.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, Optional
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _with_flag(flags: str, n: int) -> str:
+    """XLA_FLAGS value with the host-device-count flag ensured.  An
+    explicit count already present (env override) wins."""
+    if _FLAG in flags:
+        return flags
+    return f"{flags} {_FLAG}={n}".strip()
+
+
+def ensure_host_devices(n: int) -> None:
+    """Idempotently request ``n`` virtual host devices for this process.
+
+    Must run before the first jax import; raises if jax's backend is
+    already initialized (the flag would be silently ignored).  A count
+    already present in ``XLA_FLAGS`` — e.g. set by an outer launcher or
+    ``subprocess_env`` — is respected, not overwritten.
+    """
+    if n < 1:
+        raise ValueError("device count must be >= 1")
+    jax_mod = sys.modules.get("jax")
+    if jax_mod is not None and _FLAG not in os.environ.get("XLA_FLAGS", ""):
+        backends = sys.modules.get("jax._src.xla_bridge")
+        if backends is not None and getattr(backends, "_backends", None):
+            raise RuntimeError(
+                "ensure_host_devices() called after jax initialized its "
+                "backend; XLA_FLAGS would be ignored.  Call it before the "
+                "first jax import (see repro.launch.env docstring)")
+    os.environ["XLA_FLAGS"] = _with_flag(os.environ.get("XLA_FLAGS", ""), n)
+
+
+def subprocess_env(n: int,
+                   base: Optional[Dict[str, str]] = None) -> Dict[str, str]:
+    """A copy of ``base`` (default ``os.environ``) with ``XLA_FLAGS``
+    requesting ``n`` virtual host devices — the env to hand
+    ``subprocess.run`` for a fresh multi-device child process.  Unlike
+    ``ensure_host_devices`` this *overrides* any existing count: a child
+    launched for n devices must get n devices regardless of the parent's
+    own flag."""
+    if n < 1:
+        raise ValueError("device count must be >= 1")
+    env = dict(os.environ if base is None else base)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith(f"{_FLAG}=")]
+    env["XLA_FLAGS"] = " ".join(flags + [f"{_FLAG}={n}"])
+    return env

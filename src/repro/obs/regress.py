@@ -38,7 +38,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 # integer fields that identify a bench cell rather than measure it
 ID_INT_FIELDS = frozenset({
     "workers", "slots", "tp", "page_size", "requests", "bucket_passes",
-    "stages", "micro", "max_new_tokens",
+    "stages", "micro", "max_new_tokens", "interleave",
 })
 
 # metric -> (kind, tolerance, direction).  direction "lower" = smaller

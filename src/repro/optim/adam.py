@@ -1,4 +1,10 @@
-"""Adam / AdamW."""
+"""Adam / AdamW, with optionally quantized (bf16) EMA moment buffers.
+
+``moment_dtype="bfloat16"`` stores the m/v EMA buffers in bf16 (halving
+the optimizer-state footprint — the survey's §3.3.3 memory lever) while
+all EMA and update math stays fp32: buffers are widened on read and
+rounded back on store, so the default fp32 path is bitwise-unchanged.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -13,13 +19,25 @@ class Adam:
     b2: float = 0.999
     eps: float = 1e-8
     weight_decay: float = 0.0
+    # storage dtype of the m/v EMA buffers ("float32" | "bfloat16");
+    # EMA/update arithmetic is always fp32
+    moment_dtype: str = "float32"
 
-    # fp32 moment buffers per parameter — the quantity ZeRO-1/2 shard
+    # moment buffers per parameter — the quantity ZeRO-1/2 shard
     # away (repro.parallel.zero's memory math keys on this)
     moments_per_param = 2
 
+    @property
+    def mdt(self):
+        return jnp.dtype(self.moment_dtype)
+
+    @property
+    def moment_bytes(self) -> int:
+        """Bytes per stored moment element (4 fp32, 2 bf16)."""
+        return int(self.mdt.itemsize)
+
     def init(self, params):
-        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        z = lambda p: jnp.zeros_like(p, self.mdt)
         return {"m": jax.tree.map(z, params),
                 "v": jax.tree.map(z, params),
                 "t": jnp.zeros((), jnp.int32)}
@@ -27,10 +45,11 @@ class Adam:
     def step(self, params, grads, state, lr):
         t = state["t"] + 1
         b1, b2 = self.b1, self.b2
-        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+        f32 = lambda x: x.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, g: b1 * f32(mm) + (1 - b1) * f32(g),
                          state["m"], grads)
         v = jax.tree.map(
-            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            lambda vv, g: b2 * f32(vv) + (1 - b2) * jnp.square(f32(g)),
             state["v"], grads)
         c1 = 1 - b1 ** t.astype(jnp.float32)
         c2 = 1 - b2 ** t.astype(jnp.float32)
@@ -41,8 +60,9 @@ class Adam:
                 u = u + self.weight_decay * p.astype(jnp.float32)
             return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
 
+        q = lambda x: x.astype(self.mdt)
         return (jax.tree.map(upd, params, m, v),
-                {"m": m, "v": v, "t": t})
+                {"m": jax.tree.map(q, m), "v": jax.tree.map(q, v), "t": t})
 
 
 def AdamW(weight_decay: float = 0.01, **kw):

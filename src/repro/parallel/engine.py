@@ -49,7 +49,10 @@ from repro.comm.transport import (compressed_allreduce,
 from repro.core.collectives import shard_map
 from repro.core.compression import Compressor, EF_METHODS
 from repro.core.parameter_server import shard_of_flat
-from repro.core.pipeline import bubble_fraction, gpipe_forward, gpipe_ticks
+from repro.core.pipeline import (bubble_fraction, gpipe_forward, gpipe_ticks,
+                                 onefb_bubble_fraction, onefb_forward,
+                                 onefb_ticks)
+from repro.core.precision import policy_for
 from repro.obs.trace import get_recorder
 from repro.core.sync import default_periods
 from repro.launch.mesh import make_hybrid_mesh
@@ -68,28 +71,45 @@ ASYNC_SYNCS = ("ssp", "asp")
 
 
 def emit_pipeline_trace(rec, stages: int, micro: int, *,
+                        schedule: str = "gpipe", interleave: int = 1,
                         pid: str = "pipeline", clock=None) -> None:
-    """The GPipe schedule this step executed, as trace spans on the
+    """The pipeline schedule this step executed, as trace spans on the
     deterministic tick clock (docs/observability.md): a ``pipe`` parent
-    span on ``pipeline/schedule`` carrying the analytic bubble fraction,
-    and per-stage tracks ``stage<s>`` with one span per schedule tick —
-    ``mb<k>`` while stage s processes micro-batch k = tick - s, and
-    ``bubble`` for the fill/drain ticks where it sits idle.  The fused
-    jitted step cannot be split at runtime, so like the CommPlan
-    exchange spans this is the plan's own deterministic model of what
-    executed; ``obs.analyze.pipeline_accounting`` measures the bubble
-    fraction back off these spans."""
+    span on ``pipeline/schedule`` carrying the schedule-specific analytic
+    bubble fraction, and per-stage tracks ``stage<s>`` with one span per
+    schedule tick — ``mb<k>`` while the stage device computes micro-batch
+    k, and ``bubble`` for the fill/drain ticks where it sits idle.  Under
+    GPipe stage s holds micro k = tick - s; under (interleaved) 1F1B
+    device i is busy for its ``v * m`` consecutive chunk calls starting
+    at tick i, computing micro ``(tick - i) mod m`` of chunk
+    ``(tick - i) // m``.  The fused jitted step cannot be split at
+    runtime, so like the CommPlan exchange spans this is the plan's own
+    deterministic model of what executed;
+    ``obs.analyze.pipeline_accounting`` measures the bubble fraction
+    back off these spans."""
     if not rec.enabled:
         return
-    ticks = gpipe_ticks(stages, micro)
+    if schedule == "1f1b":
+        v = interleave
+        ticks = onefb_ticks(stages, micro, v)
+        analytic = onefb_bubble_fraction(stages, micro, v)
+    else:
+        v = 1
+        ticks = gpipe_ticks(stages, micro)
+        analytic = bubble_fraction(stages, micro)
     rec.begin("pipe", pid=pid, tid="schedule", cat="pipeline", clock=clock,
-              stages=stages, micro=micro, ticks=ticks,
-              analytic_bubble=round(bubble_fraction(stages, micro), 6))
+              stages=stages, micro=micro, ticks=ticks, schedule=schedule,
+              interleave=v, analytic_bubble=round(analytic, 6))
     for s in range(stages):
         tid = f"stage{s}"
         for k in range(ticks):
-            mb = k - s
-            name = f"mb{mb}" if 0 <= mb < micro else "bubble"
+            if schedule == "1f1b":
+                active = s <= k < s + v * micro
+                mb = (k - s) % micro
+            else:
+                mb = k - s
+                active = 0 <= mb < micro
+            name = f"mb{mb}" if active else "bubble"
             rec.begin(name, pid=pid, tid=tid, cat="pipeline",
                       clock=("pipe_tick", k), stage=s)
             rec.end(pid=pid, tid=tid)
@@ -107,6 +127,10 @@ class HybridConfig:
     bucket_mb: float = 4.0
     order: str = "tictac"
     micro_batches: int = 0           # 0 = auto (2*stages when pipelined)
+    schedule: str = "gpipe"          # pipeline schedule: gpipe | 1f1b
+    interleave: int = 0              # 1f1b virtual stages/device (0 = auto 2)
+    precision: str = "fp32"          # fp32 | bf16 | bf16r (core/precision)
+    moments: str = "float32"         # AdamW EMA storage: float32 | bfloat16
     # sync model over the DATA axis (docs/hybrid.md): bsp natively; ssp/
     # asp replay the simulator's staleness schedule per data slot, sma
     # keeps a replica per data slot — all three need stage=1, z0, sgd
@@ -146,6 +170,28 @@ class HybridEngine:
             raise ValueError(
                 f"sync={cfg.sync!r} composes with the data axis only: "
                 "needs stage=1, zero=0, optimizer='sgd'")
+        if cfg.schedule not in ("gpipe", "1f1b"):
+            raise ValueError(f"schedule={cfg.schedule!r} (want gpipe|1f1b)")
+        if cfg.schedule == "1f1b" and cfg.mesh.stage < 2:
+            raise ValueError(
+                "schedule='1f1b' needs a pipeline (mesh stage >= 2)")
+        if cfg.interleave and cfg.schedule != "1f1b":
+            raise ValueError(
+                f"interleave=v{cfg.interleave} only applies to the 1f1b "
+                "schedule")
+        if cfg.interleave < 0:
+            raise ValueError(f"interleave={cfg.interleave} (want >= 1)")
+        if cfg.moments not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"moments={cfg.moments!r} (want float32|bfloat16)")
+        self._policy = policy_for(cfg.precision)   # raises on unknown name
+        if cfg.sync != "bsp" and cfg.precision != "fp32":
+            raise ValueError(
+                f"sync={cfg.sync!r} cells run fp32 (precision="
+                f"{cfg.precision!r} composes with BSP only)")
+        # effective 1f1b interleave: v virtual stages per device
+        self._v = ((cfg.interleave or 2)
+                   if cfg.schedule == "1f1b" else 1)
         self.staged = is_staged_model(model)
         if not self.staged and not cfg.mesh.is_trivial:
             raise ValueError(
@@ -204,7 +250,51 @@ class HybridEngine:
                 jax.tree.structure(params),
                 [(tuple(lo.shape), le.dtype)
                  for lo, le in zip(locals_, leaves)])
+            if self.cfg.schedule == "1f1b":
+                s = self.cfg.mesh.stage
+                if self.plan.micro < s:
+                    raise ValueError(
+                        f"1f1b needs micro_batches >= stages (got "
+                        f"m={self.plan.micro} < s={s}); the wrap-link "
+                        "FIFO gap m - s must be >= 0")
+                chunk = locals_[0].shape[0]
+                if chunk % self._v:
+                    raise ValueError(
+                        f"1f1b interleave v{self._v}: per-stage layer "
+                        f"count {chunk} not divisible into v virtual "
+                        "stages")
         return self.plan
+
+    # ------------------------------------------- 1f1b virtual-stage layout
+    def _stage_perm(self, n_rows: int) -> np.ndarray:
+        """Row permutation of a globally stacked leaf for interleaved
+        1F1B: device i must hold virtual stages {c*S + i | c < v} as its
+        v contiguous local chunks (chunk-major), so the existing
+        contiguous stage slicing of ``_local_block`` / the P(STAGE)
+        in-spec hands every device exactly the layers
+        ``onefb_forward``'s per-chunk dynamic slice expects."""
+        s, v = self.cfg.mesh.stage, self._v
+        cl = n_rows // (s * v)
+        idx: List[int] = []
+        for i in range(s):
+            for c in range(v):
+                vs = c * s + i
+                idx.extend(range(vs * cl, (vs + 1) * cl))
+        return np.asarray(idx)
+
+    def _permute_stacked(self, params, inverse: bool = False):
+        """Reorder stacked-leaf rows into (or back out of) the 1f1b
+        virtual-stage layout.  Identity for gpipe / v=1, so every
+        existing cell's arrays are untouched."""
+        if not self.staged or self._v == 1:
+            return params
+
+        def f(leaf):
+            perm = self._stage_perm(np.shape(leaf)[0])
+            if inverse:
+                perm = np.argsort(perm)
+            return jnp.asarray(leaf)[perm]
+        return jax.tree.map(f, params)
 
     def _local_block(self, leaf, t_dim, s_idx: int, t_idx: int):
         """Host-side (s, t) block of a stacked leaf — the array one mesh
@@ -326,6 +416,9 @@ class HybridEngine:
     def init(self, params) -> Dict[str, Any]:
         cfg = self.cfg
         plan = self._ensure_plan(params)
+        # 1f1b interleaving holds params in virtual-stage row order for
+        # the whole run (identity otherwise); finalize() restores it
+        params = self._permute_stacked(params)
         st: Dict[str, Any] = dict(rng=jax.random.PRNGKey(cfg.seed), wire=0)
         D = cfg.mesh.data
         if cfg.sync in ASYNC_SYNCS:
@@ -353,13 +446,14 @@ class HybridEngine:
             st["params"] = params
         if cfg.optimizer == "adamw":
             if cfg.zero == 0:
-                st["opt"] = init_opt_state("adamw", params)
+                st["opt"] = init_opt_state("adamw", params, cfg.moments)
             else:
                 # one moment shard per bucket, in ISSUE order — aligned
                 # with the p/g bucket lists the step function builds
                 zeros = [jnp.zeros((cfg.mesh.data, cfg.mesh.stage,
                                     cfg.mesh.tensor,
-                                    plan.shard_sizes[b]), jnp.float32)
+                                    plan.shard_sizes[b]),
+                                   jnp.dtype(cfg.moments))
                          for b in plan.order]
                 st["opt"] = {"m": list(zeros),
                              "v": [jnp.zeros_like(z) for z in zeros],
@@ -385,7 +479,7 @@ class HybridEngine:
             self.plan.local_example, axis=DATA, n=cfg.mesh.data,
             topology=cfg.topology, compressor=cfg.compressor,
             wire=cfg.wire, bucket_mb=cfg.bucket_mb, order=cfg.order,
-            seed=cfg.seed)
+            seed=cfg.seed, reduce_dtype=self._policy.reduce_dtype)
 
     def _measured_step_tx_bytes(self) -> int:
         """Shape-static measured bytes ONE device puts on the data axis
@@ -403,10 +497,13 @@ class HybridEngine:
             return comm.measured_step_tx_bytes("ps")
         # z1: compressed ring allreduce of grads + exact param all-gather
         codec = comm.codec if comm.in_schedule else make_codec("none")
+        # bf16 reduce halves the exact grad words; params stay fp32
+        scale = (comm.word_bytes / 4
+                 if codec.exact and comm.word_bytes != 4 else 1.0)
         total = 0.0
         for b in plan.order:
             P = d * (-(-plan.bucket_sizes[b] // d))
-            total += schedule_tx_bytes("ring", d, P, codec)
+            total += schedule_tx_bytes("ring", d, P, codec) * scale
             total += (d - 1) * 4 * (P // d)       # params travel exact
         return int(total)
 
@@ -424,11 +521,15 @@ class HybridEngine:
         gain = comp.ef_gain if comp.method == "onebit" else 1.0
         reduce0 = comm.reduce_grads if cfg.zero == 0 else None
         zero_update = (make_zero_bucket_update(
-            plan, cfg.zero, cfg.optimizer, cfg.lr, axis=DATA)
+            plan, cfg.zero, cfg.optimizer, cfg.lr, axis=DATA,
+            moment_dtype=cfg.moments)
             if cfg.zero else None)
-        opt_step0 = (make_optimizer_step(cfg.optimizer, cfg.lr)
+        opt_step0 = (make_optimizer_step(cfg.optimizer, cfg.lr, cfg.moments)
                      if cfg.zero == 0 else None)
         tensor_axis = TENSOR if T > 1 else None
+        policy = self._policy
+        bf16_compute = policy.compute_dtype != "float32"
+        bf16_reduce = policy.reduce_dtype != "float32"
         act_cell: List[int] = []
 
         def squeeze3(x):
@@ -458,28 +559,56 @@ class HybridEngine:
                                     tensor_axis=tensor_axis)
             return xx
 
+        cl = chunk // self._v if self.staged else 0
+
+        def chunk_call(sp, xx):
+            # one 1f1b virtual stage: the cl-layer chunk onefb_forward
+            # sliced out of the device's (virtual-stage-ordered) block
+            for j in range(cl):
+                xx = model.stage_fn(jax.tree.map(lambda l: l[j], sp), xx,
+                                    tensor_axis=tensor_axis)
+            return xx
+
         def local_loss_and_grads(p_local, batch):
             if not self.staged:
-                return grad_fn(p_local, batch)
+                if not bf16_compute:
+                    return grad_fn(p_local, batch)
+                # bf16 compute, fp32 master weights: the cast transposes
+                # cotangents back to fp32, and p_local stays the fp32
+                # master copy the optimizer updates
+                loss, grads = grad_fn(policy.cast_for_compute(p_local),
+                                      batch)
+                return loss, jax.tree.map(
+                    lambda g: g.astype(jnp.float32), grads)
 
             def lloss(pl):
+                if bf16_compute:
+                    pl = policy.cast_for_compute(pl)
                 x = model.inputs(batch)
+                if bf16_compute:
+                    x = x.astype(policy.cdt)
                 bsz = x.shape[0]
                 xm = x.reshape((micro, bsz // micro) + x.shape[1:])
                 if not act_cell:
-                    act_cell.append(int(np.prod(xm.shape[1:])) * 4)
-                outs = gpipe_forward(stage_call, pl, xm, STAGE)
+                    act_cell.append(int(np.prod(xm.shape[1:]))
+                                    * int(jnp.dtype(xm.dtype).itemsize))
+                if cfg.schedule == "1f1b":
+                    outs = onefb_forward(chunk_call, pl, xm, STAGE,
+                                         interleave=self._v)
+                else:
+                    outs = gpipe_forward(stage_call, pl, xm, STAGE)
                 y = outs.reshape((bsz,) + x.shape[1:])
-                loss = model.readout(y, batch)
+                loss = model.readout(y, batch).astype(jnp.float32)
                 # only the last stage holds real outputs; the reduce
                 # broadcasts its loss along the stage axis with identity
                 # transpose (each stage's masked loss gets the plain
                 # cotangent — the pipeline backward itself flows through
-                # the ppermute chain inside gpipe_forward)
+                # the ppermute chain inside the schedule)
                 loss = jnp.where(lax.axis_index(STAGE) == S - 1, loss, 0.0)
                 return tensor_reduce(STAGE)(loss)
 
-            return jax.value_and_grad(lloss)(p_local)
+            loss, grads = jax.value_and_grad(lloss)(p_local)
+            return loss, grads
 
         def zero_buckets(pstate, opt, p_local):
             if cfg.zero == 3:
@@ -513,6 +642,10 @@ class HybridEngine:
             batch_l = jax.tree.map(lambda x: x[0], batch)
             p_local = local_params(pstate)
             loss, grads = local_loss_and_grads(p_local, batch_l)
+            if bf16_reduce:
+                # round the push to the bf16 wire words the measured
+                # accounting counts (the exchange math re-widens to fp32)
+                grads = policy.cast_for_reduce(grads)
             key = key0
             for ax in AXES:
                 key = jax.random.fold_in(key, lax.axis_index(ax))
@@ -650,6 +783,8 @@ class HybridEngine:
                                             clock=("train_step", t))
             if self.staged and cfg.mesh.stage > 1:
                 emit_pipeline_trace(rec, cfg.mesh.stage, self.plan.micro,
+                                    schedule=cfg.schedule,
+                                    interleave=self._v,
                                     clock=("train_step", t))
         if cfg.wire == "measured":
             # per bucket from the plan, every step: static plane bytes of
@@ -684,9 +819,10 @@ class HybridEngine:
             return jax.tree.map(lambda x: jnp.mean(x, axis=0),
                                 st["replicas"])
         if self.cfg.zero == 3:
-            return self._materialize_params(
+            full = self._materialize_params(
                 [np.asarray(x) for x in st["params"]])
-        return st["params"]
+            return self._permute_stacked(full, inverse=True)
+        return self._permute_stacked(st["params"], inverse=True)
 
     def wire_bytes(self) -> int:
         return self._wire_total
@@ -865,15 +1001,25 @@ class HybridEngine:
         m: Dict[str, Any] = dict(
             mesh=cfg.mesh.spec(), zero=cfg.zero, optimizer=cfg.optimizer,
             wire_mode=cfg.wire)
+        if cfg.schedule != "gpipe":
+            m["schedule"] = cfg.schedule
+            m["interleave"] = self._v
+        if cfg.precision != "fp32":
+            m["precision"] = cfg.precision
+        if cfg.moments != "float32":
+            m["moments"] = cfg.moments
         if plan is not None and cfg.sync == "bsp":
             m["modeled_data_bytes_per_dev"] = wire_bytes_per_device(
                 plan, cfg.zero, grad_bytes=self._modeled_event_bytes())
             m["analytic_state_bytes"] = state_bytes_per_device(
-                plan, cfg.zero, cfg.optimizer)
+                plan, cfg.zero, cfg.optimizer, cfg.moments)
             if self._measured_tx is not None:
                 m["measured_step_tx_bytes"] = self._measured_tx
             if self._act_cell and cfg.mesh.stage > 1:
-                ticks = gpipe_ticks(cfg.mesh.stage, plan.micro)
+                if cfg.schedule == "1f1b":
+                    ticks = onefb_ticks(cfg.mesh.stage, plan.micro, self._v)
+                else:
+                    ticks = gpipe_ticks(cfg.mesh.stage, plan.micro)
                 m["modeled_pipeline_bytes_per_dev"] = \
                     self._act_cell[0] * ticks
                 if cfg.mesh.tensor > 1:
@@ -953,7 +1099,7 @@ class HybridEngine:
                 n_b = old_plan.bucket_sizes[b]
                 m_new = -(-n_b // new_d)
                 _, S, T, _ = arr.shape
-                new = np.zeros((new_d, S, T, m_new), np.float32)
+                new = np.zeros((new_d, S, T, m_new), arr.dtype)
                 for si in range(S):
                     for ti in range(T):
                         flat = arr[:, si, ti, :].reshape(-1)[:n_b]
@@ -1003,7 +1149,9 @@ class HybridEngine:
                   "rng": st["rng"]}
         meta = dict(backend="hybrid", mesh=cfg.mesh.spec(), zero=cfg.zero,
                     optimizer=cfg.optimizer, num_workers=cfg.mesh.size,
-                    wire=int(st["wire"]), slowdowns=list(self.slowdowns))
+                    wire=int(st["wire"]), slowdowns=list(self.slowdowns),
+                    schedule=cfg.schedule, interleave=self._v,
+                    precision=cfg.precision, moments=cfg.moments)
         return arrays, meta
 
     def import_state(self, arrays: Dict[str, Any], meta: Dict[str, Any]):
@@ -1018,6 +1166,15 @@ class HybridEngine:
                 f"snapshot geometry {meta['mesh']}/z{meta['zero']}/"
                 f"{meta['optimizer']} does not match engine "
                 f"{cfg.mesh.spec()}/z{cfg.zero}/{cfg.optimizer}")
+        # schedule/precision change the on-disk layout (virtual-stage row
+        # order, moment dtype); pre-existing snapshots default to gpipe/fp32
+        snap = (meta.get("schedule", "gpipe"), meta.get("interleave", 1),
+                meta.get("precision", "fp32"), meta.get("moments", "float32"))
+        mine = (cfg.schedule, self._v, cfg.precision, cfg.moments)
+        if snap != mine:
+            raise ValueError(
+                f"snapshot schedule/precision {snap} does not match "
+                f"engine {mine}")
         self.slowdowns = [float(s) for s in meta["slowdowns"]]
         st = dict(params=arrays["params"], opt=arrays["opt"],
                   ef=arrays["ef"], rng=jnp.asarray(arrays["rng"]),

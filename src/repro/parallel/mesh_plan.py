@@ -16,6 +16,14 @@ and ``suffix_spec`` are inverses)::
            | "z" L   ZeRO optimizer-state level    (0..3, default 0)
            | "m" K   pipeline micro-batches        (default 2*stages)
            | "sgd" | "adamw"                       (optimizer, default sgd)
+           | "gpipe" | "1f1b"                      (pipeline schedule,
+                                                    default gpipe)
+           | "v" K   1f1b interleave (virtual      (default 2 under 1f1b)
+                     stages per device)
+           | "fp32" | "bf16" | "bf16r"             (compute precision,
+                                                    default fp32; bf16r
+                                                    also reduces in bf16)
+           | "qmom"                                (bf16 optimizer moments)
 
 ``MeshSpec`` is the axis geometry; ``MeshPlan`` (built by ``plan_mesh``)
 is the *composition plan* the hybrid engine executes: per-leaf tensor
@@ -38,6 +46,10 @@ from repro.core.parallelism import model_axis_dim
 AXES = ("data", "tensor", "stage")
 
 OPTIMIZERS = ("sgd", "adamw")
+
+SCHEDULES = ("gpipe", "1f1b")
+
+PRECISIONS = ("fp32", "bf16", "bf16r")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,8 +82,9 @@ class MeshSpec:
         (z/m/sgd/adamw) are rejected — silently dropping a ZeRO level
         from ``Strategy(mesh="d4.z3")`` would train un-sharded."""
         fields, named = parse_suffix(text)
-        extras = [k for k in ("zero", "optimizer", "micro_batches")
-                  if named[k]]
+        extras = [k for k in ("zero", "optimizer", "micro_batches",
+                              "schedule", "interleave", "precision",
+                              "moments") if named[k]]
         if extras:
             raise ValueError(
                 f"mesh spec {text!r} carries non-axis tokens ({extras}); "
@@ -85,46 +98,68 @@ def parse_suffix(text: str) -> Tuple[Dict[str, Any], Dict[str, bool]]:
     """Parse a mesh suffix into Strategy fields.
 
     Returns ``(fields, named)``: ``fields`` has mesh/zero/optimizer/
-    micro_batches defaults filled in, ``named`` records which were
-    explicitly present (so Strategy keyword defaults do not clobber
-    spec-named values and vice versa)."""
+    micro_batches/schedule/interleave/precision/moments defaults filled
+    in, ``named`` records which were explicitly present (so Strategy
+    keyword defaults do not clobber spec-named values and vice versa)."""
     axes = {"d": 1, "t": 1, "s": 1}
     zero, optimizer, micro = 0, "sgd", 0
+    schedule, interleave, precision, moments = "gpipe", 0, "fp32", "float32"
     named = {"mesh": False, "zero": False, "optimizer": False,
-             "micro_batches": False}
+             "micro_batches": False, "schedule": False, "interleave": False,
+             "precision": False, "moments": False}
+    # word tokens first: "1f1b"/"bf16" start with a digit/axis letter, so
+    # they must be name-matched before the head-char dispatch below
+    words = {tok: ("optimizer",) for tok in OPTIMIZERS}
+    words.update({tok: ("schedule",) for tok in SCHEDULES})
+    words.update({tok: ("precision",) for tok in PRECISIONS})
+    words["qmom"] = ("moments",)
     seen = set()
     for tok in text.split("."):
         tok = tok.strip()
         if not tok:
             raise ValueError(f"bad mesh suffix {text!r}: empty token")
-        # all optimizer names share one slot — "sgd.adamw" is a
-        # contradiction, not a last-wins override
-        key = "optimizer" if tok in OPTIMIZERS else tok[0]
+        # all names of one dimension share one slot — "sgd.adamw" (or
+        # "gpipe.1f1b") is a contradiction, not a last-wins override
+        key = words[tok][0] if tok in words else tok[0]
         if key in seen:
             raise ValueError(f"bad mesh suffix {text!r}: duplicate {key!r}")
-        if tok in OPTIMIZERS:
+        if tok in words:
             seen.add(key)
-            optimizer, named["optimizer"] = tok, True
+            named[key] = True
+            if key == "optimizer":
+                optimizer = tok
+            elif key == "schedule":
+                schedule = tok
+            elif key == "precision":
+                precision = tok
+            else:                       # qmom
+                moments = "bfloat16"
             continue
         head, val = tok[0], tok[1:]
-        if head not in ("d", "t", "s", "z", "m") or not val.isdigit():
+        if head not in ("d", "t", "s", "z", "m", "v") or not val.isdigit():
             raise ValueError(
                 f"bad mesh suffix {text!r}: token {tok!r} (want dN/tN/sN/"
-                f"zL/mK/sgd/adamw)")
+                f"zL/mK/vK/sgd/adamw/gpipe/1f1b/fp32/bf16/bf16r/qmom)")
         seen.add(head)
         if head in axes:
             axes[head], named["mesh"] = int(val), True
         elif head == "z":
             zero, named["zero"] = int(val), True
+        elif head == "v":
+            interleave, named["interleave"] = int(val), True
         else:
             micro, named["micro_batches"] = int(val), True
     fields = dict(mesh=MeshSpec(axes["d"], axes["t"], axes["s"]),
-                  zero=zero, optimizer=optimizer, micro_batches=micro)
+                  zero=zero, optimizer=optimizer, micro_batches=micro,
+                  schedule=schedule, interleave=interleave,
+                  precision=precision, moments=moments)
     return fields, named
 
 
 def suffix_spec(mesh: MeshSpec, zero: int = 0, optimizer: str = "sgd",
-                micro_batches: int = 0) -> str:
+                micro_batches: int = 0, schedule: str = "gpipe",
+                interleave: int = 0, precision: str = "fp32",
+                moments: str = "float32") -> str:
     """Canonical mesh suffix (inverse of ``parse_suffix``); empty string
     when every dimension is at its default."""
     parts: List[str] = []
@@ -134,6 +169,14 @@ def suffix_spec(mesh: MeshSpec, zero: int = 0, optimizer: str = "sgd",
         parts.append(f"z{zero}")
     if micro_batches:
         parts.append(f"m{micro_batches}")
+    if schedule != "gpipe":
+        parts.append(schedule)
+    if interleave:
+        parts.append(f"v{interleave}")
+    if precision != "fp32":
+        parts.append(precision)
+    if moments != "float32":
+        parts.append("qmom")
     if optimizer != "sgd":
         parts.append(optimizer)
     return ".".join(parts)

@@ -41,15 +41,18 @@ from repro.parallel.mesh_plan import MeshPlan
 ZERO_LEVELS = (0, 1, 2, 3)
 
 
-def make_optimizer_step(optimizer: str, lr: float) -> Callable:
+def make_optimizer_step(optimizer: str, lr: float,
+                        moment_dtype: str = "float32") -> Callable:
     """(params, grads, opt_state) -> (new_params, new_opt_state) on any
-    pytree — full leaves (z0) or flat shards (z1-z3) alike."""
+    pytree — full leaves (z0) or flat shards (z1-z3) alike.
+    ``moment_dtype="bfloat16"`` stores the AdamW EMA buffers quantized
+    (olmax-style); math stays fp32."""
     if optimizer == "sgd":
         def sgd_step(p, g, opt):
             return jax.tree.map(lambda a, b: a - lr * b, p, g), opt
         return sgd_step
     if optimizer == "adamw":
-        adam = AdamW()
+        adam = AdamW(moment_dtype=moment_dtype)
 
         def adam_step(p, g, opt):
             return adam.step(p, g, opt, lr)
@@ -57,12 +60,13 @@ def make_optimizer_step(optimizer: str, lr: float) -> Callable:
     raise ValueError(f"optimizer={optimizer!r} (want sgd | adamw)")
 
 
-def init_opt_state(optimizer: str, params_like):
+def init_opt_state(optimizer: str, params_like,
+                   moment_dtype: str = "float32"):
     """Optimizer state matching ``params_like`` (full leaves or shards);
     None for stateless SGD."""
     if optimizer == "sgd":
         return None
-    return AdamW().init(params_like)
+    return AdamW(moment_dtype=moment_dtype).init(params_like)
 
 
 def flatten_bucket(leaves: List[Any], idxs: List[int]) -> Any:
@@ -72,7 +76,8 @@ def flatten_bucket(leaves: List[Any], idxs: List[int]) -> Any:
 
 
 def make_zero_bucket_update(plan: MeshPlan, zero: int, optimizer: str,
-                            lr: float, axis: str = "data") -> Callable:
+                            lr: float, axis: str = "data",
+                            moment_dtype: str = "float32") -> Callable:
     """Build the per-step ZeRO-1/2/3 update over ``plan``'s buckets.
 
     Returns ``update(p_buckets, g_buckets, opt, grad_reduce=None) ->
@@ -91,7 +96,7 @@ def make_zero_bucket_update(plan: MeshPlan, zero: int, optimizer: str,
     ``wire="measured"`` (parameters still travel exact)."""
     if zero not in (1, 2, 3):
         raise ValueError(f"zero={zero} (bucket update is for levels 1-3)")
-    opt_step = make_optimizer_step(optimizer, lr)
+    opt_step = make_optimizer_step(optimizer, lr, moment_dtype)
     n_data = plan.mesh.data
     sizes = [plan.bucket_sizes[b] for b in plan.order]
 
@@ -123,18 +128,21 @@ def make_zero_bucket_update(plan: MeshPlan, zero: int, optimizer: str,
 
 
 # --------------------------------------------------------- memory model
-def state_bytes_per_device(plan: MeshPlan, zero: int,
-                           optimizer: str) -> Dict[str, int]:
+def state_bytes_per_device(plan: MeshPlan, zero: int, optimizer: str,
+                           moment_dtype: str = "float32") -> Dict[str, int]:
     """Analytic persistent param+optimizer bytes per device for the mesh
-    (fp32) — the memory math of docs/hybrid.md.  ``hybrid_bench``
+    — the memory math of docs/hybrid.md (fp32 params; moments at
+    ``moment_dtype`` width, 2 B when quantized to bf16).  ``hybrid_bench``
     cross-checks this against the engine's measured state sizes."""
     n_local = plan.n_local_params
     shard = sum(plan.shard_sizes)        # padded 1/D of the local block
     params = shard if zero == 3 else n_local
-    moments = AdamW().moments_per_param if optimizer == "adamw" else 0
+    adam = AdamW(moment_dtype=moment_dtype)
+    moments = adam.moments_per_param if optimizer == "adamw" else 0
+    mb = adam.moment_bytes
     opt = moments * (shard if zero >= 1 else n_local)
-    return {"params": 4 * params, "opt": 4 * opt,
-            "total": 4 * (params + opt)}
+    return {"params": 4 * params, "opt": mb * opt,
+            "total": 4 * params + mb * opt}
 
 
 def wire_bytes_per_device(plan: MeshPlan, zero: int,

@@ -64,8 +64,8 @@ from repro.core.allreduce import TOPOLOGIES
 from repro.core.compression import EF_METHODS, METHODS, Compressor
 from repro.kernels.backend import KERNEL_BACKENDS
 from repro.core.sync import SimSyncEngine, SyncConfig
-from repro.parallel.mesh_plan import (MeshSpec, OPTIMIZERS, parse_suffix,
-                                      suffix_spec)
+from repro.parallel.mesh_plan import (MeshSpec, OPTIMIZERS, PRECISIONS,
+                                      SCHEDULES, parse_suffix, suffix_spec)
 from repro.train.data_parallel import (ARCHS, DEVICE_SYNCS,
                                        DataParallelConfig, DeviceEngine)
 from repro.train.train_loop import train_loop
@@ -156,6 +156,10 @@ class Strategy:
     zero: int = 0                    # ZeRO optimizer-state level 0-3
     optimizer: str = "sgd"           # sgd | adamw
     micro_batches: int = 0           # pipeline micro-batches (0 = auto)
+    schedule: str = "gpipe"          # pipeline schedule: gpipe | 1f1b
+    interleave: int = 0              # 1f1b virtual stages/device (0 = auto)
+    precision: str = "fp32"          # fp32 | bf16 | bf16r (docs/hybrid.md)
+    moments: str = "float32"         # adamw moment storage: float32|bfloat16
     detect: bool = False             # measured straggler detection (bsp)
     # wire accounting / exchange mode (docs/comm.md): "modeled" keeps
     # compression as a per-worker roundtrip with analytic byte accounting
@@ -226,6 +230,31 @@ class Strategy:
                              f"{OPTIMIZERS}")
         if self.micro_batches < 0:
             raise ValueError("micro_batches must be >= 0")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule={self.schedule!r} not in "
+                             f"{SCHEDULES}")
+        if self.schedule == "1f1b" and self.mesh_spec.stage < 2:
+            raise ValueError("schedule='1f1b' needs a pipeline (mesh "
+                             "stage >= 2); an unstaged mesh has no "
+                             "schedule to choose")
+        if self.interleave < 0:
+            raise ValueError("interleave must be >= 0")
+        if self.interleave and self.schedule != "1f1b":
+            # interleaving (virtual stages) is what distinguishes the
+            # 1f1b schedule's bubble; under gpipe it would silently noop
+            raise ValueError("interleave (vK) composes with the 1f1b "
+                             "schedule only")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision={self.precision!r} not in "
+                             f"{PRECISIONS}")
+        if self.moments not in ("float32", "bfloat16"):
+            raise ValueError(f"moments={self.moments!r} (want float32 | "
+                             "bfloat16)")
+        if self.moments != "float32" and self.optimizer != "adamw":
+            # only adamw has EMA moment buffers to quantize — a qmom sgd
+            # spec would silently store nothing in bf16
+            raise ValueError("moments='bfloat16' (qmom) requires "
+                             "optimizer='adamw'")
         if self.zero and self.arch != "ps":
             # ZeRO *is* the sharded-state (parameter-server) architecture;
             # a decentralized-allreduce ZeRO spec would be an oxymoron
@@ -270,9 +299,12 @@ class Strategy:
     @property
     def is_hybrid(self) -> bool:
         """True when the cell needs the hybrid engine: a non-trivial
-        (tensor/stage) mesh, ZeRO sharding, or a stateful optimizer."""
+        (tensor/stage) mesh, ZeRO sharding, a stateful optimizer, or a
+        non-default schedule/precision/moments dimension."""
         return ((self.mesh is not None and not self.mesh.is_trivial)
-                or self.zero > 0 or self.optimizer != "sgd")
+                or self.zero > 0 or self.optimizer != "sgd"
+                or self.schedule != "gpipe" or self.precision != "fp32"
+                or self.moments != "float32")
 
     @property
     def compressor(self) -> Compressor:
@@ -302,7 +334,8 @@ class Strategy:
         if arch == "allreduce" and self.topology != "ring":
             arch = self.topology
         suffix = suffix_spec(self.mesh_spec, self.zero, self.optimizer,
-                             self.micro_batches)
+                             self.micro_batches, self.schedule,
+                             self.interleave, self.precision, self.moments)
         suffix = f":{suffix}" if suffix else ""
         return f"{sync}/{arch}/{comp}@{self.workers}{suffix}"
 
@@ -539,7 +572,9 @@ class DeviceBackend(Engine):
                     topology=s.topology, bucket_mb=s.bucket_mb,
                     order=s.order, micro_batches=s.micro_batches,
                     sync=s.sync, staleness=s.staleness, periods=s.periods,
-                    sma_mu=s.sma_mu, wire=s.wire, seed=s.seed),
+                    sma_mu=s.sma_mu, wire=s.wire, seed=s.seed,
+                    schedule=s.schedule, interleave=s.interleave,
+                    precision=s.precision, moments=s.moments),
                 grad_fn, devices)
         grad_fn = _as_grad_fn(grad_fn)
         return DeviceEngine(

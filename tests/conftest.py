@@ -13,8 +13,8 @@ SRC = os.path.join(REPO, "src")
 
 def run_multidevice(script: str, n_devices: int = 8, timeout: int = 600):
     """Run a python snippet in a subprocess with N virtual host devices."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    from repro.launch.env import subprocess_env
+    env = subprocess_env(n_devices)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     res = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=timeout)

@@ -241,6 +241,58 @@ def test_comm_plane_engine_4dev(multidevice):
         assert marker in out
 
 
+# ------------------------- bf16 reduce precision × wire=measured accounting
+SCRIPT_BF16_WIRE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.train import Strategy
+
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (64, 1))
+def make_batch(t, w):
+    k = jax.random.fold_in(KEY, t * 100 + w)
+    X = jax.random.normal(k, (16, 64))
+    return {"X": X, "y": X @ W_TRUE}
+def grad_fn(params, batch):
+    def loss(p):
+        return jnp.mean((batch["X"] @ p["W"] - batch["y"]) ** 2)
+    return jax.value_and_grad(loss)(params)
+P0 = {"W": jnp.zeros((64, 1)), "b": jnp.zeros((8192,))}
+
+def run(precision, comp="none"):
+    eng = Strategy(sync="bsp", workers=4, lr=0.05, compression=comp,
+                   optimizer="adamw", precision=precision,
+                   backend="device", wire="measured").build(grad_fn)
+    _, hist, _ = eng.run(P0, make_batch, 6)
+    losses = [h["loss"] for h in hist]
+    assert all(np.isfinite(l) for l in losses), (precision, comp)
+    return losses, eng.metrics()["measured_step_tx_bytes"]
+
+# --- none@bf16r: the uncompressed reduce travels in 2-byte words, so the
+# measured grad exchange is exactly half the fp32 cell's ---
+l32, b32 = run("fp32")
+l16, b16 = run("bf16r")
+assert b16 * 2 == b32, (b16, b32)
+# and the loss trajectory holds a loose band around fp32 (bf16 mantissa)
+for a, b in zip(l32, l16):
+    assert abs(a - b) <= 0.25 * abs(a) + 1e-3, (l32, l16)
+print(f"BF16R-HALF-WIRE-OK fp32={b32} bf16r={b16}")
+
+# --- a lossy codec is precision-invariant on the wire: its planes are
+# already 1-bit + fp32 scales, whatever dtype the reduce would have used ---
+_, ob32 = run("fp32", "onebit")
+_, ob16 = run("bf16r", "onebit")
+assert ob16 == ob32, (ob16, ob32)
+assert ob16 < b16, (ob16, b16)
+print("BF16R-CODEC-OK")
+"""
+
+
+def test_bf16_reduce_wire_accounting_4dev(multidevice):
+    out = multidevice(SCRIPT_BF16_WIRE, 4)
+    assert "BF16R-HALF-WIRE-OK" in out
+    assert "BF16R-CODEC-OK" in out
+
+
 # -------------------------------- ISSUE acceptance (subprocess, 8 devices)
 SCRIPT_ACCEPTANCE = r"""
 import numpy as np, jax, jax.numpy as jnp

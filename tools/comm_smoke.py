@@ -20,12 +20,13 @@ schedule — and asserts:
 import os
 import sys
 
-_FLAG = "--xla_force_host_platform_device_count"
-if _FLAG not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=4").strip()
+# virtual devices must be configured before jax import
 sys.path.insert(0, os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.launch.env import ensure_host_devices  # noqa: E402
+
+ensure_host_devices(4)
 
 import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402

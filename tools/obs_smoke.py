@@ -30,12 +30,12 @@ import os
 import sys
 
 # virtual devices must be configured before jax import
-_FLAG = "--xla_force_host_platform_device_count"
-if _FLAG not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=8").strip()
 sys.path.insert(0, os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.launch.env import ensure_host_devices  # noqa: E402
+
+ensure_host_devices(8)
 
 import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
@@ -75,18 +75,20 @@ def traced_train() -> dict:
     return rec.to_chrome()
 
 
-def traced_pipeline() -> dict:
-    """A d2.t2.s2 staged run — the pipeline-schedule spans feed the
-    analyzer's bubble accounting."""
+def traced_pipeline(spec: str = "bsp/ring/none@8:d2.t2.s2",
+                    layers: int = 2) -> dict:
+    """A staged run — the pipeline-schedule spans feed the analyzer's
+    bubble accounting (schedule-aware: each ``pipe`` span stamps its own
+    schedule's analytic bound)."""
     from repro.parallel import make_tiny_transformer
-    params, model = make_tiny_transformer(2, 8, 16, seed=0)
-    strat = Strategy.parse("bsp/ring/none@8:d2.t2.s2", lr=0.05,
-                           bucket_mb=1e-4, backend="device")
+    params, model = make_tiny_transformer(layers, 8, 16, seed=0)
+    strat = Strategy.parse(spec, lr=0.05, bucket_mb=1e-4,
+                           backend="device")
     engine = strat.build(model)
 
     def batch(t, w):
         k = jax.random.fold_in(KEY, 7919 * t + w)
-        x = jax.random.normal(k, (4, 8))
+        x = jax.random.normal(k, (8, 8))
         return {"x": x, "y": x @ jax.random.normal(KEY, (8, 8))}
 
     with tracing() as rec:
@@ -178,6 +180,18 @@ def main() -> int:
         assert pp is not None, "no pipeline spans"
         assert pp["pipes"], pp
         assert pp["rel_err_max"] <= 0.10, pp
+        # schedule-aware: interleaved 1F1B on the same d2.s2 mesh (m=8)
+        # measures a strictly smaller bubble than GPipe, each schedule
+        # within 10% relative of its own stamped analytic bound
+        gp = pipeline_accounting(traced_pipeline(
+            "bsp/ring/none@4:d2.s2.m8", layers=4))
+        fb = pipeline_accounting(traced_pipeline(
+            "bsp/ring/none@4:d2.s2.m8.1f1b", layers=4))
+        assert gp is not None and fb is not None, "missing pipe spans"
+        assert gp["rel_err_max"] <= 0.10, gp
+        assert fb["rel_err_max"] <= 0.10, fb
+        assert fb["measured_bubble_mean"] < gp["measured_bubble_mean"], \
+            (fb["measured_bubble_mean"], gp["measured_bubble_mean"])
         ok = True
     except (AssertionError, ValueError) as e:
         ok = False
